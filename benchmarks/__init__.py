@@ -1,0 +1,1 @@
+"""Paper-figure benchmark harness (one module per table/figure)."""

@@ -1,0 +1,56 @@
+"""Shared helpers for the paper-figure benchmarks.
+
+Every benchmark exposes ``run(quick: bool) -> list[dict]`` returning
+row dicts, and a module-level ``NAME``/``PAPER_REF``. ``benchmarks.run``
+aggregates them into the required ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.serving import (NodeConfig, TraceConfig, build_node, synthesize)
+from repro.serving.metrics import slo_from_lowload
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+# Calibrated operating points (see EXPERIMENTS.md §Calibration):
+# S-LoRA's SLO knee sits at ~9 RPS, Chameleon's at ~12.
+LOAD_LOW, LOAD_MED, LOAD_HIGH = 8.0, 10.0, 12.0
+
+
+def run_system(system: str, rps: float, duration: float = 120.0,
+               seed: int = 1, node_kw: dict | None = None,
+               trace_kw: dict | None = None):
+    cfg = NodeConfig(**(node_kw or {}))
+    sim, adapters, cost = build_node(system, cfg)
+    trace = synthesize(TraceConfig(rps=rps, duration_s=duration, seed=seed,
+                                   **(trace_kw or {})),
+                       list(adapters.values()))
+    metrics = sim.run(trace)
+    return metrics, sim, cost, trace
+
+
+def ttft_slo(node_kw: dict | None = None) -> float:
+    _, adapters, cost = build_node("slora", NodeConfig(**(node_kw or {})))
+    trace = synthesize(TraceConfig(rps=1.0, duration_s=30.0, seed=7),
+                       list(adapters.values()))
+    slo, _ = slo_from_lowload(cost, trace)
+    return slo
+
+
+def save_rows(name: str, rows: list[dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return path
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, time.time() - t0

@@ -1,0 +1,69 @@
+"""Figs. 10/11/12: P99 TTFT, P99 TBT, P50 TTFT vs load; throughput.
+
+Sweeps RPS for S-LoRA, ChameleonNoCache, ChameleonNoSched and full
+Chameleon; derives each system's SLO knee (throughput) and the paper's
+headline claims at high load:
+  paper: −80.7 % P99 TTFT, −48.1 % P50 TTFT, 1.5× throughput.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import LOAD_HIGH, run_system, ttft_slo
+
+NAME = "fig10_latency_load"
+PAPER_REF = "Figures 10, 11, 12"
+
+SYSTEMS = ("slora", "chameleon-nocache", "chameleon-nosched", "chameleon")
+
+
+def run(quick: bool = False):
+    rps_grid = (8.0, 10.0, 11.0, 12.0, 13.0) if quick else \
+        (6.0, 8.0, 9.0, 10.0, 10.5, 11.0, 11.5, 12.0, 13.0, 14.0)
+    duration = 120.0 if quick else 180.0
+    slo = ttft_slo()
+    rows = []
+    for system in SYSTEMS:
+        for rps in rps_grid:
+            m, sim, cost, trace = run_system(system, rps,
+                                             duration=duration)
+            rows.append({
+                "system": system, "rps": rps,
+                "p99_ttft": m.p99_ttft(), "p50_ttft": m.p50_ttft(),
+                "p99_tbt": m.p99_tbt(),
+                "slo": slo, "violates": m.p99_ttft() > slo,
+                "hit_rate": m.cache_stats.get("hit_rate", 0.0),
+            })
+    return rows
+
+
+def knee(rows, system) -> float:
+    """Highest load sustained without P99-TTFT SLO violation."""
+    ok = [r["rps"] for r in rows if r["system"] == system
+          and not r["violates"]]
+    return max(ok) if ok else 0.0
+
+
+def validate(rows) -> dict:
+    k_s, k_c = knee(rows, "slora"), knee(rows, "chameleon")
+    hi = max(r["rps"] for r in rows)
+    at = lambda sys_, f: next(r[f] for r in rows
+                              if r["system"] == sys_ and r["rps"] == hi)
+    p99_red = 1 - at("chameleon", "p99_ttft") / at("slora", "p99_ttft")
+    p50_red = 1 - at("chameleon", "p50_ttft") / at("slora", "p50_ttft")
+    return {
+        "slora_knee_rps": k_s, "chameleon_knee_rps": k_c,
+        "throughput_ratio": round(k_c / max(k_s, 1e-9), 2),
+        "p99_ttft_reduction_at_high": round(p99_red, 3),
+        "p50_ttft_reduction_at_high": round(p50_red, 3),
+        "paper": {"throughput_ratio": 1.5, "p99_reduction": 0.807,
+                  "p50_reduction": 0.481},
+    }
+
+
+if __name__ == "__main__":
+    rows = run(quick=True)
+    for r in rows:
+        print({k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in r.items()})
+    print(validate(rows))

@@ -1,0 +1,55 @@
+"""Fig. 14: caching policies at medium load.
+
+Normalized P99 TTFT per adapter rank for S-LoRA (no cache), LRU,
+FairShare (equal weights) and Chameleon's cost-aware policy.
+Paper: all caches beat no-cache (−18/−22/−26 % overall); cost-aware
+helps large ranks most (−12 % vs FairShare at rank 128).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import LOAD_MED, run_system
+
+NAME = "fig14_cache_policies"
+PAPER_REF = "Figure 14"
+
+SYSTEMS = ("slora", "chameleon-lru", "chameleon-fairshare", "chameleon")
+
+
+def run(quick: bool = False):
+    duration = 60.0 if quick else 180.0
+    rows = []
+    base = None
+    for system in SYSTEMS:
+        m, sim, cost, trace = run_system(system, LOAD_MED,
+                                         duration=duration)
+        per_rank = m.per_rank_p99_ttft()
+        overall = m.p99_ttft()
+        if system == "slora":
+            base = {"overall": overall, **per_rank}
+        for rank, v in per_rank.items():
+            rows.append({"system": system, "rank": rank, "p99_ttft": v,
+                         "normalized": v / base[rank]})
+        rows.append({"system": system, "rank": "all", "p99_ttft": overall,
+                     "normalized": overall / base["overall"],
+                     "hit_rate": m.cache_stats.get("hit_rate", 0.0),
+                     "gb_loaded": m.cache_stats.get("gb_loaded", 0.0)})
+    return rows
+
+
+def validate(rows) -> dict:
+    overall = {r["system"]: r for r in rows if r["rank"] == "all"}
+    red = {s: round(1 - overall[s]["normalized"], 3) for s in SYSTEMS[1:]}
+    return {
+        "p99_reduction_vs_slora": red,
+        "paper": {"chameleon-lru": 0.18, "chameleon-fairshare": 0.22,
+                  "chameleon": 0.26},
+        "cost_aware_best": overall["chameleon"]["p99_ttft"] <=
+            min(overall["chameleon-lru"]["p99_ttft"],
+                overall["chameleon-fairshare"]["p99_ttft"]) * 1.02,
+    }
+
+
+if __name__ == "__main__":
+    print(validate(run(quick=True)))

@@ -1,0 +1,99 @@
+"""Figs. 17/18: scalability over model size and memory capacity.
+
+Llama-7B/13B/30B on A100-80G (Fig. 17: normalized P99 + throughput) and
+Llama-7B under 24/48/80 GB memory configs (Fig. 18). Paper claims:
+Chameleon wins across all sizes (−60 % P99-ish, 1.4–1.9× throughput);
+larger memory ⇒ larger win (more room for adapter caching).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.serving import NodeConfig, build_node, synthesize
+from repro.serving.cost_model import A100_80G, HW_PRESETS, MODEL_PRESETS
+from repro.serving.trace import TraceConfig
+
+from .common import run_system, ttft_slo
+
+NAME = "fig17_scalability"
+PAPER_REF = "Figures 17 and 18"
+
+# Load levels per model size (bigger model = slower node = lower RPS).
+LOADS = {"llama-7b": (8.0, 12.0, 16.0), "llama-13b": (4.0, 6.0, 8.0),
+         "llama-30b": (1.5, 2.5, 3.5)}
+N_ADAPTERS = {"llama-7b": 500, "llama-13b": 100, "llama-30b": 10}
+
+
+def _mem_hw(gb: float):
+    return dataclasses.replace(A100_80G, hbm_gb=gb, name=f"a100-{gb:.0f}g")
+
+
+def run(quick: bool = False):
+    duration = 45.0 if quick else 120.0
+    rows = []
+    # --- Fig 17: model sizes on A100-80G ---
+    for model in ("llama-7b", "llama-13b", "llama-30b"):
+        loads = LOADS[model][:2] if quick else LOADS[model]
+        for level, rps in zip(("low", "med", "high"), loads):
+            out = {}
+            for system in ("slora", "chameleon"):
+                m, *_ = run_system(
+                    system, rps, duration=duration,
+                    node_kw={"hw": "a100-80g", "model": model,
+                             "n_adapters": N_ADAPTERS[model]})
+                out[system] = m
+            rows.append({
+                "figure": "17", "model": model, "load": level, "rps": rps,
+                "p99_norm": out["chameleon"].p99_ttft()
+                    / max(out["slora"].p99_ttft(), 1e-9),
+                "goodput_ratio": out["chameleon"].goodput_tokens_per_s()
+                    / max(out["slora"].goodput_tokens_per_s(), 1e-9),
+            })
+    # --- Fig 18: memory capacities, llama-7b ---
+    import repro.serving.systems as sysmod
+    for gb in (24.0, 48.0, 80.0):
+        hw = _mem_hw(gb)
+        sysmod.HW_PRESETS[hw.name] = hw
+        HW_PRESETS[hw.name] = hw
+        out = {}
+        for system in ("slora", "chameleon"):
+            m, *_ = run_system(system, 10.0, duration=duration,
+                               node_kw={"hw": hw.name, "model": "llama-7b",
+                                        "n_adapters": 500})
+            out[system] = m
+        rows.append({
+            "figure": "18", "hbm_gb": gb,
+            "p99_norm": out["chameleon"].p99_ttft()
+                / max(out["slora"].p99_ttft(), 1e-9),
+            "hit_gain": out["chameleon"].cache_stats["hit_rate"]
+                - out["slora"].cache_stats["hit_rate"],
+        })
+    return rows
+
+
+def validate(rows) -> dict:
+    f17 = [r for r in rows if r["figure"] == "17"]
+    f18 = sorted((r for r in rows if r["figure"] == "18"),
+                 key=lambda r: r["hbm_gb"])
+    wins = sum(1 for r in f17 if r["p99_norm"] < 1.0)
+    return {
+        "chameleon_wins_fraction": round(wins / max(len(f17), 1), 2),
+        "p99_norm_by_model": {
+            m: round(float(np.mean([r["p99_norm"] for r in f17
+                                    if r["model"] == m])), 3)
+            for m in ("llama-7b", "llama-13b", "llama-30b")},
+        "bigger_memory_bigger_win":
+            f18[-1]["p99_norm"] <= f18[0]["p99_norm"] + 0.05,
+        "p99_norm_by_mem": {r["hbm_gb"]: round(r["p99_norm"], 3)
+                            for r in f18},
+    }
+
+
+if __name__ == "__main__":
+    rows = run(quick=True)
+    for r in rows:
+        print({k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in r.items()})
+    print(validate(rows))

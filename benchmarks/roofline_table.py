@@ -1,0 +1,57 @@
+"""§Roofline: the full baseline table from the dry-run artifacts."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.roofline.analysis import analyze_file, whats_the_bottleneck
+
+NAME = "roofline_table"
+PAPER_REF = "EXPERIMENTS.md §Roofline"
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "results",
+                      "dryrun.json")
+
+
+def run(quick: bool = False):
+    if not os.path.exists(DRYRUN):
+        return [{"error": "results/dryrun.json missing — run "
+                          "`python -m repro.launch.dryrun` first"}]
+    rows = []
+    for mesh in ("16x16", "2x16x16"):
+        for r in analyze_file(DRYRUN, mesh=mesh):
+            d = r.table_row()
+            d["next_move"] = whats_the_bottleneck(r)
+            rows.append(d)
+    return rows
+
+
+def validate(rows) -> dict:
+    single = [r for r in rows if r.get("mesh") == "16x16"]
+    doms = {}
+    for r in single:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return {"cells_analyzed_single_pod": len(single),
+            "dominant_term_histogram": doms}
+
+
+def print_table(rows) -> None:
+    hdr = (f"{'arch':<26} {'shape':<12} {'mesh':<8} {'compute_s':>10} "
+           f"{'memory_s':>10} {'collect_s':>10} {'dominant':>10} "
+           f"{'useful':>7} {'mfu_bnd':>8}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if "error" in r:
+            print(r["error"])
+            continue
+        print(f"{r['arch']:<26} {r['shape']:<12} {r['mesh']:<8} "
+              f"{r['compute_s']:>10.4f} {r['memory_s']:>10.4f} "
+              f"{r['collective_s']:>10.4f} {r['dominant']:>10} "
+              f"{r['useful_ratio']:>7.3f} {r['mfu_bound']:>8.4f}")
+
+
+if __name__ == "__main__":
+    rows = run()
+    print_table(rows)
+    print(validate(rows))

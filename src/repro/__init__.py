@@ -1,0 +1,2 @@
+"""repro: Chameleon many-adapter LLM serving framework on JAX/TPU."""
+__version__ = "0.1.0"

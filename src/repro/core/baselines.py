@@ -1,0 +1,128 @@
+"""Baseline schedulers the paper compares against (§5).
+
+- ``FIFOScheduler`` — S-LoRA's policy: strict arrival order, admit while
+  memory fits. With ``cache.enabled = False`` this *is* the S-LoRA
+  system (adapters dropped when their last request completes; queued
+  adapters are asynchronously prefetched by the engine's prefetcher).
+- ``SJFScheduler`` — µServe's speculative shortest-job-first over the
+  predicted output length, with linear aging to mitigate starvation.
+
+Both share Chameleon's memory plumbing (pool + cache manager) so that
+the *only* experimental variable is the policy.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+from .adapter_cache import AdapterCache
+from .lora import AdapterInfo
+from .memory_pool import MemoryPool, PoolError
+from .request import Request, RequestState
+from .scheduler import BaseScheduler
+
+
+class _SingleQueueScheduler(BaseScheduler):
+    def __init__(self, pool: MemoryPool, cache: AdapterCache,
+                 adapters: dict[int, AdapterInfo], predictor,
+                 max_batch_requests: int = 64,
+                 max_predicted_output: int = 4096):
+        self.pool = pool
+        self.cache = cache
+        self.adapters = adapters
+        self.predictor = predictor
+        self.max_batch_requests = max_batch_requests
+        self.max_predicted_output = max_predicted_output
+        self.reqs: deque[Request] = deque()
+
+    def submit(self, req: Request, now: float) -> None:
+        if req.predicted_output <= 0:
+            req.predicted_output = max(1, int(self.predictor.predict(
+                req.input_len, req.adapter_id, req.output_len)))
+        req.predicted_output = min(req.predicted_output,
+                                   self.max_predicted_output)
+        self.reqs.append(req)
+
+    def requeue(self, req: Request, now: float) -> None:
+        self.reqs.appendleft(req)
+
+    def pending_count(self) -> int:
+        return len(self.reqs)
+
+    def queued_adapter_ids(self) -> set[int]:
+        return {r.adapter_id for r in self.reqs}
+
+    def queued_requests_in_order(self) -> list[Request]:
+        return list(self.reqs)
+
+    def _order(self, now: float) -> None:
+        """Hook: reorder self.reqs before admission."""
+
+    def _admit(self, req: Request, now: float) -> bool:
+        need = req.input_len + req.predicted_output
+        ad = self.adapters[req.adapter_id]
+        extra = 0 if self.cache.resident(req.adapter_id) else ad.size_tokens
+        if not self.cache.shrink_for_requests(need + extra, now,
+                                              self.queued_adapter_ids()
+                                              - {req.adapter_id}):
+            return False
+        try:
+            self.cache.acquire(req.adapter_id, now)
+            self.pool.reserve_request(req.req_id, need)
+        except PoolError:
+            return False
+        req.reserved_tokens = need
+        return True
+
+    def schedule(self, now: float, running: list[Request]) -> list[Request]:
+        self._order(now)
+        batch: list[Request] = []
+        slots = self.max_batch_requests - len(running)
+        while self.reqs and len(batch) < slots:
+            req = self.reqs[0]
+            if not self._admit(req, now):
+                break   # head-of-line blocking, by design
+            self.reqs.popleft()
+            req.state = RequestState.RUNNING
+            if req.first_scheduled_time is None:
+                req.first_scheduled_time = now
+            batch.append(req)
+        return batch
+
+    def on_finish(self, req: Request, now: float) -> None:
+        self.pool.release_request(req.req_id)
+        self.cache.release(req.adapter_id, now)
+
+    def on_squash(self, req: Request, now: float) -> None:
+        self.pool.release_request(req.req_id)
+        self.cache.release(req.adapter_id, now)
+        req.reset_for_requeue()
+        self.requeue(req, now)
+
+
+class FIFOScheduler(_SingleQueueScheduler):
+    """S-LoRA: arrival order."""
+
+    name = "fifo"
+
+
+class SJFScheduler(_SingleQueueScheduler):
+    """µServe: speculative SJF on predicted output length, with aging.
+
+    priority = predicted_output − aging_rate · wait_seconds
+    (lower = scheduled first). ``aging_rate`` is tokens/second of
+    priority credit; the paper observes that even with aging, SJF starves
+    long requests at high load — our Fig. 13 reproduction shows the same.
+    """
+
+    name = "sjf"
+
+    def __init__(self, *args, aging_rate: float = 1.0, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.aging_rate = aging_rate
+
+    def _order(self, now: float) -> None:
+        self.reqs = deque(sorted(
+            self.reqs,
+            key=lambda r: (r.predicted_output
+                           - self.aging_rate * (now - r.arrival_time))))

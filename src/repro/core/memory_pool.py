@@ -1,0 +1,105 @@
+"""Unified device-memory pool in token units (TPU adaptation, DESIGN §2).
+
+The paper reuses "idle GPU memory" for the adapter cache. On TPU, XLA
+owns HBM, so idleness must be made explicit: the serving engine
+pre-allocates one pool and accounts *everything* in token units:
+
+    1 token  =  bytes of one KV-cache token slot
+               (2 · n_kv_heads · head_dim · n_layers · dtype_bytes)
+
+- Running requests reserve input+output+KV tokens.
+- Resident adapters occupy ceil(adapter_bytes / token_bytes) tokens.
+- free = capacity − requests − adapters. The Chameleon cache *is* the
+  adapter region; "dynamic cache resizing" = this watermark moving.
+
+The pool is deliberately policy-free: eviction choices live in
+adapter_cache.py, admission choices in scheduler.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+class PoolError(RuntimeError):
+    pass
+
+
+@dataclass
+class MemoryPool:
+    capacity_tokens: int
+    used_requests: int = 0
+    used_adapters: int = 0
+    _request_holds: dict = field(default_factory=dict)   # req_id -> tokens
+    _adapter_holds: dict = field(default_factory=dict)   # adapter_id -> tokens
+
+    # ------------------------------------------------------------------
+    @property
+    def free_tokens(self) -> int:
+        return self.capacity_tokens - self.used_requests - self.used_adapters
+
+    @property
+    def cache_tokens(self) -> int:
+        """Current adapter-cache capacity = resident adapters + free HBM."""
+        return self.capacity_tokens - self.used_requests
+
+    def request_headroom(self) -> int:
+        """Tokens available to requests without evicting any adapter."""
+        return self.free_tokens
+
+    # Requests ----------------------------------------------------------
+    def reserve_request(self, req_id: int, tokens: int) -> None:
+        if tokens < 0:
+            raise PoolError("negative reservation")
+        if tokens > self.free_tokens:
+            raise PoolError(
+                f"reserve_request({tokens}) exceeds free {self.free_tokens}")
+        self._request_holds[req_id] = self._request_holds.get(req_id, 0) + tokens
+        self.used_requests += tokens
+
+    def grow_request(self, req_id: int, tokens: int) -> None:
+        self.reserve_request(req_id, tokens)
+
+    def release_request(self, req_id: int) -> int:
+        tokens = self._request_holds.pop(req_id, 0)
+        self.used_requests -= tokens
+        return tokens
+
+    # Adapters ----------------------------------------------------------
+    def hold_adapter(self, adapter_id: int, tokens: int) -> None:
+        if adapter_id in self._adapter_holds:
+            return
+        if tokens > self.free_tokens:
+            raise PoolError(
+                f"hold_adapter({tokens}) exceeds free {self.free_tokens}")
+        self._adapter_holds[adapter_id] = tokens
+        self.used_adapters += tokens
+
+    def drop_adapter(self, adapter_id: int) -> int:
+        tokens = self._adapter_holds.pop(adapter_id, 0)
+        self.used_adapters -= tokens
+        return tokens
+
+    def adapter_resident(self, adapter_id: int) -> bool:
+        return adapter_id in self._adapter_holds
+
+    # Introspection -------------------------------------------------------
+    def check_invariants(self) -> None:
+        assert self.used_requests == sum(self._request_holds.values())
+        assert self.used_adapters == sum(self._adapter_holds.values())
+        assert 0 <= self.used_requests
+        assert 0 <= self.used_adapters
+        assert self.used_requests + self.used_adapters <= self.capacity_tokens
+
+    def snapshot(self) -> dict:
+        return {
+            "capacity": self.capacity_tokens,
+            "requests": self.used_requests,
+            "adapters": self.used_adapters,
+            "free": self.free_tokens,
+        }
+
+
+def kv_token_bytes(n_layers: int, n_kv_heads: int, head_dim: int,
+                   dtype_bytes: int = 2) -> int:
+    """Bytes of one token's KV across all layers (the pool's currency)."""
+    return 2 * n_layers * n_kv_heads * head_dim * dtype_bytes

@@ -1,0 +1,97 @@
+"""Adapter prefetching (paper §4.1 'Prefetching').
+
+Two tiers:
+
+1. ``QueuedRequestPrefetcher`` (always on, S-LoRA-style): walk the wait
+   queues in priority order and prefetch missing adapters into the cache
+   while free memory allows, without evicting anything useful.
+2. ``HistogramPrefetcher`` (optional, Fig. 15): histogram-based load
+   prediction in the style of Serverless-in-the-Wild [46] — per adapter,
+   a histogram over inter-arrival times predicts the next arrival; the
+   prefetcher warms adapters whose predicted next use falls within the
+   horizon, most-imminent first.
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+
+import numpy as np
+
+
+class QueuedRequestPrefetcher:
+    def __init__(self, cache, max_per_round: int = 4):
+        self.cache = cache
+        self.max_per_round = max_per_round
+
+    def run(self, queued_requests, now: float) -> list[int]:
+        """Prefetch missing adapters of queued requests. Returns ids loaded."""
+        loaded = []
+        seen = set()
+        for req in queued_requests:
+            if len(loaded) >= self.max_per_round:
+                break
+            aid = req.adapter_id
+            if aid in seen or self.cache.resident(aid):
+                continue
+            seen.add(aid)
+            info = self.cache.catalog[aid]
+            # Only use genuinely free memory: prefetching must never
+            # evict (that would fight the cost-aware policy).
+            if info.size_tokens <= self.cache.pool.free_tokens:
+                if self.cache.prefetch(aid, now):
+                    loaded.append(aid)
+        return loaded
+
+
+class HistogramPrefetcher:
+    """Predictive prefetch from per-adapter inter-arrival histograms.
+
+    Buckets are logarithmic (powers of two seconds). Prediction: the
+    modal inter-arrival bucket's midpoint after the adapter's last
+    arrival. Accuracy is high for the paper's power-law/uniform workload
+    (they report >95 %); bursty adapters predict "soon" and stay warm.
+    """
+
+    def __init__(self, cache, horizon: float = 2.0, max_history: int = 64,
+                 max_per_round: int = 2):
+        self.cache = cache
+        self.horizon = horizon
+        self.max_per_round = max_per_round
+        self._last_arrival: dict[int, float] = {}
+        self._inter: dict[int, deque] = defaultdict(
+            lambda: deque(maxlen=max_history))
+
+    def observe_arrival(self, adapter_id: int, now: float) -> None:
+        last = self._last_arrival.get(adapter_id)
+        if last is not None:
+            self._inter[adapter_id].append(max(1e-3, now - last))
+        self._last_arrival[adapter_id] = now
+
+    def _predict_next(self, adapter_id: int) -> float | None:
+        hist = self._inter.get(adapter_id)
+        last = self._last_arrival.get(adapter_id)
+        if not hist or last is None:
+            return None
+        buckets = defaultdict(int)
+        for dt in hist:
+            buckets[int(np.ceil(np.log2(dt)))] += 1
+        mode = max(buckets.items(), key=lambda kv: kv[1])[0]
+        midpoint = (2.0 ** (mode - 1) + 2.0 ** mode) / 2 if mode > -10 else 0.0
+        return last + midpoint
+
+    def run(self, now: float) -> list[int]:
+        cands = []
+        for aid in self._last_arrival:
+            if self.cache.resident(aid):
+                continue
+            t = self._predict_next(aid)
+            if t is not None and now <= t <= now + self.horizon:
+                cands.append((t, aid))
+        cands.sort()
+        loaded = []
+        for _, aid in cands[: self.max_per_round]:
+            info = self.cache.catalog[aid]
+            if info.size_tokens <= self.cache.pool.free_tokens:
+                if self.cache.prefetch(aid, now):
+                    loaded.append(aid)
+        return loaded

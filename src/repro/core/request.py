@@ -1,0 +1,96 @@
+"""Request lifecycle for many-adapter LLM serving.
+
+A request arrives with a known input length, an (unknown at admission)
+true output length, and the id of the LoRA adapter it targets. The
+scheduler sees only the *predicted* output length. All timestamps are
+floats in seconds on an externally-supplied clock so that the same code
+drives both the real engine and the discrete-event simulator.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+_req_counter = itertools.count()
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"       # in the continuous batch (prefill or decode)
+    FINISHED = "finished"
+    SQUASHED = "squashed"     # bypasser that exceeded its predicted length
+
+
+@dataclass
+class Request:
+    """One inference request."""
+
+    input_len: int
+    output_len: int                 # ground truth (revealed token by token)
+    adapter_id: int
+    arrival_time: float = 0.0
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+
+    # Filled by the predictor at admission.
+    predicted_output: int = 0
+
+    # Scheduling metadata.
+    wrs: float = 0.0                # weighted request size
+    queue_idx: int = -1
+    charges: list = field(default_factory=list)   # [(queue_idx, tokens)] quota charges
+    reserved_tokens: int = 0                      # memory-pool reservation
+    bypassed: bool = False                        # admitted via the bypass lane
+    squash_count: int = 0
+
+    # Progress.
+    state: RequestState = RequestState.QUEUED
+    generated: int = 0              # decode tokens emitted so far
+
+    # Timestamps (seconds).
+    first_scheduled_time: Optional[float] = None
+    first_token_time: Optional[float] = None      # TTFT reference point
+    finish_time: Optional[float] = None
+    adapter_load_wait: float = 0.0  # time spent stalled on adapter loading
+
+    # ------------------------------------------------------------------
+    @property
+    def total_true_tokens(self) -> int:
+        return self.input_len + self.output_len
+
+    def predicted_total_tokens(self) -> int:
+        return self.input_len + self.predicted_output
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.output_len
+
+    def exceeded_prediction(self) -> bool:
+        """True when the request ran past its predicted decode length."""
+        return self.generated > self.predicted_output
+
+    # Latency metrics -----------------------------------------------------
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+    def e2e(self) -> Optional[float]:
+        if self.finish_time is None:
+            return None
+        return self.finish_time - self.arrival_time
+
+    def reset_for_requeue(self) -> None:
+        """Squash: roll progress back so the request re-executes fully."""
+        self.generated = 0
+        self.state = RequestState.QUEUED
+        self.charges = []
+        self.reserved_tokens = 0
+        self.bypassed = False
+        self.squash_count += 1
+        # TTFT is *not* reset: the user saw nothing yet on squash (the
+        # first token is only surfaced once prefill re-runs), so keeping
+        # the worst-case timestamps is the honest accounting. We clear
+        # first_token_time because the original token was discarded.
+        self.first_token_time = None

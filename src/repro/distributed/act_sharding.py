@@ -1,0 +1,148 @@
+"""Activation sharding constraints (GSPMD propagation anchors).
+
+Sharding propagation through scan-over-layers + remat reliably loses
+the batch sharding of activations (the recompute path resolves to
+replicated), which silently turns a 16-way batch-parallel program into
+a replicated one. The launcher/dry-run installs the mesh's batch axes
+here; the model code calls ``constrain_*`` at layer boundaries, which
+is a no-op when nothing is installed (tests, single-device engine).
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: tuple | None = None
+_MODEL_AXIS: str | None = None
+_EXPERT_AXIS: str | None = None
+_MODEL_SIZE: int = 1
+_SEQ_SHARD: bool = False
+_MOE_TOKEN_PARALLEL: bool = False
+_MESH = None
+
+
+@contextlib.contextmanager
+def activation_sharding(batch_axes: tuple, model_axis: str = "model",
+                        expert_axis: str = "data", model_size: int = 1,
+                        seq_shard_boundary: bool = False,
+                        moe_token_parallel: bool = False,
+                        mesh=None):
+    """``seq_shard_boundary``: shard the inter-layer residual stream's
+    sequence dim over the model axis (Megatron-style sequence
+    parallelism). This is what bounds remat memory: the saved per-layer
+    carries shrink by the TP degree (25 GB -> 1.6 GB per chip for a
+    14B model at 64k tokens/chip); XLA re-gathers S where attention/MLP
+    need it."""
+    global _BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS, _MODEL_SIZE, \
+        _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH
+    prev = (_BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS, _MODEL_SIZE,
+            _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH)
+    _BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS = (batch_axes, model_axis,
+                                              expert_axis)
+    _MODEL_SIZE, _SEQ_SHARD = model_size, seq_shard_boundary
+    _MOE_TOKEN_PARALLEL = moe_token_parallel
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        (_BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS, _MODEL_SIZE,
+         _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH) = prev
+
+
+def moe_a2a_mesh():
+    """(mesh, expert_axis) when the shard_map a2a MoE should be used
+    (inference under an installed mesh), else None."""
+    if _MOE_TOKEN_PARALLEL and _MESH is not None:
+        return _MESH, _EXPERT_AXIS
+    return None
+
+
+def _wsc(x, spec):
+    if _BATCH_AXES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_btd(x):
+    """(B, S, D) activations: batch over data axes."""
+    return _wsc(x, P(_BATCH_AXES, None, None))
+
+
+def constrain_boundary(x):
+    """Inter-layer residual (B, S, D): batch over data; sequence over
+    the model axis when sequence-parallel boundaries are enabled."""
+    if (_SEQ_SHARD and x.ndim == 3 and _MODEL_SIZE > 1
+            and x.shape[1] % _MODEL_SIZE == 0):
+        return _wsc(x, P(_BATCH_AXES, _MODEL_AXIS, None))
+    return _wsc(x, P(_BATCH_AXES, None, None))
+
+
+def constrain_bd(x):
+    """(B, D) decode activations."""
+    return _wsc(x, P(_BATCH_AXES, None))
+
+
+def constrain_logits(x):
+    """(B, S, V): batch over data, vocab over model."""
+    return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS))
+
+
+def constrain_ssm_channels(x):
+    """(B, S, C) SSM activations: channels over model, S *full* — the
+    time recurrence is sequential in S, so sequence sharding inside the
+    mixer forces pathological resharding (observed: 48 GB/layer of
+    collectives on falcon train before this anchor)."""
+    return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS))
+
+
+def constrain_ssm_bthp(x):
+    """SSM activations (B, T, H, P): heads over the model axis."""
+    return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS, None))
+
+
+def constrain_ssm_bth(x):
+    """(B, T, H) per-head scalars: heads over the model axis."""
+    return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS))
+
+
+def constrain_moe_groups(x):
+    """Group-major MoE tensors (G, ...): groups follow batch sharding
+    (the (B,S)->(G,Tg) reshape is layout-compatible, but GSPMD tends to
+    replicate through it without an anchor). Skipped under sequence-
+    parallel boundaries: there S carries the model-axis sharding and a
+    batch-only anchor would force an S all-gather per layer."""
+    if _SEQ_SHARD:
+        return x
+    return _wsc(x, P(_BATCH_AXES, *([None] * (x.ndim - 1))))
+
+
+def constrain_moe_local(x):
+    """Pre-all-to-all bucket tensor (G, E, C, D): still group-sharded
+    (local to each data shard). Forcing this anchor *before* the
+    expert-sharded anchor turns the reshard into a clean all-to-all —
+    fused into the dispatch einsum, GSPMD falls back to all-gathering
+    operands (measured 14.9 GB/layer vs ~0.5 GB for the a2a)."""
+    return _wsc(x, P(_BATCH_AXES, None, None, None))
+
+
+def constrain_expert_ecd(x):
+    """MoE dispatch buckets (G, E, C, D): experts over the expert axis
+    (the group dim gives up its batch sharding here — this reshard is
+    the MoE all-to-all). In token-parallel mode (inference) the bucket
+    dim C also shards over the model axis — each chip runs its experts
+    on 1/TP of their tokens with *unsharded* expert FFN weights, so no
+    down-projection psum exists at all (it was 10 GB wire/layer on
+    qwen3-moe prefill)."""
+    if _MOE_TOKEN_PARALLEL:
+        return _wsc(x, P(None, _EXPERT_AXIS, _MODEL_AXIS, None))
+    return _wsc(x, P(None, _EXPERT_AXIS, None, None))
+
+
+def constrain_expert_ecf(x):
+    """MoE hidden (G, E, C, F): experts over data; hidden over model
+    (TP mode) or tokens over model (token-parallel inference)."""
+    if _MOE_TOKEN_PARALLEL:
+        return _wsc(x, P(None, _EXPERT_AXIS, _MODEL_AXIS, None))
+    return _wsc(x, P(None, _EXPERT_AXIS, None, _MODEL_AXIS))

@@ -1,0 +1,234 @@
+"""Sharding policy: parameter/state paths → PartitionSpecs.
+
+One rule table serves every (family × step-kind). Axis conventions
+(DESIGN §4):
+
+- ``model``  — tensor parallelism: attention heads / FFN hidden /
+               expert-FFN hidden / vocab. Non-divisible dims (40 heads
+               over 16) compile via GSPMD padding; the §Perf log
+               replaces padding with better splits where it matters.
+- ``data``   — batch parallelism; for *training* also FSDP (params +
+               AdamW moments sharded over data — ZeRO-3 style); for MoE
+               the expert dimension (128 experts / 16 = 8 per chip).
+- ``pod``    — second-level data axis (multi-pod): batch + FSDP.
+
+Inference shards weights over "model" only (plus experts over "data")
+— weights must be resident, not gathered per step; training adds FSDP
+axes since the weight all-gather amortises over a 4096-token step.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.base import Family, ModelConfig
+
+
+def _axes(mesh: Mesh):
+    names = mesh.axis_names
+    pod = ("pod",) if "pod" in names else ()
+    return pod, "data", "model"
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Drop axes that do not divide their dimension.
+
+    pjit *input* shardings require exact divisibility (GSPMD padding
+    only applies inside the computation), so every spec passes through
+    this fitter. Tuples are trimmed left-to-right: ("pod","data") on a
+    dim of size 2 keeps ("pod",).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for a in axes:
+            sz = _axis_size(mesh, a)
+            if dim % (prod * sz) == 0:
+                kept.append(a)
+                prod *= sz
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh: Mesh,
+               kind: str) -> P:
+    """PartitionSpec for one parameter. ``kind``: train|prefill|decode."""
+    pod, data, model = _axes(mesh)
+    train = kind == "train"
+    # FSDP axes used only in training.
+    fsdp = (pod + (data,)) if train else ()
+    fsdp1 = fsdp if train else None     # spec entry helper
+
+    leaf = path.split("/")[-1]
+    stacked = shape[0] == cfg.n_layers and len(shape) > 1 \
+        or path.startswith(("layers/", "moe/", "dense_mlp/", "enc/",
+                            "dec/"))
+
+    def sp(*entries):
+        # Strip trailing Nones.
+        out = list(entries)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    # ---- embeddings / head -------------------------------------------------
+    if path == "embed/tok":                      # (V, D)
+        return sp(model, fsdp if fsdp else None)
+    if path == "lm_head":                        # (D, V)
+        return sp(fsdp if fsdp else None, model)
+    if leaf in ("final_norm", "enc_final_norm"):
+        return P()
+    if leaf in ("enc_pos", "dec_pos"):
+        return P()
+
+    # Layer-stacked tensors: first axis is the layer stack (replicated).
+    L = None  # placeholder for the stacked layer axis
+
+    # ---- MoE ---------------------------------------------------------------
+    if path.startswith("moe/"):
+        if leaf == "router":                     # (nm, D, E)
+            return sp(L, fsdp if fsdp else None, None)
+        if leaf == "norm":
+            return P()
+        if leaf in ("w_gate", "w_up"):           # (nm, E, D, Fe)
+            if not train:
+                # Token-parallel inference: experts over data, FFN
+                # unsharded (see act_sharding.constrain_expert_ecd).
+                return sp(L, data, None, None)
+            return sp(L, data, fsdp and pod or None, model)
+        if leaf == "w_down":                     # (nm, E, Fe, D)
+            if not train:
+                return sp(L, data, None, None)
+            return sp(L, data, model, fsdp and pod or None)
+        if leaf in ("shared_gate", "shared_up"):  # (nm, D, F)
+            return sp(L, fsdp if fsdp else None, model)
+        if leaf == "shared_down":                # (nm, F, D)
+            return sp(L, model, fsdp if fsdp else None)
+
+    # ---- attention ---------------------------------------------------------
+    if leaf == "q":                              # (..., D, q_dim)
+        return sp(*( [L] if stacked else [] ),
+                  fsdp if fsdp else None, model)
+    if leaf in ("k", "v"):                       # (..., D, kv_dim)
+        return sp(*( [L] if stacked else [] ),
+                  fsdp if fsdp else None, model)
+    if leaf == "o":                              # (..., q_dim, D)
+        return sp(*( [L] if stacked else [] ),
+                  model, fsdp if fsdp else None)
+    if leaf.endswith("_bias"):
+        return P()
+    if leaf.endswith("norm") or "norm" in leaf:
+        return P()
+
+    # ---- dense MLP ---------------------------------------------------------
+    if leaf in ("gate", "up"):                   # (..., D, F)
+        return sp(*( [L] if stacked else [] ),
+                  fsdp if fsdp else None, model)
+    if leaf == "down":                           # (..., F, D)
+        return sp(*( [L] if stacked else [] ),
+                  model, fsdp if fsdp else None)
+
+    # ---- SSM ---------------------------------------------------------------
+    if leaf == "in_proj":                        # (L, D, E*)
+        return sp(L, fsdp if fsdp else None, model)
+    if leaf == "out_proj":                       # (L, Di, D)
+        return sp(L, model, fsdp if fsdp else None)
+    if leaf in ("conv_w",):                      # (L, K, conv_dim)
+        return sp(L, None, model)
+    if leaf in ("conv_b",):                      # (L, conv_dim)
+        return sp(L, model)
+    if leaf == "x_proj":                         # (L, Di, dt+2N)
+        return sp(L, model, None)
+    if leaf == "dt_proj":                        # (L, dt_rank, Di)
+        return sp(L, None, model)
+    if leaf in ("dt_bias", "A_log", "ssm_D"):    # (L, Di|H[,N])
+        return sp(L, model) if len(shape) >= 2 else P()
+
+    return P()
+
+
+def batch_spec(kind: str, mesh: Mesh) -> P:
+    pod, data, model = _axes(mesh)
+    return P(pod + (data,))
+
+
+def param_shardings(cfg: ModelConfig, params_or_shapes: dict, mesh: Mesh,
+                    kind: str) -> dict:
+    out = {}
+    for path, v in params_or_shapes.items():
+        shape = v if isinstance(v, tuple) else v.shape
+        spec = fit_spec(shape, param_spec(path, shape, cfg, mesh, kind),
+                        mesh)
+        out[path] = NamedSharding(mesh, spec)
+    return out
+
+
+def opt_shardings(param_sh: dict, mesh: Mesh) -> dict:
+    """AdamW moments follow their parameter's sharding (ZeRO-ish: the
+    params are already FSDP-sharded in training, so moments are too)."""
+    out = {"step": NamedSharding(mesh, P())}
+    for path, sh in param_sh.items():
+        out[f"m/{path}"] = sh
+        out[f"v/{path}"] = sh
+    return out
+
+
+# ------------------------------------------------------------- activations
+def kv_cache_spec(mesh: Mesh, shape: tuple) -> P:
+    """(L, B, S, Kh, Dh): batch over data axes; kv heads over model
+    when divisible, else *sequence*-sharded KV (each chip holds S/tp of
+    every head — the right layout for MQA/GQA with few kv heads)."""
+    pod, data, model = _axes(mesh)
+    L, B, S, Kh, Dh = shape
+    tp = _axis_size(mesh, model)
+    if Kh % tp == 0:
+        spec = P(None, pod + (data,), None, model)
+    elif S % tp == 0:
+        spec = P(None, pod + (data,), model, None)
+    else:
+        spec = P(None, pod + (data,))
+    return fit_spec(shape, spec, mesh)
+
+
+def ssm_state_spec(mesh: Mesh, shape: tuple) -> P:
+    """(L, B, Di, N): batch over data, d_inner over model."""
+    pod, data, model = _axes(mesh)
+    return fit_spec(shape, P(None, pod + (data,), model), mesh)
+
+
+def conv_state_spec(mesh: Mesh, shape: tuple) -> P:
+    """(L, B, K-1, C): batch over data, channels over model."""
+    pod, data, model = _axes(mesh)
+    return fit_spec(shape, P(None, pod + (data,), None, model), mesh)
+
+
+def lora_spec(proj: str, which: str, mesh: Mesh) -> P:
+    """LoRA slot buffers: A (L, slots, din, r) replicated on din/r;
+    B (L, slots, r, dout) with dout over model (matches the projection
+    output sharding so the delta adds without a reshard)."""
+    pod, data, model = _axes(mesh)
+    if which == "a":
+        return P(None, None, None, None)
+    if proj == "o":
+        return P(None, None, None, None)   # o-delta output is D (fsdp-free)
+    return P(None, None, None, model)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the serving hot spots + jnp oracles.
+
+bgmv  — decode-time batched-gather LoRA (Punica/S-LoRA BGMV, TPU-native)
+sgmv  — prefill-time segmented LoRA matmul
+paged_attention — decode attention over the paged KV pool
+"""
+from .ops import lora_bgmv, lora_sgmv, paged_attention
+from . import ref

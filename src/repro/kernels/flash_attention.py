@@ -1,0 +1,108 @@
+"""flash_attention — prefill attention, online softmax (Pallas TPU).
+
+Classic FlashAttention blocking adapted to TPU: grid (B, H, n_q_blocks,
+n_kv_blocks) with the KV axis iterated sequentially per (q-block); the
+running (m, l, acc) state lives in VMEM scratch across KV steps (TPU
+grids execute the last axis in order — the role CUDA's per-CTA loop
+plays). GQA maps query head h to kv head h // G in the BlockSpec
+index_map, so KV streams once per group without duplication.
+
+Causal masking is positional (block-level skipping is a §Perf
+refinement). Blocks: q (Qb, dh), k/v (Kb, dh) — Qb = Kb = 128 keeps
+VMEM ≈ 200 kB and the MXU shapes 128-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  q_block: int, kv_block: int, causal: bool, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (Qb, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (Kb, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (Qb, Kb)
+    if causal:
+        qpos = qi * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0)
+        kpos = ki * kv_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block",
+                                             "kv_block", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, q_block: int = 128,
+                    kv_block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, dh); k/v: (B, S, Kh, dh) -> (B, S, H, dh).
+
+    S must divide by the block sizes (pad at the caller; ops.py wrapper
+    handles ragged shapes)."""
+    B, S, H, dh = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qt = q.transpose(0, 2, 1, 3)      # (B, H, S, dh)
+    kt = k.transpose(0, 2, 1, 3)      # (B, Kh, S, dh)
+    vt = v.transpose(0, 2, 1, 3)
+    assert S % q_block == 0 and S % kv_block == 0
+    grid = (B, H, S // q_block, S // kv_block)
+
+    kernel = functools.partial(_flash_kernel, q_block=q_block,
+                               kv_block=kv_block, causal=causal,
+                               scale=dh ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, dh),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, kv_block, dh),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+            pl.BlockSpec((1, 1, kv_block, dh),
+                         lambda b, h, qi, ki: (b, h // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, dh), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+            pltpu.VMEM((q_block, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,87 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``use_kernel`` resolution: on TPU backends the Pallas path runs
+natively; elsewhere (this CPU container) it runs in interpret mode when
+``interpret_ok`` — tests force that; the serving engine on CPU prefers
+the jnp reference path for speed. Wrappers also handle padding to the
+kernels' tile-alignment requirements so callers stay shape-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bgmv import bgmv as _bgmv_pallas
+from .paged_attention import paged_attention as _paged_pallas
+from .sgmv import pack_segments, sgmv as _sgmv_pallas
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(a, axis, mult):
+    size = a.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return a, size
+    width = [(0, 0)] * a.ndim
+    width[axis] = (0, pad)
+    return jnp.pad(a, width), size
+
+
+def lora_bgmv(x, A, B, idx, *, prefer_kernel: bool | None = None,
+              interpret: bool | None = None):
+    """Decode LoRA delta. x: (Bt, din) -> (Bt, dout)."""
+    use_kernel = on_tpu() if prefer_kernel is None else prefer_kernel
+    if not use_kernel:
+        return ref.bgmv_ref(x, A, B, idx)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    Bp, dout0 = B, B.shape[-1]
+    Bp, _ = _pad_axis(B, 2, 128)
+    y = _bgmv_pallas(x, A, Bp, idx, interpret=interpret)
+    return y[:, :dout0]
+
+
+def lora_sgmv(x, A, B, seq_lens, adapter_slots, *, tile: int = 128,
+              prefer_kernel: bool | None = None,
+              interpret: bool | None = None):
+    """Prefill LoRA delta over concatenated sequences.
+
+    x: (T, din) tokens concatenated per request (seq_lens[i] each),
+    adapter_slots[i] the adapter of request i. Returns (T, dout).
+    """
+    use_kernel = on_tpu() if prefer_kernel is None else prefer_kernel
+    perm, tile_slot, padded_T = pack_segments(seq_lens, adapter_slots,
+                                              tile)
+    perm_j = jnp.asarray(perm)
+    gathered = jnp.where(perm_j[:, None] >= 0,
+                         x[jnp.maximum(perm_j, 0)], 0).astype(x.dtype)
+    if not use_kernel:
+        y = ref.sgmv_ref(gathered, A, B, jnp.asarray(tile_slot), tile)
+    else:
+        interpret = (not on_tpu()) if interpret is None else interpret
+        Bp, dout0 = _pad_axis(B, 2, 128)
+        y = _sgmv_pallas(gathered, A, Bp, jnp.asarray(tile_slot),
+                         tile=tile, interpret=interpret)[:, :dout0]
+    # Scatter back to original token order.
+    out = jnp.zeros((x.shape[0], y.shape[-1]), y.dtype)
+    valid = perm_j >= 0
+    return out.at[jnp.maximum(perm_j, 0)].add(
+        jnp.where(valid[:, None], y, 0))
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    prefer_kernel: bool | None = None,
+                    interpret: bool | None = None):
+    """Decode attention over paged KV; see paged_attention.py."""
+    use_kernel = on_tpu() if prefer_kernel is None else prefer_kernel
+    if not use_kernel:
+        return ref.paged_attention_ref(q, k_pages, v_pages, page_table,
+                                       lengths)
+    interpret = (not on_tpu()) if interpret is None else interpret
+    return _paged_pallas(q, k_pages, v_pages, page_table, lengths,
+                         interpret=interpret)

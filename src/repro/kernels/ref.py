@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel in this package must match its oracle here to float
+tolerance across the shape/dtype sweep in tests/test_kernels_*.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bgmv_ref(x: jax.Array, A: jax.Array, B: jax.Array,
+             idx: jax.Array) -> jax.Array:
+    """Batched-gather LoRA: y[b] = x[b] @ A[idx[b]] @ B[idx[b]].
+
+    x: (Bt, din); A: (n_slots, din, r); B: (n_slots, r, dout); idx: (Bt,).
+    """
+    A_sel = jnp.take(A, idx, axis=0)
+    B_sel = jnp.take(B, idx, axis=0)
+    t = jnp.einsum("bd,bdr->br", x, A_sel,
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("br,bro->bo", t.astype(x.dtype), B_sel,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def sgmv_ref(x: jax.Array, A: jax.Array, B: jax.Array,
+             tile_slot: jax.Array, tile: int) -> jax.Array:
+    """Segmented LoRA: tile t of ``tile`` tokens uses adapter tile_slot[t].
+
+    x: (T, din) with T % tile == 0, tokens pre-grouped so that each tile
+    maps to exactly one adapter; tile_slot: (T/tile,).
+    """
+    T, din = x.shape
+    n_tiles = T // tile
+    xt = x.reshape(n_tiles, tile, din)
+    A_sel = jnp.take(A, tile_slot, axis=0)          # (n_tiles, din, r)
+    B_sel = jnp.take(B, tile_slot, axis=0)
+    t = jnp.einsum("ntd,ndr->ntr", xt, A_sel,
+                   preferred_element_type=jnp.float32)
+    y = jnp.einsum("ntr,nro->nto", t.astype(x.dtype), B_sel,
+                   preferred_element_type=jnp.float32)
+    return y.reshape(T, -1).astype(x.dtype)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, page_table: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Decode attention over paged KV.
+
+    q: (B, Kh, G, dh) — grouped queries; k_pages/v_pages:
+    (n_pages, page, Kh, dh); page_table: (B, pages_per_seq);
+    lengths: (B,) valid tokens. Returns (B, Kh, G, dh).
+    """
+    B, Kh, G, dh = q.shape
+    n_pages, page, _, _ = k_pages.shape
+    P = page_table.shape[1]
+    # Gather each sequence's pages: (B, P, page, Kh, dh).
+    k = jnp.take(k_pages, page_table, axis=0)
+    v = jnp.take(v_pages, page_table, axis=0)
+    k = k.transpose(0, 3, 1, 2, 4).reshape(B, Kh, P * page, dh)
+    v = v.transpose(0, 3, 1, 2, 4).reshape(B, Kh, P * page, dh)
+    scores = jnp.einsum("bkgd,bksd->bkgs", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (dh ** -0.5)
+    valid = jnp.arange(P * page)[None, :] < lengths[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Plain attention oracle. q: (B,S,H,dh); k,v: (B,S,Kh,dh)."""
+    from repro.models.layers import gqa_attention
+    return gqa_attention(q, k, v, causal=causal)

@@ -1,0 +1,277 @@
+"""Dry-run case construction: (arch × shape × mesh) → jit-able closure
+plus fully-sharded ShapeDtypeStruct inputs (no allocation anywhere).
+
+``build_case`` returns:
+    fn            — function to jit
+    args_sds      — tuple of ShapeDtypeStructs (pytrees)
+    in_shardings  — matching pytree of NamedShardings
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.distributed import sharding as shp
+from repro.models import api
+from repro.models.base import Family, ModelConfig, param_shapes
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import make_train_step
+
+LORA_SLOTS = 8
+LORA_RMAX = 64
+
+# Gradient-accumulation factors for train_4k: MoE all-to-all receive
+# buffers scale with per-step tokens; microbatching is how the big MoE
+# cells fit 16 GB/chip (EXPERIMENTS.md §Dry-run).
+MICROBATCHES = {
+    "qwen3-moe-235b-a22b": 8,
+    "llama4-maverick-400b-a17b": 4,
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _named(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _param_sds(cfg: ModelConfig, dtype=jnp.bfloat16):
+    out = {}
+    for path, shape in param_shapes(cfg).items():
+        leaf = path.split("/")[-1]
+        dt = jnp.float32 if leaf in ("A_log", "ssm_D") else dtype
+        out[path] = _sds(shape, dt)
+    return out
+
+
+def _opt_sds(params_sds, moment_dtype=jnp.bfloat16):
+    out = {"step": _sds((), jnp.int32)}
+    for k, v in params_sds.items():
+        out[f"m/{k}"] = _sds(v.shape, moment_dtype)
+        out[f"v/{k}"] = _sds(v.shape, moment_dtype)
+    return out
+
+
+def _batch_sds(cfg: ModelConfig, B: int, S: int):
+    batch = {"tokens": _sds((B, S), jnp.int32),
+             "labels": _sds((B, S), jnp.int32)}
+    if cfg.family == Family.ENCDEC:
+        batch["frames"] = _sds((B, cfg.enc_ctx, cfg.d_model), jnp.bfloat16)
+    if cfg.mrope:
+        batch["mrope_pos"] = _sds((3, B, S), jnp.int32)
+    return batch
+
+
+def _batch_shardings(cfg, mesh, B_axes, B, S):
+    fit = shp.fit_spec
+    sh = {"tokens": _named(mesh, fit((B, S), P(B_axes, None), mesh)),
+          "labels": _named(mesh, fit((B, S), P(B_axes, None), mesh))}
+    if cfg.family == Family.ENCDEC:
+        sh["frames"] = _named(mesh, fit(
+            (B, cfg.enc_ctx, cfg.d_model), P(B_axes, None, None), mesh))
+    if cfg.mrope:
+        sh["mrope_pos"] = _named(mesh, fit(
+            (3, B, S), P(None, B_axes, None), mesh))
+    return sh
+
+
+def _lora_sds(cfg: ModelConfig, n_stack: int):
+    def pair(din, dout):
+        return (_sds((n_stack, LORA_SLOTS, din, LORA_RMAX), jnp.bfloat16),
+                _sds((n_stack, LORA_SLOTS, LORA_RMAX, dout), jnp.bfloat16))
+    return {"q": pair(cfg.d_model, cfg.q_dim),
+            "k": pair(cfg.d_model, cfg.kv_dim),
+            "v": pair(cfg.d_model, cfg.kv_dim),
+            "o": pair(cfg.q_dim, cfg.d_model)}
+
+
+def _lora_shardings(cfg, mesh):
+    pod, data, model = shp._axes(mesh)
+    dims = {"q": (cfg.d_model, cfg.q_dim), "k": (cfg.d_model, cfg.kv_dim),
+            "v": (cfg.d_model, cfg.kv_dim), "o": (cfg.q_dim, cfg.d_model)}
+    out = {}
+    for proj, (din, dout) in dims.items():
+        a_spec = shp.fit_spec((cfg.n_layers, LORA_SLOTS, din, LORA_RMAX),
+                              P(None, None, model, None), mesh)
+        b_desired = (P(None, None, None, None) if proj == "o"
+                     else P(None, None, None, model))
+        b_spec = shp.fit_spec((cfg.n_layers, LORA_SLOTS, LORA_RMAX, dout),
+                              b_desired, mesh)
+        out[proj] = (_named(mesh, a_spec), _named(mesh, b_spec))
+    return out
+
+
+def _b_axes(mesh):
+    pod, data, model = shp._axes(mesh)
+    return pod + (data,)
+
+
+# ----------------------------------------------------------------- cases
+def build_case(arch: str, shape_name: str, mesh: Mesh,
+               batch_override: int | None = None):
+    cfg = get_config(arch)
+    spec = SHAPE_BY_NAME[shape_name]
+    B = batch_override or spec.global_batch
+    S = spec.seq_len
+    B_axes = _b_axes(mesh)
+    kind = spec.kind
+
+    params_sds = _param_sds(cfg)
+    params_sh = shp.param_shardings(
+        cfg, {k: v.shape for k, v in params_sds.items()}, mesh, kind)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig(moment_dtype="bfloat16")
+        step = make_train_step(cfg, opt_cfg,
+                               microbatches=MICROBATCHES.get(arch, 1))
+        opt_sds = _opt_sds(params_sds)
+        opt_sh = shp.opt_shardings(params_sh, mesh)
+        batch_sds = _batch_sds(cfg, B, S)
+        batch_sh = _batch_shardings(cfg, mesh, B_axes, B, S)
+        return (step,
+                (params_sds, opt_sds, batch_sds),
+                (params_sh, opt_sh, batch_sh))
+
+    use_lora = cfg.family in (Family.DENSE, Family.MOE, Family.VLM,
+                              Family.HYBRID)
+    if cfg.family == Family.HYBRID:
+        from repro.models.hybrid import attn_sites
+        lora_stack_n = len(attn_sites(cfg))
+    else:
+        lora_stack_n = cfg.n_layers
+
+    if kind == "prefill":
+        # Keep chunk batch divisible by the data extent (16/32) — a
+        # sub-extent chunk loses batch sharding and replicates.
+        n_mb = min(MICROBATCHES.get(arch, 1), max(1, B // 16))
+
+        def fn(params, tokens, lora, adapter_idx, extra):
+            kw = dict(extra)
+            if cfg.family == Family.HYBRID:
+                kw["kv_max_len"] = S
+
+            def one(tb, idx_b):
+                kw_i = dict(kw)
+                if use_lora:
+                    kw_i.update(lora=lora, adapter_idx=idx_b)
+                return api.prefill(cfg, params, tb, **kw_i)
+
+            if n_mb == 1 or B % n_mb != 0:
+                return one(tokens, adapter_idx if use_lora else None)
+            # Batch-chunked prefill: the MoE all-to-all receive buffers
+            # scale with tokens-per-invocation; chunking the request
+            # batch bounds them (serving engines chunk prefill anyway).
+            Bc = B // n_mb
+            toks = tokens.reshape(n_mb, Bc, S)
+            idxs = (adapter_idx.reshape(n_mb, Bc) if use_lora
+                    else jnp.zeros((n_mb, Bc), jnp.int32))
+
+            def body(_, inp):
+                return None, one(inp[0], inp[1])
+
+            _, (logits, kv) = jax.lax.scan(body, None, (toks, idxs))
+            logits = logits.reshape(B, -1)
+            kv = jax.tree_util.tree_map(
+                lambda a: jnp.moveaxis(a, 0, 2).reshape(
+                    a.shape[1], B, *a.shape[3:]), kv)
+            return logits, kv
+
+        tokens = _sds((B, S), jnp.int32)
+        tok_sh = _named(mesh, shp.fit_spec((B, S), P(B_axes, None), mesh))
+        extra_sds, extra_sh = {}, {}
+        if cfg.family == Family.ENCDEC:
+            extra_sds["frames"] = _sds((B, cfg.enc_ctx, cfg.d_model),
+                                       jnp.bfloat16)
+            extra_sh["frames"] = _named(mesh, shp.fit_spec(
+                (B, cfg.enc_ctx, cfg.d_model), P(B_axes, None, None), mesh))
+        if cfg.mrope:
+            extra_sds["mrope_pos"] = _sds((3, B, S), jnp.int32)
+            extra_sh["mrope_pos"] = _named(mesh, shp.fit_spec(
+                (3, B, S), P(None, B_axes, None), mesh))
+        lora_sds = _lora_sds(cfg, lora_stack_n) if use_lora else ()
+        lora_sh = _lora_shardings(cfg, mesh) if use_lora else ()
+        idx_sds = _sds((B,), jnp.int32) if use_lora else ()
+        idx_sh = (_named(mesh, shp.fit_spec((B,), P(B_axes), mesh))
+                  if use_lora else ())
+        return (fn,
+                (params_sds, tokens, lora_sds, idx_sds, extra_sds),
+                (params_sh, tok_sh, lora_sh, idx_sh, extra_sh))
+
+    # ---- decode -------------------------------------------------------
+    state_sds, state_sh = _serve_state(cfg, mesh, B, S, B_axes)
+
+    def fn(params, tokens, state, cache_len, lora, adapter_idx, extra):
+        kw = dict(extra)
+        if use_lora:
+            kw.update(lora=lora, adapter_idx=adapter_idx)
+        return api.decode_step(cfg, params, tokens, state, cache_len, **kw)
+
+    tokens = _sds((B, 1), jnp.int32)
+    tok_sh = _named(mesh, shp.fit_spec((B, 1), P(B_axes, None), mesh))
+    clen_sds = _sds((B,), jnp.int32)
+    clen_sh = _named(mesh, shp.fit_spec((B,), P(B_axes), mesh))
+    extra_sds, extra_sh = {}, {}
+    if cfg.mrope:
+        extra_sds["mrope_pos"] = _sds((3, B, 1), jnp.int32)
+        extra_sh["mrope_pos"] = _named(mesh, shp.fit_spec(
+            (3, B, 1), P(None, B_axes, None), mesh))
+    lora_sds = _lora_sds(cfg, lora_stack_n) if use_lora else ()
+    lora_sh = _lora_shardings(cfg, mesh) if use_lora else ()
+    idx_sds = _sds((B,), jnp.int32) if use_lora else ()
+    idx_sh = (_named(mesh, shp.fit_spec((B,), P(B_axes), mesh))
+              if use_lora else ())
+    return (fn,
+            (params_sds, tokens, state_sds, clen_sds, lora_sds, idx_sds,
+             extra_sds),
+            (params_sh, tok_sh, state_sh, clen_sh, lora_sh, idx_sh,
+             extra_sh))
+
+
+def _serve_state(cfg: ModelConfig, mesh: Mesh, B: int, S: int, B_axes):
+    pod, data, model = shp._axes(mesh)
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM):
+        shape = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+        kv_sp = _named(mesh, shp.kv_cache_spec(mesh, shape))
+        return ((_sds(shape, jnp.bfloat16), _sds(shape, jnp.bfloat16)),
+                (kv_sp, kv_sp))
+    if cfg.family == Family.SSM:
+        sshape = (cfg.n_layers, B, cfg.d_inner, cfg.d_state)
+        cshape = (cfg.n_layers, B, cfg.d_conv - 1, cfg.d_inner)
+        ssm = _sds(sshape, jnp.float32)
+        conv = _sds(cshape, jnp.bfloat16)
+        return ((ssm, conv),
+                (_named(mesh, shp.ssm_state_spec(mesh, sshape)),
+                 _named(mesh, shp.conv_state_spec(mesh, cshape))))
+    if cfg.family == Family.HYBRID:
+        from repro.models.hybrid import attn_sites
+        n_sites = len(attn_sites(cfg))
+        conv_dim = cfg.d_inner + 2 * cfg.d_state
+        sshape = (cfg.n_layers, B, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                  cfg.d_state)
+        cshape = (cfg.n_layers, B, cfg.d_conv - 1, conv_dim)
+        kshape = (n_sites, B, S, cfg.n_kv_heads, cfg.head_dim)
+        ssm_sp = _named(mesh, shp.fit_spec(
+            sshape, P(None, B_axes, model, None, None), mesh))
+        conv_sp = _named(mesh, shp.fit_spec(
+            cshape, P(None, B_axes, None, model), mesh))
+        kv_sp2 = _named(mesh, shp.kv_cache_spec(mesh, kshape))
+        return ((_sds(sshape, jnp.float32), _sds(cshape, jnp.bfloat16),
+                 (_sds(kshape, jnp.bfloat16), _sds(kshape, jnp.bfloat16))),
+                (ssm_sp, conv_sp, (kv_sp2, kv_sp2)))
+    if cfg.family == Family.ENCDEC:
+        shape = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+        xshape = (cfg.n_layers, B, cfg.enc_ctx, cfg.n_kv_heads,
+                  cfg.head_dim)
+        kv_sp = _named(mesh, shp.kv_cache_spec(mesh, shape))
+        kvx_sp = _named(mesh, shp.kv_cache_spec(mesh, xshape))
+        return (((_sds(shape, jnp.bfloat16), _sds(shape, jnp.bfloat16)),
+                 (_sds(xshape, jnp.bfloat16), _sds(xshape, jnp.bfloat16))),
+                ((kv_sp, kv_sp), (kvx_sp, kvx_sp)))
+    raise ValueError(cfg.family)

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run (deliverable e).
+
+For every assigned (architecture × input shape) cell, lower + compile
+the appropriate step (train_step / prefill / serve decode) on the
+production meshes — 16×16 single-pod and 2×16×16 multi-pod — and
+record memory_analysis / cost_analysis / collective-byte totals.
+
+The XLA_FLAGS line above MUST run before any other jax-touching import
+(jax locks the device count at first init), which is why it precedes
+the module docstring's imports. Do not import this module from tests.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch qwen3-14b] [--shape decode_32k] [--mesh single|multi|both]
+        [--out results/dryrun.json]
+Results append incrementally so a crashed sweep resumes.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import (ARCH_IDS, SHAPES, assigned_cells,
+                           cell_applicable)
+from repro.configs import get_config
+from repro.distributed.act_sharding import activation_sharding
+from repro.launch.cases import build_case
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.hlo_stats import (collective_bytes_from_text,
+                                      scaled_collective_bytes)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args_sds, in_sh = build_case(arch, shape_name, mesh)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    from repro.configs import SHAPE_BY_NAME
+    kind = SHAPE_BY_NAME[shape_name].kind
+    seq_shard = kind == "train"
+    # Donation mirrors production: trainers donate (params, opt) and
+    # serving engines update KV caches in place — without it the dry-run
+    # double-counts those buffers (16 GB of phantom temp on decode_32k).
+    donate = (0, 1) if kind == "train" else ((2,) if kind == "decode"
+                                             else ())
+    t0 = time.time()
+    with mesh, activation_sharding(batch_axes, model_size=16,
+                                   seq_shard_boundary=seq_shard,
+                                   moe_token_parallel=kind != "train",
+                                   mesh=mesh):
+        jitted = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*args_sds)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+    n_dev = mesh.devices.size
+    coll = collective_bytes_from_text(hlo_text, n_devices=n_dev)
+    coll["total_bytes_scaled"] = scaled_collective_bytes(
+        coll, get_config(arch).n_layers)
+    mem_d = {}
+    if mem is not None:
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem_d[f] = int(getattr(mem, f, 0) or 0)
+    cost_d = {}
+    if cost:
+        for k in ("flops", "bytes accessed", "transcendentals"):
+            if k in cost:
+                cost_d[k.replace(" ", "_")] = float(cost[k])
+    return {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "ok": True,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_d, "cost": cost_d, "collectives": coll,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--skip-done", action="store_true", default=True)
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    cells = assigned_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    for arch, shape in cells:
+        for multi in meshes:
+            key = f"{arch}|{shape}|{'multi' if multi else 'single'}"
+            if args.skip_done and key in results and results[key].get("ok"):
+                continue
+            ok, why = cell_applicable(arch, shape)
+            if not ok:
+                results[key] = {"arch": arch, "shape": shape,
+                                "mesh": "2x16x16" if multi else "16x16",
+                                "ok": False, "skipped": True,
+                                "reason": why}
+                print(f"[skip] {key}: {why}", flush=True)
+            else:
+                print(f"[run ] {key} ...", flush=True)
+                try:
+                    results[key] = run_cell(arch, shape, multi)
+                    r = results[key]
+                    print(f"       ok lower={r['lower_s']}s "
+                          f"compile={r['compile_s']}s "
+                          f"flops={r['cost'].get('flops', 0):.3e} "
+                          f"coll={r['collectives']['total_bytes']:.3e}B",
+                          flush=True)
+                except Exception as e:            # noqa: BLE001
+                    results[key] = {"arch": arch, "shape": shape,
+                                    "ok": False,
+                                    "error": f"{type(e).__name__}: {e}",
+                                    "trace": traceback.format_exc()[-2000:]}
+                    print(f"       FAIL {type(e).__name__}: {e}",
+                          flush=True)
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    n_skip = sum(1 for r in results.values() if r.get("skipped"))
+    n_fail = sum(1 for r in results.values()
+                 if not r.get("ok") and not r.get("skipped"))
+    print(f"done: {n_ok} ok, {n_skip} skipped-by-design, {n_fail} FAILED")
+
+
+if __name__ == "__main__":
+    main()

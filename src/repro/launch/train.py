@@ -1,0 +1,95 @@
+"""Training launcher: --arch <id> on the host's devices or a forced mesh.
+
+Production path (TPU pod): the same code under
+``--devices production`` builds the 16×16 / 2×16×16 mesh (requires the
+real chips or the dry-run's XLA_FLAGS override). For CPU smoke use a
+reduced config: ``--reduced``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b \
+        --reduced --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.distributed.act_sharding import activation_sharding
+from repro.distributed.sharding import (batch_spec, fit_spec, opt_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.training import (AdamWConfig, AsyncCheckpointer, DataConfig,
+                            SyntheticLM, init_train_state, latest_step,
+                            make_train_step, restore_checkpoint)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--devices", choices=("host", "production",
+                                          "production-multipod"),
+                    default="host")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.devices == "host":
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh(
+            multi_pod=args.devices == "production-multipod")
+    batch_axes = tuple(a for a in mesh.axis_names if a != "model")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                          total_steps=args.steps)
+    key = jax.random.PRNGKey(0)
+    params, opt = init_train_state(cfg, opt_cfg, key, jnp.float32)
+    p_sh = param_shardings(cfg, params, mesh, "train")
+    o_sh = opt_shardings(p_sh, mesh)
+    params = jax.device_put(params, p_sh)
+    opt = jax.device_put(opt, o_sh)
+
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch))
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg),
+                      donate_argnums=(0, 1))
+    ck = (AsyncCheckpointer(args.checkpoint_dir)
+          if args.checkpoint_dir else None)
+    start = 0
+    if ck and latest_step(args.checkpoint_dir) is not None:
+        start, trees = restore_checkpoint(args.checkpoint_dir)
+        params, opt = trees["params"], trees["opt"]
+        print(f"restored checkpoint at step {start}")
+
+    with mesh, activation_sharding(batch_axes):
+        t0 = time.time()
+        for step in range(start, args.steps):
+            b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+            params, opt, m = step_fn(params, opt, b)
+            if step % 10 == 0 or step == args.steps - 1:
+                print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f} "
+                      f"({(time.time()-t0)/(step-start+1):.2f}s/step)")
+            if ck and (step + 1) % args.checkpoint_every == 0:
+                ck.save(step + 1, {"params": params, "opt": opt})
+        if ck:
+            ck.save(args.steps, {"params": params, "opt": opt})
+            ck.wait()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

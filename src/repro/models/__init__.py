@@ -1,0 +1,3 @@
+"""Model substrate: configs, layers, families, uniform api."""
+from .base import Family, ModelConfig, param_shapes
+from . import api

@@ -1,0 +1,63 @@
+"""Family dispatcher: one uniform entry surface over all model families.
+
+    api.init_params(cfg, key)
+    api.train_loss(cfg, params, **batch)          # batch from input specs
+    api.prefill(cfg, params, **inputs)
+    api.decode_step(cfg, params, **inputs)
+
+The launcher / dry-run / engine talk to this module only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, hybrid, lm, ssm_lm
+from .base import Family, ModelConfig
+from .lm import init_params  # shared: param_shapes covers every family
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family == Family.SSM:
+        return ssm_lm
+    if cfg.family == Family.HYBRID:
+        return hybrid
+    if cfg.family == Family.ENCDEC:
+        return encdec
+    return lm
+
+
+def forward(cfg, params, tokens, **kw):
+    return _mod(cfg).forward(cfg, params, tokens, **kw)
+
+
+def train_loss(cfg, params, tokens, labels, **kw):
+    return _mod(cfg).train_loss(cfg, params, tokens, labels, **kw)
+
+
+def prefill(cfg, params, tokens, **kw):
+    return _mod(cfg).prefill(cfg, params, tokens, **kw)
+
+
+def decode_step(cfg, params, tokens, state, cache_len=None, **kw):
+    m = _mod(cfg)
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM):
+        return m.decode_step(cfg, params, tokens, state, cache_len, **kw)
+    if cfg.family == Family.SSM:
+        return m.decode_step(cfg, params, tokens, state, **kw)
+    return m.decode_step(cfg, params, tokens, state, cache_len, **kw)
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    if cfg.family == Family.SSM:
+        return ssm_lm.init_serve_state(cfg, batch, dtype)
+    if cfg.family == Family.HYBRID:
+        return hybrid.init_serve_state(cfg, batch, max_len, dtype)
+    if cfg.family == Family.ENCDEC:
+        k = jnp.zeros((cfg.n_layers, batch, max_len, cfg.n_kv_heads,
+                       cfg.head_dim), dtype)
+        kx = jnp.zeros((cfg.n_layers, batch, cfg.enc_ctx, cfg.n_kv_heads,
+                        cfg.head_dim), dtype)
+        return ((k, k), (kx, kx))
+    return lm.make_kv_caches(cfg, batch, max_len, dtype)

@@ -1,0 +1,215 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one shared attention block.
+
+38 Mamba2 layers; a single *shared* (attention + MLP) transformer block
+is applied after every ``attn_every``-th mamba layer, reusing the same
+weights at each application (zamba2's parameter-sharing trick).
+
+The layer loop scans over *periods* of ``attn_every`` layers (the
+natural zamba2 repeat unit): the scan body holds attn_every mamba
+mixers + one shared-block application, so the HLO stays ~attn_every×
+smaller than an unrolled stack (the unrolled version took >14 min to
+compile at 512 devices), while KV caches exist only at the shared-block
+sites — (n_sites, B, S, kh, dh), not (L, ...), which matters enormously
+at long_500k. Layers beyond the last full period run unrolled without
+attention.
+
+Serve state: (ssm (L,B,H,P,N) f32, conv (L,B,K-1,C), kv (n_sites,...)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import ModelConfig
+from .layers import cross_entropy, embed, rms_norm, rope_cos_sin, unembed
+from .lm import _attn, _mlp
+from repro.distributed.act_sharding import (constrain_boundary,
+                                            constrain_btd, constrain_logits)
+from .ssm import mamba2_seq, mamba2_step
+
+
+def attn_sites(cfg: ModelConfig) -> list[int]:
+    return [i for i in range(cfg.n_layers)
+            if (i + 1) % cfg.attn_every == 0]
+
+
+def _layer_stack(params: dict) -> dict:
+    return {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith("layers/")}
+
+
+def _shared_params(params: dict) -> dict:
+    return {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith("shared/")}
+
+
+def _split_periods(cfg: ModelConfig, stack: dict):
+    """(scanned (n_per, E, ...), tail (n_tail, ...)) views of the stack."""
+    E = cfg.attn_every
+    n_per = cfg.n_layers // E
+    n_scan = n_per * E
+    scanned = {k: v[:n_scan].reshape((n_per, E) + v.shape[1:])
+               for k, v in stack.items()}
+    tail = {k: v[n_scan:] for k, v in stack.items()}
+    return scanned, tail, n_per, cfg.n_layers - n_scan
+
+
+def _mamba_block(cfg, x, p, decode, ssm_state=None, conv_state=None):
+    h_in = rms_norm(x, p["ssm_norm"], cfg.norm_eps)
+    if decode:
+        y, h, cstate = mamba2_step(h_in[:, 0], p, cfg.d_state,
+                                   cfg.ssm_head_dim, ssm_state,
+                                   conv_state)
+        return x + y[:, None], h, cstate
+    y, h = mamba2_seq(h_in, p, cfg.d_state, cfg.ssm_head_dim,
+                      cfg.ssm_chunk)
+    zx = jnp.einsum("bsd,de->bse", h_in, p["in_proj"])
+    xbc_raw = zx[..., cfg.d_inner:2 * cfg.d_inner + 2 * cfg.d_state]
+    cstate = xbc_raw[:, -(cfg.d_conv - 1):, :]
+    return x + y, h, cstate
+
+
+def _run(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
+         ssm_states=None, conv_states=None, kv_caches=None,
+         cache_len=None, decode: bool = False, lora=None,
+         adapter_idx=None, need_state: bool = True):
+    """Period-scanned driver. States are stacked arrays (see module doc).
+
+    Returns (x, ssm (L,...), conv (L,...), kv (n_sites,...) or None).
+    """
+    shared = _shared_params(params)
+    stack = _layer_stack(params)
+    scanned, tail, n_per, n_tail = _split_periods(cfg, stack)
+    E = cfg.attn_every
+    serving = ssm_states is not None
+
+    def period(x, xs):
+        x = constrain_boundary(x) if not decode else x
+        new_ssm, new_conv = [], []
+        for e in range(E):
+            p = {k: v[e] for k, v in xs["p"].items()}
+            x, h, c = _mamba_block(
+                cfg, x, p, decode,
+                xs["ssm"][e] if serving else None,
+                xs["conv"][e] if serving else None)
+            new_ssm.append(h)
+            new_conv.append(c)
+        kv = (xs["k"], xs["v"]) if kv_caches is not None else None
+        lr = ({proj: (a, b) for proj, (a, b) in xs["lora"].items()}
+              if lora is not None else None)
+        x, kv_new = _attn(cfg, x, shared, cos, sin, kv, cache_len, lr,
+                          adapter_idx)
+        x = _mlp(cfg, x, shared)
+        if not need_state:
+            return x, None      # train/forward: no dead state stacks
+        ys = {"ssm": jnp.stack(new_ssm), "conv": jnp.stack(new_conv)}
+        if kv_caches is not None or not decode:
+            ys["k"], ys["v"] = kv_new
+        return x, ys
+
+    def body(carry, xs):
+        return period(carry, xs)
+
+    if cfg.remat and not decode:
+        body = jax.checkpoint(body)
+
+    xs = {"p": scanned}
+    if serving:
+        n_scan = n_per * E
+        xs["ssm"] = ssm_states[:n_scan].reshape(
+            (n_per, E) + ssm_states.shape[1:])
+        xs["conv"] = conv_states[:n_scan].reshape(
+            (n_per, E) + conv_states.shape[1:])
+    if kv_caches is not None:
+        xs["k"], xs["v"] = kv_caches
+    if lora is not None:
+        xs["lora"] = lora      # (n_sites, slots, din, r) stacks
+
+    x, ys = jax.lax.scan(body, x, xs)
+
+    # Tail layers (no attention site).
+    tail_ssm, tail_conv = [], []
+    for i in range(n_tail):
+        p = {k: v[i] for k, v in tail.items()}
+        x, h, c = _mamba_block(
+            cfg, x, p, decode,
+            ssm_states[n_per * E + i] if serving else None,
+            conv_states[n_per * E + i] if serving else None)
+        tail_ssm.append(h)
+        tail_conv.append(c)
+
+    if not need_state:
+        return x, None, None, None
+    ssm_out = ys["ssm"].reshape((n_per * E,) + ys["ssm"].shape[2:])
+    conv_out = ys["conv"].reshape((n_per * E,) + ys["conv"].shape[2:])
+    if n_tail:
+        ssm_out = jnp.concatenate([ssm_out, jnp.stack(tail_ssm)])
+        conv_out = jnp.concatenate([conv_out, jnp.stack(tail_conv)])
+    kv_out = (ys.get("k"), ys.get("v")) if "k" in ys else None
+    return x, ssm_out, conv_out, kv_out
+
+
+def _head(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return unembed(x, table)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            mrope_pos=None) -> jax.Array:
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
+    pos = jnp.arange(tokens.shape[1])[None, :]
+    cos, sin = rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+    x, *_ = _run(cfg, params, x, cos, sin, need_state=False)
+    return constrain_logits(_head(cfg, params, x))
+
+
+def train_loss(cfg, params, tokens, labels, mrope_pos=None,
+               aux_weight=0.0):
+    return cross_entropy(forward(cfg, params, tokens), labels)
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
+                     dtype=jnp.bfloat16):
+    n_sites = len(attn_sites(cfg))
+    conv_dim = cfg.d_inner + 2 * cfg.d_state
+    ssm = jnp.zeros((cfg.n_layers, batch, cfg.n_ssm_heads,
+                     cfg.ssm_head_dim, cfg.d_state), jnp.float32)
+    conv = jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, conv_dim),
+                     dtype)
+    kv = (jnp.zeros((n_sites, batch, max_len, cfg.n_kv_heads,
+                     cfg.head_dim), dtype),
+          jnp.zeros((n_sites, batch, max_len, cfg.n_kv_heads,
+                     cfg.head_dim), dtype))
+    return ssm, conv, kv
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            kv_max_len: int | None = None, lora=None, adapter_idx=None):
+    """Returns (last logits (B,V), (ssm, conv, kv) serve state)."""
+    B, S = tokens.shape
+    x = embed(tokens, params["embed/tok"])
+    pos = jnp.arange(S)[None, :]
+    cos, sin = rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+    x, ssm, conv, kv = _run(cfg, params, x, cos, sin, lora=lora,
+                            adapter_idx=adapter_idx)
+    if kv_max_len is not None and kv_max_len > S:
+        k, v = kv
+        pad = ((0, 0), (0, 0), (0, kv_max_len - S), (0, 0), (0, 0))
+        kv = (jnp.pad(k, pad), jnp.pad(v, pad))
+    return _head(cfg, params, x[:, -1:])[:, 0], (ssm, conv, kv)
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                state, cache_len: jax.Array, lora=None, adapter_idx=None):
+    """tokens (B,1); state = (ssm, conv, (k,v)); cache_len (B,)."""
+    ssm, conv, kv = state
+    x = embed(tokens, params["embed/tok"])
+    cos, sin = rope_cos_sin(jnp.reshape(cache_len, (-1, 1)),
+                            cfg.head_dim, cfg.rope_theta)
+    x, ssm, conv, kv = _run(cfg, params, x, cos, sin, ssm_states=ssm,
+                            conv_states=conv, kv_caches=kv,
+                            cache_len=cache_len, decode=True, lora=lora,
+                            adapter_idx=adapter_idx)
+    return _head(cfg, params, x)[:, 0], (ssm, conv, kv)

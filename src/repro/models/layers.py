@@ -1,0 +1,196 @@
+"""Core layer primitives: norms, RoPE (+M-RoPE), GQA attention, SwiGLU.
+
+Pure-functional JAX; einsum-structured so GSPMD can shard every
+contraction. GQA never materialises repeated KV heads: queries are
+reshaped to (kv_head, group) and contracted against the raw KV tensors.
+Softmax and norms accumulate in fp32 regardless of activation dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """qk_norm (qwen3): per-head RMS over head_dim; w is (head_dim,)."""
+    return rms_norm(x, w, eps)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                 ) -> tuple[jax.Array, jax.Array]:
+    """positions: (..., S) int -> cos/sin (..., S, head_dim/2)."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jax.Array, head_dim: int, theta: float,
+                  sections: tuple[int, ...]) -> tuple[jax.Array, jax.Array]:
+    """Multimodal RoPE (qwen2-vl): positions (3, B, S) for t/h/w axes.
+
+    The head_dim/2 frequency slots are partitioned into ``sections``
+    (t, h, w); each section takes its angle from the matching position
+    axis. Text tokens carry identical t/h/w positions, so M-RoPE reduces
+    to 1-D RoPE for them.
+    """
+    assert positions.shape[0] == 3
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(head_dim, theta)                 # (half,)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3,B,S,half)
+    parts = []
+    off = 0
+    for axis, sec in enumerate(sections):
+        parts.append(ang_all[axis, ..., off:off + sec])
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)               # (B, S, half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) — rotate-half convention."""
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s,
+                            x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention
+# Above this query length, attention runs query-chunked (memory-bounded).
+Q_CHUNK_THRESHOLD = 2048
+Q_CHUNK = 1024
+
+
+def _attn_block(qg, k, v, q_offset, kv_len, causal, scale):
+    """One query block. qg: (B, Sq, Kh, G, D); full k/v. Exact softmax
+    per query row (query-chunking needs no online rescaling)."""
+    Sq = qg.shape[1]
+    Sk = k.shape[1]
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    mask = None
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = (kpos <= qpos)[None, None, None]
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < jnp.reshape(kv_len, (-1, 1))
+        valid = valid[:, None, None, None, :]
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool = True,
+                  q_offset: jax.Array | int = 0,
+                  kv_len: jax.Array | None = None) -> jax.Array:
+    """Grouped-query attention without KV duplication.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Kh, D) with H = Kh * G.
+    ``q_offset`` is the absolute position of q[0] (decode: cache length).
+    ``kv_len`` masks out cache slots >= kv_len (padded decode caches).
+
+    Long sequences run *query-chunked* (lax.scan over blocks of
+    ``Q_CHUNK`` queries): the (Sq, Sk) score matrix never materialises —
+    at 32k context that is 42 GB vs 1.3 GB per chip. Query chunking is
+    exact (each row's softmax sees all keys); the Pallas flash kernel is
+    the TPU fast path, this is the shardable lowering.
+    Returns (B, Sq, H, D).
+    """
+    B, Sq, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, Sq, Kh, G, D)
+    scale = D ** -0.5
+    if Sq < Q_CHUNK_THRESHOLD or Sq % Q_CHUNK != 0:
+        out = _attn_block(qg, k, v, q_offset, kv_len, causal, scale)
+        return out.reshape(B, Sq, H, D)
+
+    n_chunks = Sq // Q_CHUNK
+    qc = jnp.moveaxis(qg.reshape(B, n_chunks, Q_CHUNK, Kh, G, D), 1, 0)
+
+    def body(_, inp):
+        qi, ci = inp
+        off = q_offset + ci * Q_CHUNK
+        return None, _attn_block(qi, k, v, off, kv_len, causal, scale)
+
+    # Remat the chunk body: without it the backward pass stacks every
+    # chunk's probs — reconstructing the full (Sq, Sk) score memory the
+    # chunking exists to avoid.
+    body = jax.checkpoint(body)
+    _, outs = jax.lax.scan(body, None,
+                           (qc, jnp.arange(n_chunks)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Kh, G, D)
+    return out.reshape(B, Sq, H, D)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array) -> jax.Array:
+    """Single-token decode against a padded KV cache.
+
+    q: (B, 1, H, D); caches: (B, Smax, Kh, D); cache_len: (B,) — number
+    of valid entries (the new token's KV must already be written).
+    """
+    return gqa_attention(q, k_cache, v_cache, causal=False,
+                         kv_len=cache_len)
+
+
+# ----------------------------------------------------------------- MLP
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate)
+    u = jnp.einsum("bsd,df->bsf", x, w_up)
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    return jnp.einsum("bsf,fd->bsd",
+                      jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, w_up)),
+                      w_down)
+
+
+# ---------------------------------------------------------- embeddings
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """x: (B, S, D); table: (D, V) -> logits (B, S, V)."""
+    return jnp.einsum("bsd,dv->bsv", x, table,
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token NLL in fp32. logits (B,S,V), labels (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1).squeeze(-1)
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,359 @@
+"""Decoder-only LM assembly: dense / MoE / VLM families.
+
+Parameters are a *flat* dict {path: array} (see base.param_shapes) with
+per-layer tensors stacked on axis 0 — the layer loop is a single
+``lax.scan`` whose xs are the stacked stacks, keeping the HLO small
+(one layer body regardless of depth) and making remat policy uniform.
+MoE-interleaved models (llama4: moe_every=2) scan over supersteps of
+(dense layer, MoE layer) pairs.
+
+Three entry points per model, all pure functions of (cfg, params, ...):
+
+- ``forward``      full-sequence logits (training / evaluation)
+- ``prefill``      logits for the last position + per-layer KV caches
+- ``decode_step``  one token against padded KV caches (+ optional
+                   multi-adapter LoRA via per-request adapter indices —
+                   the paper's serving data plane)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Family, ModelConfig, param_shapes
+from .layers import (apply_rope, cross_entropy, decode_attention, embed,
+                     gqa_attention, head_rms_norm, mrope_cos_sin,
+                     gelu_mlp, rms_norm, rope_cos_sin, swiglu, unembed)
+from .lora_apply import lora_delta
+from repro.distributed.act_sharding import (constrain_btd, constrain_boundary,
+                                            constrain_logits,
+                                            constrain_expert_ecd)
+from .moe import moe_block, moe_block_gather
+
+
+# ----------------------------------------------------------------- init
+def init_params(cfg: ModelConfig, key: jax.Array,
+                dtype=jnp.bfloat16) -> dict[str, jax.Array]:
+    shapes = param_shapes(cfg)
+    params: dict[str, jax.Array] = {}
+    keys = jax.random.split(key, len(shapes))
+    for (path, shape), k in zip(sorted(shapes.items()), keys):
+        leaf = path.split("/")[-1]
+        if "norm" in leaf:
+            params[path] = jnp.ones(shape, dtype)
+        elif leaf in ("A_log",):
+            # S4D-real init: A in [1, d_state] (mamba1) / [1, 16] (mamba2).
+            hi = 16.0
+            params[path] = jnp.log(jax.random.uniform(
+                k, shape, jnp.float32, 1.0, hi))
+        elif leaf in ("ssm_D",):
+            params[path] = jnp.ones(shape, jnp.float32)
+        elif leaf in ("dt_bias",):
+            # Bias such that softplus(dt_bias) spans [1e-3, 1e-1].
+            u = jax.random.uniform(k, shape, jnp.float32, 1e-3, 1e-1)
+            params[path] = jnp.log(jnp.expm1(u))
+        elif leaf.endswith("_bias") or leaf in ("conv_b",):
+            params[path] = jnp.zeros(shape, dtype)
+        elif leaf in ("enc_pos", "dec_pos"):
+            params[path] = (0.02 * jax.random.normal(k, shape)).astype(dtype)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in ** -0.5
+            params[path] = (std * jax.random.normal(k, shape)).astype(dtype)
+    return params
+
+
+# ------------------------------------------------------------ attention
+def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
+          kv_cache=None, cache_len=None, lora=None, adapter_idx=None,
+          prefix: str = ""):
+    """Shared attention block.
+
+    Returns (out, new_kv): new_kv is (k, v) for prefill or the updated
+    (k_cache, v_cache, ) slices for decode.
+    """
+    B, S, D = x.shape
+    h = rms_norm(x, p[prefix + "attn_norm"], cfg.norm_eps)
+
+    def proj(name, w_out):
+        y = jnp.einsum("bsd,de->bse", h, p[prefix + name])
+        if cfg.qkv_bias and prefix + name + "_bias" in p:
+            y = y + p[prefix + name + "_bias"]
+        if lora is not None and name in lora:
+            y = y + lora_delta(h, lora[name], adapter_idx)
+        return y
+
+    q = proj("q", cfg.q_dim).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = proj("k", cfg.kv_dim).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = proj("v", cfg.kv_dim).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p[prefix + "q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p[prefix + "k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if kv_cache is None:
+        out = gqa_attention(q, k, v, causal=True)
+        new_kv = (k, v)
+    else:
+        k_cache, v_cache = kv_cache
+        # Scatter the new entries at cache_len (decode: S == 1).
+        idx = jnp.reshape(cache_len, (B, 1)) + jnp.arange(S)[None]
+        bidx = jnp.arange(B)[:, None] + jnp.zeros_like(idx)
+        k_cache = k_cache.at[bidx, idx].set(k)
+        v_cache = v_cache.at[bidx, idx].set(v)
+        out = decode_attention(q, k_cache, v_cache,
+                               cache_len + S)
+        new_kv = (k_cache, v_cache)
+
+    out = out.reshape(B, S, cfg.q_dim)
+    o = jnp.einsum("bse,ed->bsd", out, p[prefix + "o"])
+    if lora is not None and "o" in lora:
+        o = o + lora_delta(out, lora["o"], adapter_idx)
+    return x + o, new_kv
+
+
+def _mlp(cfg, x, p, prefix=""):
+    h = rms_norm(x, p[prefix + "mlp_norm"], cfg.norm_eps)
+    if not cfg.gated_mlp:
+        return x + gelu_mlp(h, p[prefix + "up"], p[prefix + "down"])
+    return x + swiglu(h, p[prefix + "gate"], p[prefix + "up"],
+                      p[prefix + "down"])
+
+
+def _moe(cfg, x, p):
+    from repro.distributed.act_sharding import moe_a2a_mesh
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    a2a = moe_a2a_mesh()
+    B, S, _ = x.shape
+    # a2a MoE for distributed inference: cuts MoE decode collective
+    # 235-560x vs the expert-gather path (whose jnp.take of expert
+    # weights is itself the HBM bill); both paths carry heavy per-layer
+    # transient buffers on MoE decode (§Perf cell B, iter 4 caveat).
+    if a2a is not None:
+        mesh, axis = a2a
+        ns = mesh.shape[axis]
+        if cfg.n_experts % ns == 0 and B % ns == 0:
+            from .moe_shard_map import moe_block_a2a
+            # Decode: dropless capacity (cf = E/k makes cap == Tg).
+            cf = (cfg.n_experts / cfg.top_k if S == 1
+                  else cfg.capacity_factor)
+            y, aux = moe_block_a2a(h, p["router"], p["w_gate"],
+                                   p["w_up"], p["w_down"], cfg.top_k,
+                                   cf, mesh, expert_axis=axis)
+            if cfg.shared_expert_ff:
+                y = y + swiglu(h, p["shared_gate"], p["shared_up"],
+                               p["shared_down"])
+            return x + y, aux
+    if S == 1:
+        # Decode: dropless expert-gather (see moe.moe_block_gather).
+        y, aux = moe_block_gather(h, p["router"], p["w_gate"],
+                                  p["w_up"], p["w_down"], cfg.top_k)
+    else:
+        y, aux = moe_block(h, p["router"], p["w_gate"], p["w_up"],
+                           p["w_down"], cfg.top_k, cfg.capacity_factor)
+    if cfg.shared_expert_ff:
+        y = y + swiglu(h, p["shared_gate"], p["shared_up"],
+                       p["shared_down"])
+    return x + y, aux
+
+
+# ----------------------------------------------------- stacked param views
+def _slice_group(params: dict, prefix: str) -> dict:
+    n = len(prefix)
+    return {k[n:]: v for k, v in params.items() if k.startswith(prefix)}
+
+
+def _positions(cfg: ModelConfig, tokens_shape, offset, mrope_pos):
+    B, S = tokens_shape
+    if cfg.mrope:
+        assert mrope_pos is not None, "VLM needs (3,B,S) M-RoPE positions"
+        return mrope_cos_sin(mrope_pos, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections)
+    pos = jnp.arange(S)[None, :] + jnp.reshape(offset, (-1, 1))
+    return rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
+
+
+# ------------------------------------------------------------- backbone
+def _backbone(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
+              kv_caches=None, cache_len=None, lora=None, adapter_idx=None,
+              collect_kv=False):
+    """Scan over layers. Returns (hidden, new_kv_stack, aux_loss).
+
+    ``collect_kv`` stacks per-layer fresh K/V (prefill). Training leaves
+    it False so the scan carries no dead 100-GB KV output to rely on
+    DCE for.
+    """
+    attn_stack = _slice_group(params, "layers/")
+    lora_stack = lora  # {proj: (L, slots, din, r) & (L, slots, r, dout)}
+
+    if cfg.family == Family.MOE:
+        return _backbone_moe(cfg, params, x, cos, sin, kv_caches,
+                             cache_len, lora, adapter_idx, collect_kv)
+
+    def body(carry, xs):
+        h = constrain_boundary(carry)
+        p = xs["p"]
+        kv = (xs["k"], xs["v"]) if kv_caches is not None else None
+        lr = xs.get("lora")
+        h, new_kv = _attn(cfg, h, p, cos, sin, kv, cache_len, lr,
+                          adapter_idx)
+        h = constrain_boundary(_mlp(cfg, h, p))
+        if kv_caches is None and not collect_kv:
+            new_kv = None
+        return h, new_kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = {"p": attn_stack}
+    if kv_caches is not None:
+        xs["k"], xs["v"] = kv_caches
+    if lora_stack is not None:
+        xs["lora"] = lora_stack
+    h, kv_out = jax.lax.scan(body, x, xs)
+    return h, kv_out, jnp.float32(0)
+
+
+def _backbone_moe(cfg, params, x, cos, sin, kv_caches, cache_len,
+                  lora, adapter_idx, collect_kv=False):
+    """MoE scan; supersteps of (moe_every) layers, last one MoE."""
+    E = cfg.moe_every
+    L = cfg.n_layers
+    n_super = L // E
+    attn_stack = _slice_group(params, "layers/")
+    attn_stack = {k: v.reshape((n_super, E) + v.shape[1:])
+                  for k, v in attn_stack.items()}
+    moe_stack = _slice_group(params, "moe/")
+    dense_stack = _slice_group(params, "dense_mlp/")
+    if dense_stack:
+        n_dense_per = E - 1
+        dense_stack = {k: v.reshape((n_super, n_dense_per) + v.shape[1:])
+                       for k, v in dense_stack.items()}
+
+    def body(carry, xs):
+        h, aux = carry
+        h = constrain_boundary(h)
+        new_kv = []
+        for e in range(E):
+            p_attn = {k: v[e] for k, v in xs["attn"].items()}
+            kv = ((xs["k"][e], xs["v"][e])
+                  if kv_caches is not None else None)
+            lr = ({proj: (ab[0][e], ab[1][e])
+                   for proj, ab in xs["lora"].items()}
+                  if lora is not None else None)
+            h, kv_e = _attn(cfg, h, p_attn, cos, sin, kv, cache_len,
+                            lr, adapter_idx)
+            new_kv.append(kv_e)
+            if e == E - 1:
+                h, a = _moe(cfg, h, xs["moe"])
+                h = constrain_btd(h)
+                aux = aux + a
+            else:
+                p_d = {k: v[e] for k, v in xs["dense"].items()}
+                h = _mlp(cfg, h, p_d)
+        want_kv = kv_caches is not None or collect_kv
+        k_out = (jnp.stack([kv[0] for kv in new_kv]) if want_kv
+                 else jnp.float32(0))
+        v_out = (jnp.stack([kv[1] for kv in new_kv]) if want_kv
+                 else jnp.float32(0))
+        return (h, aux), (k_out, v_out)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = {"attn": attn_stack, "moe": moe_stack}
+    if dense_stack:
+        xs["dense"] = dense_stack
+    if kv_caches is not None:
+        k, v = kv_caches
+        xs["k"] = k.reshape((n_super, E) + k.shape[1:])
+        xs["v"] = v.reshape((n_super, E) + v.shape[1:])
+    if lora is not None:
+        xs["lora"] = {proj: (a.reshape((n_super, E) + a.shape[1:]),
+                             b.reshape((n_super, E) + b.shape[1:]))
+                      for proj, (a, b) in lora.items()}
+    (h, aux), kv_out = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    if kv_caches is not None or collect_kv:
+        k_out, v_out = kv_out
+        k_out = k_out.reshape((L,) + k_out.shape[2:])
+        v_out = v_out.reshape((L,) + v_out.shape[2:])
+        kv_out = (k_out, v_out)
+    return h, kv_out, aux
+
+
+# ----------------------------------------------------------- entry points
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            mrope_pos: jax.Array | None = None) -> jax.Array:
+    """Full-sequence logits (B, S, V)."""
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
+    cos, sin = _positions(cfg, tokens.shape, 0, mrope_pos)
+    h, _, _aux = _backbone(cfg, params, x, cos, sin)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return constrain_logits(unembed(h, table))
+
+
+def train_loss(cfg: ModelConfig, params: dict, tokens: jax.Array,
+               labels: jax.Array, mrope_pos=None,
+               aux_weight: float = 0.01) -> jax.Array:
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
+    cos, sin = _positions(cfg, tokens.shape, 0, mrope_pos)
+    h, _, aux = _backbone(cfg, params, x, cos, sin)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    logits = constrain_logits(unembed(h, table))
+    return cross_entropy(logits, labels) + aux_weight * aux
+
+
+def make_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            mrope_pos=None, lora=None, adapter_idx=None, last_pos=None):
+    """Returns (last-position logits (B, V), (k_stack, v_stack)).
+
+    ``last_pos`` (B,) selects the position whose logits are returned —
+    needed for right-padded prefill batches (defaults to S-1).
+    """
+    x = embed(tokens, params["embed/tok"])
+    cos, sin = _positions(cfg, tokens.shape, 0, mrope_pos)
+    h, kv, _ = _backbone(cfg, params, x, cos, sin, lora=lora,
+                         adapter_idx=adapter_idx, collect_kv=True)
+    if last_pos is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jnp.take_along_axis(
+            h, jnp.reshape(last_pos, (-1, 1, 1)).astype(jnp.int32), axis=1)
+    h_last = rms_norm(h_last, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return unembed(h_last, table)[:, 0], kv
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                kv_caches, cache_len: jax.Array, mrope_pos=None,
+                lora=None, adapter_idx=None):
+    """One decode step.
+
+    tokens: (B, 1); kv_caches: (k, v) each (L, B, Smax, Kh, Dh);
+    cache_len: (B,) valid lengths. Returns (logits (B,V), new caches).
+    """
+    x = embed(tokens, params["embed/tok"])
+    if cfg.mrope:
+        cos, sin = _positions(cfg, tokens.shape, cache_len, mrope_pos)
+    else:
+        cos, sin = _positions(cfg, tokens.shape, cache_len, None)
+    h, kv, _ = _backbone(cfg, params, x, cos, sin, kv_caches=kv_caches,
+                         cache_len=cache_len, lora=lora,
+                         adapter_idx=adapter_idx)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return unembed(h, table)[:, 0], kv

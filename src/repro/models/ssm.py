@@ -1,0 +1,337 @@
+"""State-space mixers: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Both reduce to an elementwise linear recurrence over time:
+
+    h_t = decay_t * h_{t-1} + u_t
+
+computed with a *chunked* scan: a sequential ``lax.scan`` over chunks of
+``chunk`` steps carrying the state, with a parallel
+``associative_scan`` inside each chunk. This bounds the materialised
+(B, chunk, *state) tensors (the full-T associative scan would need
+O(T·d_inner·d_state) memory — infeasible at 32k/500k context) while
+keeping per-chunk parallelism for the TPU vector units. The fully
+sequential form (chunk=1) and the SSD matmul form are kept in
+kernels/ref.py as oracles.
+
+Decode is the O(1) single-step update — the reason the long_500k shape
+is assigned to these families.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import (constrain_ssm_bth,
+                                            constrain_ssm_bthp,
+                                            constrain_ssm_channels)
+
+
+# ------------------------------------------------------- linear recurrence
+def _assoc_combine(a, b):
+    """(d, u) elements; b is later in time."""
+    return a[0] * b[0], a[1] * b[0] + b[1]
+
+
+def chunked_linear_recurrence(decay: jax.Array, u: jax.Array,
+                              h0: jax.Array, chunk: int,
+                              ) -> tuple[jax.Array, jax.Array]:
+    """h_t = decay_t * h_{t-1} + u_t for t in [0, T).
+
+    decay, u: (B, T, *S); h0: (B, *S). Returns (h (B,T,*S), h_T).
+    T is padded up to a multiple of ``chunk`` internally.
+    """
+    B, T = u.shape[0], u.shape[1]
+    state_shape = u.shape[2:]
+    pad = (-T) % chunk
+    if pad:
+        decay = jnp.pad(decay, [(0, 0), (0, pad)] + [(0, 0)] * len(state_shape),
+                        constant_values=1.0)
+        u = jnp.pad(u, [(0, 0), (0, pad)] + [(0, 0)] * len(state_shape))
+    n_chunks = (T + pad) // chunk
+    d_c = decay.reshape((B, n_chunks, chunk) + state_shape)
+    u_c = u.reshape((B, n_chunks, chunk) + state_shape)
+    # scan over chunks (time-major for scan axis 0).
+    d_c = jnp.moveaxis(d_c, 1, 0)
+    u_c = jnp.moveaxis(u_c, 1, 0)
+
+    def step(h, inputs):
+        d, uu = inputs                                   # (B, chunk, *S)
+        dd, uu_acc = jax.lax.associative_scan(
+            _assoc_combine, (d, uu), axis=1)
+        h_all = dd * h[:, None] + uu_acc                 # (B, chunk, *S)
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(step, h0, (d_c, u_c))
+    h_seq = jnp.moveaxis(h_chunks, 0, 1).reshape(
+        (B, n_chunks * chunk) + state_shape)
+    return h_seq[:, :T], h_last
+
+
+def _mamba1_fused_scan(dt, A, xc, B_ssm, C_ssm, h0, chunk):
+    """Selective scan with chunk-local materialisation.
+
+    dt/xc: (B,T,Di); A: (Di,N); B/C: (B,T,N); h0: (B,Di,N).
+    Returns (y (B,T,Di), h_T). decay/u exist only at (B,chunk,Di,N);
+    the chunk body is rematted (backward recomputes them).
+    """
+    B, T, Di = dt.shape
+    N = A.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        B_ssm = jnp.pad(B_ssm, ((0, 0), (0, pad), (0, 0)))
+        C_ssm = jnp.pad(C_ssm, ((0, 0), (0, pad), (0, 0)))
+    nc = (T + pad) // chunk
+
+    def c(a):
+        return jnp.moveaxis(
+            a.reshape((B, nc, chunk) + a.shape[2:]), 1, 0)
+
+    def step(h, inp):
+        dt_c, x_c, b_c, c_c = inp            # (B,chunk,...)
+        decay = jnp.exp(dt_c[..., None] * A)             # (B,Q,Di,N)
+        u = (dt_c * x_c)[..., None] * b_c[:, :, None, :]
+        dd, uu = jax.lax.associative_scan(_assoc_combine, (decay, u),
+                                          axis=1)
+        h_all = dd * h[:, None] + uu
+        y_c = jnp.einsum("bqin,bqn->bqi", h_all, c_c)
+        return h_all[:, -1], y_c
+
+    step = jax.checkpoint(step)
+    h_last, y = jax.lax.scan(step, h0, (c(dt), c(xc), c(B_ssm), c(C_ssm)))
+    y = jnp.moveaxis(y, 0, 1).reshape(B, T + pad, Di)[:, :T]
+    return y, h_last
+
+
+# ------------------------------------------------------------- conv1d
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C); w: (K,C); b: (C,)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    return y + b
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Decode-time conv. x_t: (B,C); conv_state: (B,K-1,C)."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return y, window[:, 1:, :]
+
+
+# ------------------------------------------------------------- mamba1
+def mamba1_seq(x: jax.Array, p: dict, d_state: int, dt_rank: int,
+               chunk: int = 128,
+               h0: jax.Array | None = None,
+               conv_state: jax.Array | None = None,
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-sequence Mamba1 mixer.
+
+    x: (B,S,D) — already normed. Returns (y (B,S,D), h_T, conv_tail).
+    """
+    B, S, _ = x.shape
+    xz = constrain_ssm_channels(
+        jnp.einsum("bsd,de->bse", x, p["in_proj"]))
+    x_in, z = jnp.split(xz, 2, axis=-1)                  # (B,S,Di)
+    if conv_state is not None:
+        x_cat = jnp.concatenate([conv_state, x_in], axis=1)
+        x_conv = causal_conv1d(x_cat, p["conv_w"], p["conv_b"])[
+            :, conv_state.shape[1]:]
+    else:
+        x_conv = causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+    x_conv = constrain_ssm_channels(jax.nn.silu(x_conv))
+    # Tail of raw conv inputs, handed to decode as its conv_state.
+    conv_tail = x_in[:, -(p["conv_w"].shape[0] - 1):, :]
+
+    dbc = jnp.einsum("bsi,ie->bse", x_conv, p["x_proj"])
+    dt_raw = dbc[..., :dt_rank]
+    B_ssm = dbc[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    C_ssm = dbc[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_raw, p["dt_proj"])
+        + p["dt_bias"]).astype(jnp.float32)             # (B,S,Di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))        # (Di,N)
+    if h0 is None:
+        h0 = jnp.zeros((B, A.shape[0], d_state), jnp.float32)
+    # Chunk-fused selective scan: decay/u are built *inside* the chunk
+    # loop so the (B,S,Di,N) f32 tensors never materialise at full
+    # sequence length (that cost ~98 GB/device on train_4k); the chunk
+    # body is rematted so backward recomputes instead of stacking.
+    y = _mamba1_fused_scan(dt, A, x_conv.astype(jnp.float32),
+                           B_ssm, C_ssm, h0, chunk)
+    y, h_last = y
+    y = y + x_conv.astype(jnp.float32) * p["ssm_D"]
+    y = constrain_ssm_channels(
+        (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, h_last, conv_tail
+
+
+def mamba1_step(x_t: jax.Array, p: dict, d_state: int, dt_rank: int,
+                h: jax.Array, conv_state: jax.Array,
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step. x_t: (B,D); h: (B,Di,N); conv_state: (B,K-1,Di)."""
+    xz = jnp.einsum("bd,de->be", x_t, p["in_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_conv, conv_state = conv1d_step(x_in, conv_state, p["conv_w"],
+                                     p["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    dbc = jnp.einsum("bi,ie->be", x_conv, p["x_proj"])
+    dt_raw = dbc[..., :dt_rank]
+    B_ssm = dbc[..., dt_rank:dt_rank + d_state].astype(jnp.float32)
+    C_ssm = dbc[..., dt_rank + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(jnp.einsum("br,ri->bi", dt_raw, p["dt_proj"])
+                         + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt[..., None] * A)                  # (B,Di,N)
+    u = (dt * x_conv.astype(jnp.float32))[..., None] * B_ssm[:, None, :]
+    h = decay * h + u
+    y = jnp.einsum("bin,bn->bi", h, C_ssm)
+    y = y + x_conv.astype(jnp.float32) * p["ssm_D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x_t.dtype)
+    return jnp.einsum("bi,id->bd", y, p["out_proj"]), h, conv_state
+
+
+# ------------------------------------------------------------- mamba2
+def _mamba2_split(zxbcdt: jax.Array, d_inner: int, d_state: int,
+                  n_heads: int):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    B_ssm = zxbcdt[..., 2 * d_inner:2 * d_inner + d_state]
+    C_ssm = zxbcdt[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = zxbcdt[..., 2 * d_inner + 2 * d_state:]
+    return z, x, B_ssm, C_ssm, dt
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, A: jax.Array,
+                B_ssm: jax.Array, C_ssm: jax.Array, chunk: int,
+                h0: jax.Array | None = None,
+                ) -> tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD algorithm (matmul/chunked form — MXU-native).
+
+    xh: (B,T,H,P); dt: (B,T,H); A: (H,) negative; B/C: (B,T,N).
+    Returns (y (B,T,H,P), h_T (B,H,P,N)).
+
+    Never materialises per-timestep states: within each chunk of Q
+    steps the output is an attention-like (Q×Q) masked matmul; across
+    chunks only the (B,H,P,N) boundary states flow through a scan.
+    Memory: O(B·T·Q·H + B·nc·H·P·N) instead of O(B·T·H·P·N) — the
+    difference between 0.1 GB and 68 GB per chip at train_4k.
+    """
+    Bb, T, H, Pd = xh.shape
+    N = B_ssm.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ssm = jnp.pad(B_ssm, ((0, 0), (0, pad), (0, 0)))
+        C_ssm = jnp.pad(C_ssm, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc, Q = Tp // chunk, chunk
+
+    def c(a, tail):
+        return a.reshape((Bb, nc, Q) + tail)
+
+    xc = c(xh, (H, Pd))
+    dtc = c(dt, (H,))
+    Bc = c(B_ssm, (N,))
+    Cc = c(C_ssm, (N,))
+    dA = dtc * A                                   # (B,nc,Q,H), negative
+    L = jnp.cumsum(dA, axis=2)                     # log-decay from start
+
+    # Intra-chunk: Y[t] = sum_{s<=t} exp(L_t-L_s)·(C_t·B_s)·dt_s·x_s
+    CB = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)
+    ddecay = jnp.exp(L[:, :, :, None, :] - L[:, :, None, :, :])
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    W = CB[..., None] * ddecay * mask[None, None, :, :, None]
+    xdt = xc * dtc[..., None]                      # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", W, xdt)
+
+    # Chunk-boundary states.
+    decay_to_end = jnp.exp(L[:, :, -1:, :] - L)    # (B,nc,Q,H)
+    S_c = jnp.einsum("bcsn,bcsh,bcshp->bchpn", Bc, decay_to_end, xdt)
+    chunk_decay = jnp.exp(L[:, :, -1, :])          # (B,nc,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, Pd, N), jnp.float32)
+
+    def step(h, inp):
+        s_c, cd = inp                              # (B,H,P,N), (B,H)
+        h_start = h
+        h_end = cd[..., None, None] * h + s_c
+        return h_end, h_start
+
+    (h_last, h_starts) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(S_c, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_starts = jnp.moveaxis(h_starts, 0, 1)        # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cc, jnp.exp(L), h_starts)
+    y = (y_intra + y_inter).reshape(Bb, Tp, H, Pd)
+    return y[:, :T], h_last
+
+
+def mamba2_seq(x: jax.Array, p: dict, d_state: int, head_dim: int,
+               chunk: int = 128, h0: jax.Array | None = None,
+               ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence Mamba2 mixer (SSD chunked form).
+
+    x: (B,S,D). Returns (y (B,S,D), h_T (B,H,P,N)).
+    """
+    from .layers import rms_norm
+    B, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    d_inner = (p["out_proj"].shape[0])
+    H = d_inner // head_dim
+    z, xs, B_ssm, C_ssm, dt = _mamba2_split(zxbcdt, d_inner, d_state, H)
+    xbc = jnp.concatenate([xs, B_ssm, C_ssm], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_inner]
+    B_ssm = xbc[..., d_inner:d_inner + d_state].astype(jnp.float32)
+    C_ssm = xbc[..., d_inner + d_state:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    dt = constrain_ssm_bth(dt)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    xh = xs.reshape(B, S, H, head_dim).astype(jnp.float32)
+    xh = constrain_ssm_bthp(xh)
+    y, h_last = ssd_chunked(xh, dt, A, B_ssm, C_ssm, chunk, h0)
+    y = y + xh * p["ssm_D"][:, None]
+    y = y.reshape(B, S, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), p["gate_norm"])
+    return jnp.einsum("bsi,id->bsd", y, p["out_proj"]), h_last
+
+
+def mamba2_step(x_t: jax.Array, p: dict, d_state: int, head_dim: int,
+                h: jax.Array, conv_state: jax.Array,
+                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Decode step. x_t: (B,D); h: (B,H,P,N); conv_state: (B,K-1,Ci)."""
+    from .layers import rms_norm
+    B = x_t.shape[0]
+    zxbcdt = jnp.einsum("bd,de->be", x_t, p["in_proj"])
+    d_inner = p["out_proj"].shape[0]
+    H = d_inner // head_dim
+    z, xs, B_ssm, C_ssm, dt = _mamba2_split(zxbcdt, d_inner, d_state, H)
+    xbc = jnp.concatenate([xs, B_ssm, C_ssm], axis=-1)
+    xbc, conv_state = conv1d_step(xbc, conv_state, p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_inner]
+    B_ssm = xbc[..., d_inner:d_inner + d_state].astype(jnp.float32)
+    C_ssm = xbc[..., d_inner + d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * A)                                      # (B,H)
+    xh = xs.reshape(B, H, head_dim).astype(jnp.float32)
+    u = (dt[..., None] * xh)[..., None] * B_ssm[:, None, None, :]
+    h = decay[..., None, None] * h + u
+    y = jnp.einsum("bhpn,bn->bhp", h, C_ssm)
+    y = y + xh * p["ssm_D"][:, None]
+    y = y.reshape(B, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x_t.dtype), p["gate_norm"])
+    return jnp.einsum("bi,id->bd", y, p["out_proj"]), h, conv_state

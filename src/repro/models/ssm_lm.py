@@ -1,0 +1,93 @@
+"""Falcon-Mamba-style attention-free LM (Mamba1 stack, scan over layers).
+
+Serve state is O(1) in sequence length: per-layer (ssm_state (B,Di,N),
+conv_state (B,K-1,Di)) — this is why the long_500k cell runs for this
+family while pure-attention archs skip it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import (constrain_boundary,
+                                            constrain_btd,
+                                            constrain_logits)
+
+from .base import ModelConfig
+from .layers import cross_entropy, embed, rms_norm, unembed
+from .ssm import mamba1_seq, mamba1_step
+
+
+def _stack(params: dict) -> dict:
+    return {k.split("/", 1)[1]: v for k, v in params.items()
+            if k.startswith("layers/")}
+
+
+def _head(cfg, params, x):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return unembed(x, table)
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            mrope_pos=None) -> jax.Array:
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
+
+    def body(h, p):
+        h = constrain_boundary(h)
+        y, _, _ = mamba1_seq(rms_norm(h, p["ssm_norm"], cfg.norm_eps),
+                             p, cfg.d_state, cfg.dt_rank, cfg.ssm_chunk)
+        return constrain_boundary(h + y), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, _stack(params))
+    return constrain_logits(_head(cfg, params, x))
+
+
+def train_loss(cfg, params, tokens, labels, mrope_pos=None,
+               aux_weight=0.0):
+    return cross_entropy(forward(cfg, params, tokens), labels)
+
+
+def init_serve_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    ssm = jnp.zeros((L, batch, cfg.d_inner, cfg.d_state), jnp.float32)
+    conv = jnp.zeros((L, batch, cfg.d_conv - 1, cfg.d_inner), dtype)
+    return ssm, conv
+
+
+def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            lora=None, adapter_idx=None):
+    """Returns (last logits (B,V), (ssm_states, conv_states))."""
+    x = embed(tokens, params["embed/tok"])
+
+    def body(h, p):
+        h = constrain_boundary(h)
+        y, h_last, conv_tail = mamba1_seq(
+            rms_norm(h, p["ssm_norm"], cfg.norm_eps), p,
+            cfg.d_state, cfg.dt_rank, cfg.ssm_chunk)
+        return constrain_boundary(h + y), (h_last, conv_tail)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (ssm, conv) = jax.lax.scan(body, x, _stack(params))
+    return _head(cfg, params, x[:, -1:])[:, 0], (ssm, conv)
+
+
+def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                state, cache_len=None, lora=None, adapter_idx=None):
+    """tokens (B,1); state = (ssm (L,B,Di,N), conv (L,B,K-1,Di))."""
+    ssm, conv = state
+    x = embed(tokens, params["embed/tok"])[:, 0]         # (B,D)
+
+    def body(h, xs):
+        p, s, c = xs
+        y, s, c = mamba1_step(rms_norm(h, p["ssm_norm"], cfg.norm_eps),
+                              p, cfg.d_state, cfg.dt_rank, s, c)
+        return h + y, (s, c)
+
+    x, (ssm, conv) = jax.lax.scan(body, x, (_stack(params), ssm, conv))
+    logits = _head(cfg, params, x[:, None])[:, 0]
+    return logits, (ssm, conv)

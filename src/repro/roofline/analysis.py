@@ -1,0 +1,210 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Three terms per (arch × shape × mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs            / (peak_FLOP/s per chip)
+    memory     = HLO_bytes_accessed   / (HBM bytes/s per chip)
+    collective = collective_bytes     / (ICI bytes/s per chip)
+
+cost_analysis() on an SPMD program reports per-device FLOPs/bytes, and
+the collective bytes are parsed per-device from the partitioned HLO
+(hlo_stats), so no further division by chip count is needed. The
+dominant term is the bottleneck; the §Perf loop iterates on it.
+
+MODEL_FLOPS (usefulness check):
+    train:   6·N·D      (N params — active for MoE; D tokens processed)
+    prefill: 2·N·D
+    decode:  2·N·B      (one token per request) + 2·B·KV·kv_bytes-ish
+The ratio MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/padding/
+redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+
+from repro.configs import SHAPE_BY_NAME, get_config
+from repro.models.base import Family
+
+# TPU v5e constants (assignment).
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BPS = 819e9              # bytes/s / chip
+ICI_BPS = 50e9               # bytes/s / link (per-chip effective)
+
+
+def scan_trips(arch: str, shape_name: str) -> int:
+    """Executions of the layer-scan body per step.
+
+    cost_analysis() counts a while body ONCE (verified: useful_ratio ≈
+    n_layers before correction), so FLOPs/bytes are scaled by the scan
+    trip count; collective @loop bytes use the same factor. Micro-
+    batched cells multiply by the accumulation factor (nested scan).
+    """
+    from repro.launch.cases import MICROBATCHES
+    cfg = get_config(arch)
+    kind = SHAPE_BY_NAME[shape_name].kind
+    if cfg.family == Family.MOE:
+        base = cfg.n_layers // cfg.moe_every
+    elif cfg.family == Family.HYBRID:
+        base = cfg.n_layers // cfg.attn_every
+    else:
+        base = cfg.n_layers
+    mb = MICROBATCHES.get(arch, 1)
+    if kind == "train":
+        base *= mb
+    elif kind == "prefill":
+        base *= min(mb, 2)
+    return max(base, 1)
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float          # analytic HBM lower bound (see memory_lb_bytes)
+    memory_hlo_s: float      # raw cost_analysis bytes (upper bound)
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    bytes_per_device: float
+    step_lower_bound_s: float
+    mfu_bound: float         # MODEL_FLOPS / (chips·peak·step_bound)
+
+    def table_row(self) -> dict:
+        return {k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in self.__dict__.items()}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    spec = SHAPE_BY_NAME[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = spec.global_batch * spec.seq_len
+    if spec.kind == "train":
+        return 6.0 * n_active * tokens
+    if spec.kind == "prefill":
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence.
+    return 2.0 * n_active * spec.global_batch
+
+
+def memory_lb_bytes(arch: str, shape_name: str, n_devices: int) -> float:
+    """Analytic per-device HBM-traffic lower bound (bytes/step).
+
+    cost_analysis()'s "bytes accessed" counts logical operand bytes
+    pre-fusion (~100× real HBM traffic), so the memory roofline term
+    uses this physical minimum instead: every resident byte the step
+    must touch at least once — weights (+moments r/w ×2 for train, ×3
+    with gradient), KV/state read+write, activation stream. The raw HLO
+    bytes are still reported as an upper bound.
+    """
+    cfg = get_config(arch)
+    spec = SHAPE_BY_NAME[shape_name]
+    par = cfg.param_count() * 2 / n_devices           # bf16, FSDP (train)
+    # Inference weights shard over TP only (replicated across data) —
+    # except MoE expert weights, which shard over the expert axis too.
+    tp = 16
+    if cfg.family == Family.MOE:
+        inf_par = cfg.param_count() * 2 / min(n_devices, 256)
+    else:
+        inf_par = cfg.param_count() * 2 / tp
+    act_par = (cfg.active_param_count() * 2
+               * (inf_par / (cfg.param_count() * 2)))
+    tokens_dev = spec.global_batch * spec.seq_len / n_devices
+    d = cfg.d_model
+    if spec.kind == "train":
+        # params read + grad write + moments r/w (bf16) + activation
+        # stream (~12 residual-sized reads/writes per layer with remat).
+        weights = par * (1 + 1 + 4)
+        acts = tokens_dev * d * 2 * 12 * max(cfg.n_layers, 1)
+        return weights + acts
+    if spec.kind == "prefill":
+        weights = act_par
+        acts = tokens_dev * d * 2 * 8 * max(cfg.n_layers, 1)
+        kv_write = (2 * cfg.n_layers * cfg.kv_dim * tokens_dev * 2
+                    if cfg.n_kv_heads else 0)
+        return weights + acts + kv_write
+    # decode: stream active params once + read the full KV/state.
+    if cfg.n_kv_heads:
+        kv = (2 * cfg.n_layers * cfg.kv_dim * spec.seq_len
+              * spec.global_batch * 2 / n_devices)
+        if cfg.family == Family.HYBRID:
+            n_sites = cfg.n_layers // cfg.attn_every
+            kv = (2 * n_sites * cfg.kv_dim * spec.seq_len
+                  * spec.global_batch * 2 / n_devices)
+    else:
+        kv = 0.0
+    if cfg.family in (Family.SSM, Family.HYBRID):
+        kv += (cfg.n_layers * cfg.d_inner * max(cfg.d_state, 1) * 4
+               * spec.global_batch / n_devices)
+    return act_par + kv
+
+
+def analyze_cell(rec: dict, n_layers: int) -> RooflineRow | None:
+    if not rec.get("ok"):
+        return None
+    trips = scan_trips(rec["arch"], rec["shape"])
+    # Loop-body correction (see scan_trips): entry-portion FLOPs are
+    # double-counted by the multiplication, making compute/memory terms
+    # slight over-estimates (documented; entry ≤ ~5 % for train/prefill,
+    # larger for decode where the lm_head dominates the entry).
+    flops_dev = rec["cost"].get("flops", 0.0) * trips
+    bytes_dev = rec["cost"].get("bytes_accessed", 0.0) * trips
+    per_op = rec["collectives"]["per_op"]
+    coll_dev = sum(b * (trips if op.endswith("@loop") else 1)
+                   for op, b in per_op.items())
+    compute_s = flops_dev / PEAK_FLOPS
+    mem_lb = memory_lb_bytes(rec["arch"], rec["shape"],
+                             rec["n_devices"]) / HBM_BPS
+    memory_hlo_s = bytes_dev / HBM_BPS
+    coll_s = coll_dev / ICI_BPS
+    dom = max(("compute", compute_s), ("memory", mem_lb),
+              ("collective", coll_s), key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["shape"])
+    total_flops = flops_dev * rec["n_devices"]
+    bound = max(compute_s, mem_lb, coll_s)
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=mem_lb, memory_hlo_s=memory_hlo_s,
+        collective_s=coll_s,
+        dominant=dom, model_flops=mf, hlo_flops_total=total_flops,
+        useful_ratio=mf / total_flops if total_flops else 0.0,
+        bytes_per_device=bytes_dev,
+        step_lower_bound_s=bound,
+        mfu_bound=(mf / (rec["n_devices"] * PEAK_FLOPS * bound)
+                   if bound else 0.0))
+
+
+def analyze_file(path: str, mesh: str = "16x16") -> list[RooflineRow]:
+    with open(path) as f:
+        results = json.load(f)
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("mesh") != mesh or not rec.get("ok"):
+            continue
+        row = analyze_cell(rec, get_config(rec["arch"]).n_layers)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def whats_the_bottleneck(row: RooflineRow) -> str:
+    """One sentence on what would move the dominant term down."""
+    if row.dominant == "compute":
+        if row.useful_ratio < 0.35:
+            return ("compute-bound with low useful ratio: cut remat "
+                    "recompute / padding waste (flash-attention kernel, "
+                    "tighter head sharding)")
+        return ("compute-bound near useful: more chips or lower-precision "
+                "matmuls are the only levers")
+    if row.dominant == "memory":
+        return ("HBM-bound: fuse bandwidth-bound ops (Pallas), shrink "
+                "KV/state dtype (int8 KV), or raise arithmetic intensity "
+                "(larger per-chip batch)")
+    return ("collective-bound: reshard to cut all-gathers (2D weight "
+            "sharding), overlap collectives with compute, or quantise "
+            "gradients (int8 all-reduce)")

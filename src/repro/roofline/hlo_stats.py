@@ -1,0 +1,122 @@
+"""Collective-byte accounting from the compiled (post-SPMD) HLO text.
+
+cost_analysis() has no collective breakdown, so we parse
+``compiled.as_text()`` — the optimized HLO after the SPMD partitioner
+has inserted collectives (the pre-partitioning StableHLO has none).
+
+Per-device wire bytes per op (ring algorithms, k = replica-group size,
+b = result buffer bytes):
+
+    all-reduce          2·b·(k-1)/k
+    all-gather            b·(k-1)/k
+    reduce-scatter        b·(k-1)          (result is the scattered 1/k)
+    all-to-all            b·(k-1)/k
+    collective-permute    b
+
+Loop awareness: collectives inside a ``while`` body execute once per
+trip. HLO text carries no trip counts, so ops in loop bodies are
+tallied separately (``@loop``) and the caller scales them by the known
+scan length (n_layers for scan-over-layers — the only collective-
+carrying loop in this codebase; SSM chunk scans are elementwise).
+Loop bodies are identified from ``body=%name`` on while ops, so
+non-collective fusions never misclassify.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute", "collective-broadcast")
+
+_RESULT_RE = re.compile(
+    r"=\s*(?:\()?([a-z][0-9a-z]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COMP_RE = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->.*\{")
+
+
+def _bytes(dtype: str, dims: str) -> float:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _wire_bytes(op: str, b: float, k: int) -> float:
+    k = max(k, 2)
+    if op == "all-reduce":
+        return 2.0 * b * (k - 1) / k
+    if op == "all-gather":
+        return b * (k - 1) / k
+    if op == "reduce-scatter":
+        return b * (k - 1)
+    if op == "all-to-all":
+        return b * (k - 1) / k
+    return b        # permute / broadcast
+
+
+def collective_bytes_from_text(text: str, n_devices: int = 1) -> dict:
+    """Per-device collective wire bytes from optimized HLO text.
+
+    Returns {per_op: {op[@loop]: bytes}, count, total_bytes} where
+    total_bytes leaves @loop entries UNSCALED — apply
+    ``scaled_collective_bytes`` with the scan trip count.
+    """
+    lines = text.splitlines()
+    loop_bodies: set[str] = set()
+    for line in lines:
+        if " while(" in line:
+            m = _BODY_RE.search(line)
+            if m:
+                loop_bodies.add(m.group(1))
+
+    per_op: dict[str, float] = defaultdict(float)
+    count: dict[str, int] = defaultdict(int)
+    current = ""
+    for line in lines:
+        m = _COMP_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            current = m.group(1)
+            continue
+        hit = None
+        for op in _OPS:
+            if f" {op}(" in line or f" {op}-start(" in line:
+                hit = op
+                break
+        if hit is None:
+            continue
+        mr = _RESULT_RE.search(line)
+        if not mr:
+            continue
+        b = _bytes(mr.group(1), mr.group(2))
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            k = int(mg.group(2))
+        else:
+            mo = _GROUPS_OLD_RE.search(line)
+            k = len(mo.group(1).split(",")) if mo else n_devices
+        wire = _wire_bytes(hit, b, k)
+        key = hit + ("@loop" if current in loop_bodies else "")
+        per_op[key] += wire
+        count[key] += 1
+    return {"per_op": dict(per_op), "count": dict(count),
+            "total_bytes": float(sum(per_op.values()))}
+
+
+def scaled_collective_bytes(coll: dict, n_layers: int) -> float:
+    """Total per-device wire bytes with loop-body ops scaled by the
+    scan trip count (scan-over-layers)."""
+    total = 0.0
+    for op, b in coll["per_op"].items():
+        total += b * (n_layers if op.endswith("@loop") else 1)
+    return total

@@ -1,0 +1,8 @@
+"""Serving runtime: trace synthesis, cost model, simulator, JAX engine."""
+from .cost_model import (A40, A100_80G, TPU_V5E, CostModel, HardwareSpec,
+                         HW_PRESETS, MODEL_PRESETS, ModelSpec)
+from .metrics import RequestRecord, RunMetrics, slo_from_lowload
+from .simulator import LinkChannel, NodeSimulator, SimConfig
+from .systems import SYSTEM_NAMES, NodeConfig, build_node
+from .trace import Trace, TraceConfig, load_azure_csv, synthesize
+from .cluster import Cluster, ClusterConfig, run_cluster

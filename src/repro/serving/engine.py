@@ -1,0 +1,243 @@
+"""JAX serving engine: continuous batching with Chameleon integrated.
+
+This is the *real* data plane (tier 1 in DESIGN §2): a jit'd decode
+step over slot-padded KV caches and LoRA adapter-slot buffers, driven
+by the same ChameleonScheduler / AdapterCache / MemoryPool objects the
+simulator uses. On TPU the LoRA matmuls route to the Pallas bgmv/sgmv
+kernels; on this CPU container the jnp reference path runs (same math).
+
+Static-shape design (TPU-native):
+- ``max_slots`` request slots; inactive slots run masked garbage that is
+  never surfaced (standard TPU continuous batching);
+- KV caches (L, max_slots, max_len, Kh, Dh) written in place per slot;
+- ``n_lora_slots`` adapter-slot buffers; the cache manager's on_load
+  writes adapter weights into a slot (device-side copy), on_evict frees
+  it. Residency decisions stay 100 % in repro.core — this file only
+  moves bytes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (AdapterCache, AdapterInfo, ChameleonScheduler,
+                        MemoryPool, NoisyOraclePredictor, Request,
+                        RequestState, build_adapter_pool)
+from repro.models import api
+from repro.models.base import ModelConfig
+from repro.models.lora_apply import (init_lora_slots, random_lora_weights,
+                                     write_adapter_to_slot)
+
+
+@dataclass
+class EngineConfig:
+    max_slots: int = 8
+    max_len: int = 256
+    n_lora_slots: int = 8
+    r_max: int = 32
+    n_adapters: int = 16
+    predictor_accuracy: float = 0.8
+    seed: int = 0
+
+
+class ChameleonEngine:
+    """Single-host engine over a (small) real model."""
+
+    def __init__(self, cfg: ModelConfig, params: dict,
+                 ecfg: EngineConfig | None = None,
+                 scheduler_cls=ChameleonScheduler, cache_enabled=True):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg or EngineConfig()
+        e = self.ecfg
+        key = jax.random.PRNGKey(e.seed)
+
+        # --- LoRA adapter catalog (host-side weights = "host memory") ---
+        ranks = [cfg.lora_ranks[i % len(cfg.lora_ranks)]
+                 for i in range(e.n_adapters)]
+        ranks = [min(r, e.r_max) for r in ranks]
+        keys = jax.random.split(key, e.n_adapters)
+        self.host_adapters = {
+            aid: random_lora_weights(keys[aid], ranks[aid], e.r_max,
+                                     cfg.n_layers, cfg.d_model,
+                                     cfg.q_dim, cfg.kv_dim)
+            for aid in range(e.n_adapters)}
+        # Device adapter-slot buffers.
+        self.lora = init_lora_slots(key, e.n_lora_slots, cfg.n_layers,
+                                    cfg.d_model, cfg.q_dim, cfg.kv_dim,
+                                    e.r_max)
+        self.slot_of: dict[int, int] = {}       # adapter_id -> lora slot
+        self.free_slots = list(range(e.n_lora_slots))
+
+        # --- memory pool in token units ---
+        kv_token_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
+                          * 2)
+        lora_bytes = {aid: sum(
+            int(np.prod(a.shape) + np.prod(b.shape)) * 2
+            for a, b in self.host_adapters[aid].values())
+            for aid in self.host_adapters}
+        catalog = {aid: AdapterInfo(
+            adapter_id=aid, rank=ranks[aid], size_bytes=lora_bytes[aid],
+            size_tokens=max(1, lora_bytes[aid] // kv_token_bytes))
+            for aid in self.host_adapters}
+        # Capacity: KV slots + room for a few adapters.
+        cap = e.max_slots * e.max_len \
+            + 4 * max(c.size_tokens for c in catalog.values())
+        self.pool = MemoryPool(capacity_tokens=cap)
+        self.cache = AdapterCache(self.pool, catalog,
+                                  enabled=cache_enabled,
+                                  on_load=self._load_adapter,
+                                  on_evict=self._evict_adapter,
+                                  max_entries=e.n_lora_slots)
+        pred = NoisyOraclePredictor(accuracy=e.predictor_accuracy,
+                                    seed=e.seed)
+        self.sched = scheduler_cls(self.pool, self.cache, catalog, pred,
+                                   max_batch_requests=e.max_slots,
+                                   t_refresh=5.0)
+
+        # --- device state ---
+        self.kv = api.init_serve_state(cfg, e.max_slots, e.max_len,
+                                       jnp.float32)
+        self.tokens = jnp.zeros((e.max_slots, 1), jnp.int32)
+        self.cache_len = jnp.zeros((e.max_slots,), jnp.int32)
+        self.active = np.zeros((e.max_slots,), bool)
+        self.adapter_slot = jnp.zeros((e.max_slots,), jnp.int32)
+        self.slot_req: list[Optional[Request]] = [None] * e.max_slots
+        self.t0 = time.monotonic()
+        self.completed: list[Request] = []
+        self.outputs: dict[int, list[int]] = {}
+
+        self._decode_jit = jax.jit(self._decode_fn)
+        self._prefill_jit = jax.jit(self._prefill_fn,
+                                    static_argnames=("S",))
+
+    # ------------------------------------------------------------- clock
+    def now(self) -> float:
+        return time.monotonic() - self.t0
+
+    # ----------------------------------------------------- adapter moves
+    def _load_adapter(self, info: AdapterInfo) -> None:
+        slot = self.free_slots.pop()
+        self.slot_of[info.adapter_id] = slot
+        self.lora = write_adapter_to_slot(
+            self.lora, self.host_adapters[info.adapter_id], slot)
+
+    def _evict_adapter(self, info: AdapterInfo) -> None:
+        slot = self.slot_of.pop(info.adapter_id)
+        self.free_slots.append(slot)
+
+    # ------------------------------------------------------- jit'd steps
+    def _decode_fn(self, params, lora, tokens, kv, cache_len,
+                   adapter_slot):
+        return api.decode_step(self.cfg, params, tokens, kv, cache_len,
+                               lora=lora, adapter_idx=adapter_slot)
+
+    def _prefill_fn(self, params, lora, tokens, adapter_slot, last_pos,
+                    S):
+        del S
+        return api.prefill(self.cfg, params, tokens, lora=lora,
+                           adapter_idx=adapter_slot, last_pos=last_pos)
+
+    # ---------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        self.sched.submit(req, self.now())
+
+    def _place(self, req: Request) -> None:
+        slot = int(np.where(~self.active)[0][0])
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        # Prefill this request alone, right-padded to a power-of-two
+        # bucket (keeps RoPE positions correct and recompiles bounded).
+        S = 1 << max(3, (req.input_len - 1).bit_length())
+        toks = np.zeros((1, S), np.int32)
+        prompt = np.arange(req.input_len) % self.cfg.vocab_size
+        toks[0, :req.input_len] = prompt
+        lslot = self.slot_of[req.adapter_id]
+        lora1 = {k: (a[:, lslot:lslot + 1], b[:, lslot:lslot + 1])
+                 for k, (a, b) in self.lora.items()}
+        logits, kv_new = self._prefill_jit(
+            self.params, lora1, jnp.asarray(toks), jnp.zeros(1, jnp.int32),
+            jnp.asarray([req.input_len - 1]), S)
+        # Write the request's KV into its slot (drop right padding).
+        k_new, v_new = kv_new
+        kseq = k_new[:, 0, :req.input_len]
+        vseq = v_new[:, 0, :req.input_len]
+        k, v = self.kv
+        k = k.at[:, slot, :req.input_len].set(kseq)
+        v = v.at[:, slot, :req.input_len].set(vseq)
+        self.kv = (k, v)
+        first = int(jnp.argmax(logits[0]))
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        self.cache_len = self.cache_len.at[slot].set(req.input_len)
+        self.adapter_slot = self.adapter_slot.at[slot].set(lslot)
+        req.generated = 1
+        req.first_token_time = self.now()
+        self.outputs[req.req_id] = [first]
+        if req.done:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.state = RequestState.FINISHED
+        req.finish_time = self.now()
+        self.sched.on_finish(req, self.now())
+        self.completed.append(req)
+        self.active[slot] = False
+        self.slot_req[slot] = None
+
+    def step(self) -> None:
+        """One engine iteration: admit -> (prefills) -> one decode."""
+        now = self.now()
+        running = [r for r in self.slot_req if r is not None]
+        admitted = self.sched.schedule(now, running)
+        for req in admitted:
+            self._place(req)
+        if not self.active.any():
+            return
+        logits, self.kv = self._decode_jit(
+            self.params, self.lora, self.tokens, self.kv,
+            self.cache_len, self.adapter_slot)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.tokens = nxt[:, None]
+        self.cache_len = self.cache_len + jnp.asarray(self.active,
+                                                      jnp.int32)
+        to_finish, to_squash = [], []
+        for slot in np.where(self.active)[0]:
+            req = self.slot_req[slot]
+            req.generated += 1
+            self.outputs[req.req_id].append(int(nxt[slot]))
+            if req.done or req.generated + req.input_len \
+                    >= self.ecfg.max_len - 1:
+                to_finish.append(slot)
+            elif req.bypassed and req.exceeded_prediction():
+                to_squash.append(slot)
+        for slot in to_finish:
+            self._finish(slot)
+        for slot in to_squash:
+            req = self.slot_req[slot]
+            self.active[slot] = False
+            self.slot_req[slot] = None
+            self.outputs.pop(req.req_id, None)
+            self.sched.on_squash(req, self.now())
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.active.any() and self.sched.pending_count() == 0:
+                break
+            self.step()
+
+    # ---------------------------------------------------------- reporting
+    def stats(self) -> dict:
+        return {
+            "completed": len(self.completed),
+            "cache": self.cache.stats.__dict__.copy(),
+            "bypassed": getattr(self.sched, "n_bypassed", 0),
+            "squashed": getattr(self.sched, "n_squashed", 0),
+            "resident_adapters": sorted(self.cache.resident_ids()),
+        }

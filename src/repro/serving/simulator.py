@@ -1,0 +1,322 @@
+"""Discrete-event simulator of one serving node (DESIGN §2, tier 3).
+
+Replays a trace through the *real* control plane — the same
+ChameleonScheduler / AdapterCache / MemoryPool objects the JAX engine
+uses — while charging time from the calibrated CostModel instead of
+running the model. This is how the paper's production-scale figures
+(Llama-7B, 100 adapters, 6–13 RPS, minutes of wall time) are reproduced
+on a CPU-only container.
+
+Fidelity notes:
+- iteration-level (continuous) batching: one decode iteration advances
+  every running request by one token; finished requests leave, new ones
+  are admitted every iteration boundary (Orca/S-LoRA style);
+- adapter loads serialise on a FIFO host→device link (PCIe contention,
+  paper Fig. 4); prefill of a request cannot start before its load
+  completes; prefetches occupy the same link;
+- squash path: bypassed requests that exceed their predicted length are
+  squashed and re-queued (paper §4.2);
+- reservation growth: requests that exceed their predicted output grow
+  their pool hold token-by-token, shrinking the cache on demand.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core import (AdapterCache, ChameleonScheduler, MemoryPool,
+                        PoolError, QueuedRequestPrefetcher, Request,
+                        RequestState)
+from repro.core.prefetcher import HistogramPrefetcher
+
+from .cost_model import CostModel
+from .metrics import RequestRecord, RunMetrics
+from .trace import Trace
+
+
+class LinkChannel:
+    """FIFO host→device link: transfers serialise (PCIe contention)."""
+
+    def __init__(self, bytes_per_s: float, latency_s: float = 150e-6):
+        self.bps = bytes_per_s
+        self.latency = latency_s
+        self.busy_until = 0.0
+        self.bytes_total = 0
+        self.busy_time = 0.0
+
+    def transfer(self, nbytes: int, now: float) -> float:
+        start = max(now, self.busy_until)
+        dur = self.latency + nbytes / self.bps
+        self.busy_until = start + dur
+        self.bytes_total += nbytes
+        self.busy_time += dur
+        return self.busy_until
+
+
+@dataclass
+class SimConfig:
+    max_iters: int = 2_000_000
+    prefill_chunk_tokens: int = 2048     # max tokens per prefill iteration
+    drain: bool = True                   # run queue dry after last arrival
+    histogram_prefetch: bool = False
+    queued_prefetch: bool = True
+    headroom_tokens: int = 0             # engine slack kept free in the pool
+    # S-LoRA semantics (paper Fig. 1): missing adapters are loaded before
+    # the batch is sent to the GPU — the *engine* stalls on the load.
+    # Chameleon's cache manager is invoked at scheduling time, so loads
+    # overlap with the current iteration and only the affected request
+    # waits (async). Baselines set True.
+    sync_adapter_load: bool = False
+
+
+class NodeSimulator:
+    def __init__(self, cost_model: CostModel, pool: MemoryPool,
+                 cache: AdapterCache, scheduler, adapters: dict,
+                 config: SimConfig | None = None):
+        self.cost = cost_model
+        self.pool = pool
+        self.cache = cache
+        self.sched = scheduler
+        self.adapters = adapters
+        self.cfg = config or SimConfig()
+        self.link = LinkChannel(cost_model.hw.link_bps,
+                                cost_model.link_latency_us * 1e-6)
+        self.now = 0.0
+        self._adapter_ready: dict[int, float] = {}
+        # Wire the cache's load hook to the link channel.
+        cache.on_load = self._on_adapter_load
+        self.q_prefetch = (QueuedRequestPrefetcher(cache)
+                           if self.cfg.queued_prefetch else None)
+        self.h_prefetch = (HistogramPrefetcher(cache)
+                           if self.cfg.histogram_prefetch else None)
+        self._tbt: dict[int, list[float]] = {}
+        self._last_tok: dict[int, float] = {}
+        self._isolated_cache: dict[tuple, float] = {}
+
+    # ------------------------------------------------------------------
+    def _on_adapter_load(self, info) -> None:
+        self._adapter_ready[info.adapter_id] = self.link.transfer(
+            info.size_bytes, self.now)
+
+    def _adapter_ready_time(self, adapter_id: int) -> float:
+        return self._adapter_ready.get(adapter_id, 0.0)
+
+    def _rank(self, adapter_id: int) -> int:
+        return self.adapters[adapter_id].rank
+
+    def _isolated(self, req: Request) -> float:
+        key = (req.input_len, req.output_len, self._rank(req.adapter_id))
+        if key not in self._isolated_cache:
+            self._isolated_cache[key] = self.cost.isolated_time(
+                req.input_len, req.output_len, key[2])
+        return self._isolated_cache[key]
+
+    # ------------------------------------------------------------------
+    def run(self, trace: Trace) -> RunMetrics:
+        arrivals = sorted(trace.requests, key=lambda r: r.arrival_time)
+        n_arr = len(arrivals)
+        ai = 0
+        waiting_load: list[Request] = []     # admitted, adapter in flight
+        prefill_pending: list[Request] = []  # admitted, ready to prefill
+        decoding: list[Request] = []
+        metrics = RunMetrics(n_submitted=n_arr)
+
+        iters = 0
+        while iters < self.cfg.max_iters:
+            iters += 1
+            # 1. Ingest arrivals up to `now`.
+            while ai < n_arr and arrivals[ai].arrival_time <= self.now:
+                req = arrivals[ai]
+                self.sched.submit(req, self.now)
+                if self.h_prefetch:
+                    self.h_prefetch.observe_arrival(req.adapter_id,
+                                                    self.now)
+                ai += 1
+
+            running = decoding + prefill_pending + waiting_load
+            # 2. Admission (scheduler owns the policy).
+            admitted = self.sched.schedule(self.now, running)
+            for req in admitted:
+                ready = self._adapter_ready_time(req.adapter_id)
+                if ready > self.now and not self.cfg.sync_adapter_load:
+                    waiting_load.append(req)
+                else:
+                    prefill_pending.append(req)
+
+            # 3. Prefetch for queued requests (async, consumes link bw).
+            if self.q_prefetch and hasattr(self.sched,
+                                           "queued_requests_in_order"):
+                self.q_prefetch.run(self.sched.queued_requests_in_order(),
+                                    self.now)
+            if self.h_prefetch:
+                self.h_prefetch.run(self.now)
+
+            # 4. Promote loads that completed.
+            still = []
+            for req in waiting_load:
+                ready = self._adapter_ready_time(req.adapter_id)
+                if ready <= self.now:
+                    req.adapter_load_wait = ready - req.arrival_time
+                    prefill_pending.append(req)
+                else:
+                    still.append(req)
+            waiting_load = still
+
+            stepped = False
+            # 5. One prefill iteration (chunked).
+            if prefill_pending:
+                chunk, tok = [], 0
+                for req in list(prefill_pending):
+                    if chunk and tok + req.input_len > \
+                            self.cfg.prefill_chunk_tokens:
+                        break
+                    chunk.append(req)
+                    tok += req.input_len
+                if self.cfg.sync_adapter_load:
+                    # Engine blocks until every chunk member's adapter
+                    # finished loading (S-LoRA batch-launch semantics).
+                    ready = max(self._adapter_ready_time(r.adapter_id)
+                                for r in chunk)
+                    if ready > self.now:
+                        self.now = ready
+                t = self.cost.prefill_time(
+                    [r.input_len for r in chunk],
+                    [self._rank(r.adapter_id) for r in chunk])
+                self.now += t
+                for req in chunk:
+                    prefill_pending.remove(req)
+                    req.first_token_time = self.now
+                    req.generated = 1      # prefill emits the first token
+                    self._last_tok[req.req_id] = self.now
+                    self._tbt[req.req_id] = []
+                    if req.done:
+                        self._finish(req, metrics)
+                    else:
+                        decoding.append(req)
+                stepped = True
+
+            # 6. One decode iteration for the running batch.
+            if decoding:
+                kv_tokens = sum(r.input_len + r.generated for r in decoding)
+                t = self.cost.decode_time(
+                    len(decoding), kv_tokens,
+                    [self._rank(r.adapter_id) for r in decoding])
+                self.now += t
+                finished, squashed = [], []
+                for req in decoding:
+                    req.generated += 1
+                    self._tbt[req.req_id].append(
+                        self.now - self._last_tok[req.req_id])
+                    self._last_tok[req.req_id] = self.now
+                    if req.done:
+                        finished.append(req)
+                        continue
+                    if req.bypassed and req.exceeded_prediction():
+                        squashed.append(req)
+                        continue
+                    if req.generated > req.predicted_output:
+                        self._grow_reservation(req, squashed)
+                for req in finished:
+                    decoding.remove(req)
+                    self._finish(req, metrics)
+                for req in squashed:
+                    if req in decoding:
+                        decoding.remove(req)
+                    self._squash(req)
+                stepped = True
+
+            # 7. Advance the clock when idle.
+            if not stepped:
+                if ai < n_arr:
+                    self.now = max(self.now, arrivals[ai].arrival_time)
+                    continue
+                if not (waiting_load or prefill_pending or decoding
+                        or self.sched.pending_count()):
+                    break
+                if waiting_load:
+                    self.now = max(self.now, min(
+                        self._adapter_ready_time(r.adapter_id)
+                        for r in waiting_load))
+                    continue
+                # Queue non-empty but nothing admitted and nothing runs:
+                # deadlocked admission (should not happen) — bail out.
+                if self.sched.pending_count():
+                    self._force_drain_step()
+                    if self._deadlock_detect():
+                        break
+            if not self.cfg.drain and ai >= n_arr:
+                break
+
+        metrics.horizon = self.now
+        metrics.cache_stats = {
+            "hit_rate": round(self.cache.stats.hit_rate, 4),
+            "hits": self.cache.stats.hits,
+            "misses": self.cache.stats.misses,
+            "evictions": self.cache.stats.evictions,
+            "gb_loaded": round(self.cache.stats.bytes_loaded / 1e9, 3),
+            "link_busy_frac": round(
+                self.link.busy_time / max(self.now, 1e-9), 4),
+        }
+        if isinstance(self.sched, ChameleonScheduler):
+            metrics.sched_stats = {
+                "bypassed": self.sched.n_bypassed,
+                "squashed": self.sched.n_squashed,
+                "queues": len(self.sched.queues),
+            }
+        return metrics
+
+    # ------------------------------------------------------------------
+    _drain_attempts: int = 0
+
+    def _deadlock_detect(self) -> bool:
+        self._drain_attempts += 1
+        return self._drain_attempts > 1000
+
+    def _force_drain_step(self) -> None:
+        """Nothing admitted while idle: nudge time forward so timers
+        (t_refresh, aging) can unblock admission."""
+        self.now += 0.01
+
+    def _grow_reservation(self, req: Request, squashed: list) -> None:
+        """Mispredicted-long request: extend its KV hold by one token."""
+        try:
+            self.pool.grow_request(req.req_id, 1)
+            req.reserved_tokens += 1
+            return
+        except PoolError:
+            pass
+        if self.cache.shrink_for_requests(1, self.now,
+                                          self.sched.queued_adapter_ids()):
+            self.pool.grow_request(req.req_id, 1)
+            req.reserved_tokens += 1
+            return
+        # Last resort: squash *this* over-budget request (it is the one
+        # whose prediction was wrong — same rule the paper applies to
+        # bypassers). Extremely rare with sane pool sizes.
+        squashed.append(req)
+
+    def _squash(self, req: Request) -> None:
+        if hasattr(self.sched, "on_squash"):
+            self.sched.on_squash(req, self.now)
+        self._tbt.pop(req.req_id, None)
+        self._last_tok.pop(req.req_id, None)
+
+    def _finish(self, req: Request, metrics: RunMetrics) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = self.now
+        self.sched.on_finish(req, self.now)
+        tbts = self._tbt.pop(req.req_id, [])
+        self._last_tok.pop(req.req_id, None)
+        iso = self._isolated(req)
+        metrics.records.append(RequestRecord(
+            req_id=req.req_id, adapter_id=req.adapter_id,
+            rank=self._rank(req.adapter_id),
+            input_len=req.input_len, output_len=req.output_len,
+            arrival=req.arrival_time,
+            ttft=req.ttft() or 0.0, e2e=req.e2e() or 0.0,
+            tbt_mean=float(np.mean(tbts)) if tbts else 0.0,
+            tbt_p99=float(np.percentile(tbts, 99)) if tbts else 0.0,
+            slowdown=(req.e2e() or 0.0) / max(iso, 1e-9),
+            squashes=req.squash_count, bypassed=req.bypassed))

@@ -1,0 +1,102 @@
+"""System assembly: build (pool, cache, scheduler, simulator) per design.
+
+Names match the paper's evaluation:
+
+- ``slora``              FIFO, no adapter cache (drop-on-idle), queued prefetch
+- ``userve-sjf``         SJF + aging, no adapter cache
+- ``chameleon``          full design (cache w/ cost-aware eviction + MLQ)
+- ``chameleon-nocache``  scheduler only (ChameleonNoCache in Fig. 10/13)
+- ``chameleon-nosched``  cache only, FIFO   (ChameleonNoSched in Fig. 10)
+- ``chameleon-lru``      full sched + LRU cache          (Fig. 14)
+- ``chameleon-fairshare``full sched + equal-weight cache (Fig. 14)
+- ``chameleon-prefetch`` full design + histogram prefetcher (Fig. 15)
+- ``chameleon-outputonly`` WRS = predicted output only   (Fig. 16)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core import (AdapterCache, ChameleonScheduler, CostAwareEviction,
+                        FairShareEviction, FIFOScheduler, LRUEviction,
+                        MemoryPool, NoisyOraclePredictor, SJFScheduler,
+                        build_adapter_pool, kv_token_bytes)
+from repro.core.wrs import OutputOnlyCalculator
+
+from .cost_model import CostModel, HW_PRESETS, MODEL_PRESETS
+from .simulator import NodeSimulator, SimConfig
+
+SYSTEM_NAMES = ("slora", "userve-sjf", "chameleon", "chameleon-nocache",
+                "chameleon-nosched", "chameleon-lru", "chameleon-fairshare",
+                "chameleon-prefetch", "chameleon-outputonly")
+
+
+@dataclass
+class NodeConfig:
+    hw: str = "a40"
+    model: str = "llama-7b"
+    n_adapters: int = 100
+    predictor_accuracy: float = 0.8
+    slo_ttft_s: float = 5.0            # refined by benchmarks via lowload
+    max_batch_requests: int = 256
+    t_refresh: float = 20.0
+    workspace_frac: float = 0.10       # HBM held back for activations etc.
+    seed: int = 0
+    sim: SimConfig = field(default_factory=SimConfig)
+
+
+def build_node(system: str, cfg: NodeConfig):
+    """Returns (simulator, adapters_catalog, cost_model)."""
+    if system not in SYSTEM_NAMES:
+        raise ValueError(f"unknown system {system!r}; one of {SYSTEM_NAMES}")
+    hw = HW_PRESETS[cfg.hw]
+    model = MODEL_PRESETS[cfg.model]
+    cost = CostModel(hw=hw, model=model)
+
+    tok_bytes = model.kv_bytes_per_token
+    hbm_free = (hw.hbm_gb * 1e9) * (1 - cfg.workspace_frac) \
+        - model.param_bytes
+    if hbm_free <= 0:
+        raise ValueError(f"{model.name} does not fit {hw.name}")
+    capacity_tokens = int(hbm_free // tok_bytes)
+    pool = MemoryPool(capacity_tokens=capacity_tokens)
+
+    adapters = {a.adapter_id: a for a in build_adapter_pool(
+        cfg.n_adapters, model.d_model, model.n_layers, tok_bytes,
+        n_proj=model.n_proj_adapted, dtype_bytes=model.dtype_bytes)}
+
+    cache_enabled = system not in ("slora", "userve-sjf",
+                                   "chameleon-nocache")
+    policy = CostAwareEviction()
+    if system == "chameleon-lru":
+        policy = LRUEviction()
+    elif system == "chameleon-fairshare":
+        policy = FairShareEviction()
+    cache = AdapterCache(pool, adapters, policy=policy,
+                         enabled=cache_enabled)
+
+    pred = NoisyOraclePredictor(accuracy=cfg.predictor_accuracy,
+                                seed=cfg.seed)
+
+    if system in ("slora", "chameleon-nosched"):
+        sched = FIFOScheduler(pool, cache, adapters, pred,
+                              max_batch_requests=cfg.max_batch_requests)
+    elif system == "userve-sjf":
+        sched = SJFScheduler(pool, cache, adapters, pred,
+                             max_batch_requests=cfg.max_batch_requests)
+    else:
+        wrs_calc = (OutputOnlyCalculator()
+                    if system == "chameleon-outputonly" else None)
+        sched = ChameleonScheduler(
+            pool, cache, adapters, pred, wrs_calc=wrs_calc,
+            slo=cfg.slo_ttft_s, t_refresh=cfg.t_refresh,
+            max_batch_requests=cfg.max_batch_requests, seed=cfg.seed)
+
+    sim_cfg = SimConfig(**cfg.sim.__dict__)
+    if system == "chameleon-prefetch":
+        sim_cfg.histogram_prefetch = True
+    if system in ("slora", "userve-sjf"):
+        # Paper Fig. 1: conventional systems load missing adapters before
+        # launching the batch -> the engine stalls on the load.
+        sim_cfg.sync_adapter_load = True
+    sim = NodeSimulator(cost, pool, cache, sched, adapters, sim_cfg)
+    return sim, adapters, cost

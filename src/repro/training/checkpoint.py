@@ -1,0 +1,132 @@
+"""Sharded checkpointing with elastic restore (no orbax offline).
+
+Layout: <dir>/step_<N>/
+    manifest.json      — step, mesh shape/axes, leaf index {path: file,
+                         shape, dtype}, framework version
+    <leaf-hash>.npy    — one file per leaf (full array; on multi-host
+                         each host writes its owned shards — single-host
+                         here, noted)
+
+Restore is *elastic*: arrays are rebuilt with
+``jax.make_array_from_callback`` against whatever mesh/sharding the new
+job provides — the checkpoint stores logical arrays, not device
+layouts, so a 256-chip checkpoint restores onto 192 chips after a node
+failure (DESIGN §5).
+
+``AsyncCheckpointer`` moves serialisation off the step path: save() on
+a worker thread, ``wait()`` joins before the next save or exit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _leaf_file(path: str) -> str:
+    return hashlib.md5(path.encode()).hexdigest()[:16] + ".npy"
+
+
+def save_checkpoint(directory: str, step: int, trees: dict[str, dict],
+                    extra: dict | None = None) -> str:
+    """trees: {"params": flat dict, "opt": flat dict, ...}."""
+    out = os.path.join(directory, f"step_{step:08d}")
+    tmp = out + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    index = {}
+    for tree_name, tree in trees.items():
+        for path, leaf in tree.items():
+            arr = np.asarray(jax.device_get(leaf))
+            key = f"{tree_name}/{path}"
+            fname = _leaf_file(key)
+            np.save(os.path.join(tmp, fname), arr)
+            index[key] = {"file": fname, "shape": list(arr.shape),
+                          "dtype": str(arr.dtype)}
+    manifest = {"step": step, "index": index, "extra": extra or {},
+                "format_version": 1}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(out):
+        shutil.rmtree(out)
+    os.rename(tmp, out)       # atomic publish
+    return out
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int | None = None,
+                       shardings: dict[str, dict] | None = None,
+                       ) -> tuple[int, dict[str, dict]]:
+    """Returns (step, trees). ``shardings`` optionally maps
+    tree/path -> jax.sharding.Sharding for elastic device placement."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    src = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(src, "manifest.json")) as f:
+        manifest = json.load(f)
+    trees: dict[str, dict] = {}
+    for key, meta in manifest["index"].items():
+        tree_name, path = key.split("/", 1)
+        arr = np.load(os.path.join(src, meta["file"]))
+        sh = (shardings or {}).get(tree_name, {}).get(path)
+        if sh is not None:
+            leaf = jax.make_array_from_callback(
+                arr.shape, sh, lambda idx: arr[idx])
+        else:
+            leaf = jax.numpy.asarray(arr)
+        trees.setdefault(tree_name, {})[path] = leaf
+    return manifest["step"], trees
+
+
+def prune_checkpoints(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Off-step-path checkpointing: device_get happens on call (cheap,
+    async dispatch), file IO on a worker thread."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self.last_path: str | None = None
+
+    def save(self, step: int, trees: dict[str, dict],
+             extra: dict | None = None) -> None:
+        self.wait()
+        host_trees = {name: {k: np.asarray(jax.device_get(v))
+                             for k, v in tree.items()}
+                      for name, tree in trees.items()}
+
+        def work():
+            self.last_path = save_checkpoint(self.directory, step,
+                                             host_trees, extra)
+            prune_checkpoints(self.directory, self.keep)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,178 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates a REDUCED same-family config and runs
+one forward/train step on CPU, asserting output shapes and finiteness.
+Dense/MoE/SSM/hybrid/enc-dec also verify prefill+decode consistency
+against the full forward pass — the strongest cheap correctness check
+for KV-cache/RoPE/state plumbing.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.models import api
+from repro.models.base import Family, param_shapes
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+PAD = 32
+
+
+def _inputs(cfg):
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    kw = {}
+    if cfg.family == Family.ENCDEC:
+        kw["frames"] = jax.random.normal(KEY, (B, cfg.enc_ctx, cfg.d_model),
+                                         jnp.float32)
+    if cfg.mrope:
+        kw["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None], (3, B, S))
+    return tokens, kw
+
+
+def _pad_kv(kv):
+    k, v = kv
+    pad = PAD - S
+    return (jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))))
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Init each reduced arch once per test session."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            over = {}
+            if get_config(arch).family == Family.MOE:
+                over["capacity_factor"] = 8.0   # dropless: exact decode
+            cfg = get_config(arch).reduced(**over)
+            params = api.init_params(cfg, KEY, dtype=jnp.float32)
+            cache[arch] = (cfg, params)
+        return cache[arch]
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_loads(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    shapes = param_shapes(cfg)
+    assert shapes, "param shapes must be derivable for the full config"
+    assert cfg.param_count() > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch, built):
+    cfg, params = built(arch)
+    tokens, kw = _inputs(cfg)
+    logits = api.forward(cfg, params, tokens, **kw)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf in logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_loss_finite(arch, built):
+    cfg, params = built(arch)
+    tokens, kw = _inputs(cfg)
+    loss = api.train_loss(cfg, params, tokens, tokens, **kw)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_matches_forward(arch, built):
+    cfg, params = built(arch)
+    tokens, kw = _inputs(cfg)
+    logits = api.forward(cfg, params, tokens, **kw)
+    pkw = dict(kw)
+    if cfg.family == Family.HYBRID:
+        pkw["kv_max_len"] = PAD
+    last, _ = api.prefill(cfg, params, tokens, **pkw)
+    np.testing.assert_allclose(np.asarray(last), np.asarray(logits[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_matches_forward(arch, built):
+    cfg, params = built(arch)
+    tokens, kw = _inputs(cfg)
+    pkw = dict(kw)
+    if cfg.family == Family.HYBRID:
+        pkw["kv_max_len"] = PAD
+    last, state = api.prefill(cfg, params, tokens, **pkw)
+    nxt = jnp.argmax(last, -1)[:, None]
+    dkw = {}
+    cache_len = jnp.full((B,), S)
+    if cfg.family in (Family.DENSE, Family.MOE, Family.VLM):
+        state = _pad_kv(state)
+    if cfg.family == Family.ENCDEC:
+        kv, cross = state
+        state = (_pad_kv(kv), cross)
+    if cfg.mrope:
+        dkw["mrope_pos"] = jnp.broadcast_to(
+            jnp.full((1,), S)[None, None], (3, B, 1))
+    logits2, _ = api.decode_step(cfg, params, nxt, state, cache_len, **dkw)
+    ext = jnp.concatenate([tokens, nxt], 1)
+    fkw = dict(kw)
+    if cfg.mrope:
+        fkw["mrope_pos"] = jnp.broadcast_to(
+            jnp.arange(S + 1)[None, None], (3, B, S + 1))
+    full = api.forward(cfg, params, ext, **fkw)
+    np.testing.assert_allclose(np.asarray(logits2), np.asarray(full[:, -1]),
+                               rtol=5e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_grad_step_finite(arch, built):
+    """One SGD step decreases nothing catastrophic: grads finite."""
+    cfg, params = built(arch)
+    tokens, kw = _inputs(cfg)
+
+    def loss_fn(p):
+        return api.train_loss(cfg, p, tokens, tokens, **kw)
+    grads = jax.grad(loss_fn)(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}"
+
+
+class TestCellGrid:
+    def test_40_cells(self):
+        cells = [(a, s) for (a, s) in
+                 __import__("repro.configs", fromlist=["assigned_cells"]
+                            ).assigned_cells()]
+        assert len(cells) == 40
+
+    def test_long500k_applicability(self):
+        ok, _ = cell_applicable("falcon-mamba-7b", "long_500k")
+        assert ok
+        ok, _ = cell_applicable("zamba2-1.2b", "long_500k")
+        assert ok
+        ok, why = cell_applicable("qwen2.5-32b", "long_500k")
+        assert not ok and "full-attention" in why
+
+    def test_param_counts_sane(self):
+        """Full configs land near their nameplate sizes."""
+        expect = {
+            "llama4-maverick-400b-a17b": (3.5e11, 4.6e11),
+            "qwen3-moe-235b-a22b": (2.0e11, 2.6e11),
+            "zamba2-1.2b": (0.9e9, 1.7e9),
+            "granite-34b": (3.0e10, 4.0e10),
+            "qwen2.5-32b": (2.8e10, 3.7e10),
+            "qwen3-14b": (1.2e10, 1.7e10),
+            "internlm2-1.8b": (1.5e9, 2.3e9),
+            "whisper-base": (5e7, 1.6e8),
+            "qwen2-vl-7b": (6e9, 9e9),
+            "falcon-mamba-7b": (6e9, 8.5e9),
+        }
+        for arch, (lo, hi) in expect.items():
+            n = get_config(arch).param_count()
+            assert lo <= n <= hi, f"{arch}: {n:.3g} not in [{lo:g},{hi:g}]"
+
+    def test_moe_active_params(self):
+        cfg = get_config("llama4-maverick-400b-a17b")
+        active = cfg.active_param_count()
+        assert active < 0.1 * cfg.param_count()
+        assert 1.0e10 < active < 2.5e10   # ~17B active

@@ -1,0 +1,43 @@
+"""Cluster-level routing over Chameleon nodes."""
+import numpy as np
+import pytest
+
+from repro.serving.cluster import run_cluster
+
+
+@pytest.fixture(scope="module")
+def results():
+    out = {}
+    for policy in ("round_robin", "least_loaded", "adapter_affinity"):
+        m, per = run_cluster(policy, rps=48.0, n_nodes=4, duration=90.0)
+        out[policy] = (m, per)
+    return out
+
+
+def test_all_requests_complete(results):
+    for policy, (m, per) in results.items():
+        assert m.completed() == m.n_submitted, policy
+
+
+def test_load_roughly_balanced(results):
+    for policy, (m, per) in results.items():
+        counts = [x.completed() for x in per]
+        assert max(counts) < 2.0 * max(1, min(counts)), (policy, counts)
+
+
+def test_affinity_raises_hit_rate(results):
+    rr = results["round_robin"][0].cache_stats["hit_rate"]
+    af = results["adapter_affinity"][0].cache_stats["hit_rate"]
+    assert af > rr
+
+
+def test_affinity_cuts_link_traffic(results):
+    rr = results["round_robin"][0].cache_stats["gb_loaded"]
+    af = results["adapter_affinity"][0].cache_stats["gb_loaded"]
+    assert af < rr
+
+
+def test_affinity_best_tail_at_high_load(results):
+    p99 = {p: m.p99_ttft() for p, (m, _) in results.items()}
+    assert p99["adapter_affinity"] < 0.7 * p99["round_robin"], p99
+    assert p99["adapter_affinity"] <= 1.2 * p99["least_loaded"], p99

@@ -1,0 +1,115 @@
+"""Unit tests: WRS, K-means queue selection, M/M/1 quotas, predictor."""
+import numpy as np
+import pytest
+
+from repro.core import (HistogramPredictor, NoisyOraclePredictor,
+                        OutputOnlyCalculator, QueueStats, WRSCalculator,
+                        assign_quotas, bucket_of, choose_queues, kmeans_1d,
+                        measure_accuracy, queue_index, tok_min)
+
+
+class TestWRS:
+    def test_paper_weights(self):
+        c = WRSCalculator()
+        assert (c.w.a_input, c.w.b_output, c.w.c_adapter) == (0.3, 0.5, 0.2)
+
+    def test_monotone_in_each_factor(self):
+        c = WRSCalculator(max_input=1000, max_output=1000, max_adapter=1000)
+        base = c.wrs(100, 100, 100)
+        assert c.wrs(200, 100, 100) > base
+        assert c.wrs(100, 200, 100) > base
+        assert c.wrs(100, 100, 200) > base
+
+    def test_bounded_01(self):
+        c = WRSCalculator(max_input=10, max_output=10, max_adapter=10)
+        for i, o, a in [(1, 1, 1), (10, 10, 10), (100, 100, 100)]:
+            assert 0.0 <= c.wrs(i, o, a) <= 1.0 + 1e-9
+
+    def test_output_only_ignores_input_and_adapter(self):
+        def fresh():
+            return OutputOnlyCalculator(max_input=100, max_output=100,
+                                        max_adapter=100)
+        assert fresh().wrs(1, 50, 1) == fresh().wrs(99, 50, 99)
+
+
+class TestKMeans:
+    def test_two_clear_clusters(self):
+        v = np.concatenate([np.random.default_rng(0).normal(0.1, 0.01, 100),
+                            np.random.default_rng(1).normal(0.9, 0.01, 100)])
+        k, cents, cuts = choose_queues(v, k_max=4)
+        assert k >= 2
+        assert len(cuts) == k - 1
+        assert 0.1 < cuts[0] < 0.9
+
+    def test_homogeneous_collapses_to_one_queue(self):
+        v = np.full(100, 0.5) + np.random.default_rng(0).normal(0, 1e-4, 100)
+        k, _, cuts = choose_queues(v, k_max=4)
+        assert k == 1 and len(cuts) == 0
+
+    def test_k_max_respected(self):
+        v = np.random.default_rng(0).uniform(0, 1, 500)
+        k, _, _ = choose_queues(v, k_max=4)
+        assert 1 <= k <= 4
+
+    def test_queue_index_binning(self):
+        cuts = np.array([0.3, 0.6])
+        assert queue_index(0.1, cuts) == 0
+        assert queue_index(0.4, cuts) == 1
+        assert queue_index(0.9, cuts) == 2
+
+    def test_wcss_decreases_with_k(self):
+        v = np.random.default_rng(0).uniform(0, 1, 300)
+        w = [kmeans_1d(v, k)[1] for k in (1, 2, 3, 4)]
+        assert all(w[i] >= w[i + 1] - 1e-9 for i in range(3))
+
+
+class TestQuotas:
+    def test_tok_min_formula(self):
+        q = QueueStats(max_size=100, duration=2.0, arrival_rate=3.0, slo=5.0)
+        assert tok_min(q) == pytest.approx(100 * 2.0 * (1 / 5.0 + 3.0))
+
+    def test_quotas_sum_to_total(self):
+        queues = [QueueStats(50, 1.0, 2.0, 5.0),
+                  QueueStats(500, 4.0, 0.5, 5.0)]
+        quotas = assign_quotas(queues, total_tokens=10000)
+        assert sum(quotas) == 10000
+
+    def test_busier_queue_gets_more(self):
+        queues = [QueueStats(100, 1.0, 10.0, 5.0),
+                  QueueStats(100, 1.0, 0.1, 5.0)]
+        q = assign_quotas(queues, total_tokens=10000)
+        assert q[0] > q[1]
+
+    def test_overload_scales_down(self):
+        queues = [QueueStats(10000, 10.0, 100.0, 1.0),
+                  QueueStats(10000, 10.0, 100.0, 1.0)]
+        q = assign_quotas(queues, total_tokens=1000)
+        assert sum(q) <= 1000 and min(q) >= 1
+
+
+class TestPredictor:
+    def test_perfect_oracle(self):
+        p = NoisyOraclePredictor(accuracy=1.0, seed=0)
+        assert p.predict(10, 0, 123) == 123
+
+    def test_accuracy_is_calibrated(self):
+        for target in (0.6, 0.8):
+            p = NoisyOraclePredictor(accuracy=target, seed=1)
+            rng = np.random.default_rng(2)
+            pairs = [(10, 0, int(rng.integers(1, 512))) for _ in range(3000)]
+            acc = measure_accuracy(p, pairs)
+            assert abs(acc - target) < 0.05, (target, acc)
+
+    def test_histogram_learns_adapter_length(self):
+        p = HistogramPredictor()
+        for _ in range(50):
+            p.observe(adapter_id=1, true_output=100)
+            p.observe(adapter_id=2, true_output=4)
+        assert bucket_of(p.predict(10, 1)) == bucket_of(100)
+        assert bucket_of(p.predict(10, 2)) == bucket_of(4)
+
+    def test_histogram_cold_start_uses_global(self):
+        p = HistogramPredictor()
+        for _ in range(10):
+            p.observe(adapter_id=1, true_output=64)
+        assert bucket_of(p.predict(10, 999)) == bucket_of(64)

@@ -1,0 +1,160 @@
+"""Distribution-layer tests: sharding policy, fit_spec, elastic plans.
+
+These run on the host's single CPU device using small meshes via
+sub-device counts where needed; the full 512-device lowering is
+exercised by launch/dryrun.py (results in results/dryrun.json).
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.elastic import plan_after_failure
+from repro.distributed.sharding import (fit_spec, kv_cache_spec,
+                                        param_spec, param_shardings)
+from repro.models.base import param_shapes
+
+
+def fake_mesh(shape, axes):
+    """Mesh over repeated host devices — for spec logic only (never used
+    to place data)."""
+    dev = np.asarray(jax.devices()[:1] * int(np.prod(shape))
+                     ).reshape(shape)
+    return Mesh(dev, axes)
+
+
+MESH = fake_mesh((16, 16), ("data", "model"))
+MESH3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+class TestFitSpec:
+    def test_divisible_kept(self):
+        assert fit_spec((32, 64), P("data", "model"), MESH) \
+            == P("data", "model")
+
+    def test_non_divisible_dropped(self):
+        assert fit_spec((32, 30), P("data", "model"), MESH) == P("data")
+        assert fit_spec((8, 30), P("data", "model"), MESH) == P()
+
+    def test_tuple_trimmed_left_to_right(self):
+        s = fit_spec((2, 64), P(("pod", "data"), None), MESH3)
+        assert s == P(("pod",))
+
+    def test_batch_one_replicates(self):
+        assert fit_spec((1, 100), P(("pod", "data"), None), MESH3) == P()
+
+    @given(dim=st.integers(1, 4096))
+    @settings(max_examples=50, deadline=None)
+    def test_never_invalid(self, dim):
+        spec = fit_spec((dim,), P("model"), MESH)
+        if spec == P("model"):
+            assert dim % 16 == 0
+        else:
+            assert spec == P()
+
+
+class TestKVSpec:
+    def test_divisible_heads_sharded(self):
+        # 32 kv heads over 16-way model: heads sharded.
+        s = kv_cache_spec(MESH, (38, 128, 32768, 32, 64))
+        assert s == P(None, "data", None, "model")
+
+    def test_mqa_falls_back_to_sequence(self):
+        # 1 kv head (granite): sequence-sharded KV.
+        s = kv_cache_spec(MESH, (88, 128, 32768, 1, 128))
+        assert s == P(None, "data", "model")
+
+    def test_gqa8_over_16_falls_back_to_sequence(self):
+        s = kv_cache_spec(MESH, (64, 128, 32768, 8, 128))
+        assert s == P(None, "data", "model")
+
+
+class TestParamPolicy:
+    @pytest.mark.parametrize("arch", ["qwen3-14b", "qwen3-moe-235b-a22b",
+                                      "falcon-mamba-7b", "whisper-base",
+                                      "zamba2-1.2b"])
+    @pytest.mark.parametrize("kind", ["train", "decode"])
+    def test_all_params_get_valid_specs(self, arch, kind):
+        cfg = get_config(arch)
+        shapes = param_shapes(cfg)
+        sh = param_shardings(cfg, shapes, MESH, kind)
+        for path, s in sh.items():
+            spec = s.spec
+            shape = shapes[path]
+            for dim, entry in zip(shape, list(spec)):
+                if entry is None:
+                    continue
+                axes = entry if isinstance(entry, tuple) else (entry,)
+                prod = 1
+                for a in axes:
+                    prod *= MESH.shape[a]
+                assert dim % prod == 0, (path, shape, spec)
+
+    def test_train_shards_more_than_decode(self):
+        """FSDP: training must shard strictly more parameter bytes."""
+        cfg = get_config("qwen3-14b")
+        shapes = param_shapes(cfg)
+
+        def sharded_fraction(kind):
+            sh = param_shardings(cfg, shapes, MESH, kind)
+            tot = shard = 0
+            for path, s in sh.items():
+                n = int(np.prod(shapes[path]))
+                ways = 1
+                for entry in s.spec:
+                    if entry is None:
+                        continue
+                    for a in (entry if isinstance(entry, tuple)
+                              else (entry,)):
+                        ways *= MESH.shape[a]
+                tot += n
+                shard += n // ways
+            return shard / tot
+        assert sharded_fraction("train") < sharded_fraction("decode")
+
+    def test_expert_weights_sharded_over_data(self):
+        cfg = get_config("qwen3-moe-235b-a22b")
+        shapes = param_shapes(cfg)
+        # Inference: token-parallel experts — E over data, FFN unsharded
+        # (EXPERIMENTS.md §Perf cell B).
+        spec = param_shardings(cfg, shapes, MESH, "decode")["moe/w_gate"].spec
+        assert spec[1] == "data"
+        assert len(spec) == 2 or spec[3] is None
+        # Training keeps Fe tensor-parallel over model.
+        spec_t = param_shardings(cfg, shapes, MESH, "train")["moe/w_gate"].spec
+        assert spec_t[1] == "data"
+        assert "model" in (spec_t[3] if isinstance(spec_t[3], tuple)
+                           else (spec_t[3],))
+
+
+class TestElastic:
+    def test_shrink_data_axis_keeps_model(self):
+        plan = plan_after_failure((16, 16), ("data", "model"),
+                                  surviving_devices=224,
+                                  global_batch=256)
+        assert plan.shape == (14, 16)
+        assert plan.global_batch % 14 == 0
+
+    def test_multipod_shrinks_pod_then_data(self):
+        plan = plan_after_failure((2, 16, 16), ("pod", "data", "model"),
+                                  surviving_devices=300,
+                                  global_batch=256)
+        assert plan.shape[-1] == 16
+        assert plan.n_devices <= 300
+
+    def test_cannot_drop_below_tp(self):
+        with pytest.raises(ValueError):
+            plan_after_failure((16, 16), ("data", "model"),
+                               surviving_devices=8, global_batch=64)
+
+    @given(surv=st.integers(16, 512), batch=st.integers(16, 512))
+    @settings(max_examples=50, deadline=None)
+    def test_plan_always_valid(self, surv, batch):
+        plan = plan_after_failure((16, 16), ("data", "model"), surv,
+                                  batch)
+        assert plan.shape[-1] == 16
+        assert plan.n_devices <= surv
+        data_extent = plan.n_devices // 16
+        assert plan.global_batch % data_extent == 0

@@ -1,0 +1,101 @@
+"""Integration tests: JAX serving engine + Chameleon control plane."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request
+from repro.models import api
+from repro.serving.engine import ChameleonEngine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def make_engine(small_model, **kw):
+    cfg, params = small_model
+    defaults = dict(max_slots=4, max_len=128, n_lora_slots=4,
+                    n_adapters=8, seed=0)
+    defaults.update(kw)
+    return ChameleonEngine(cfg, params, EngineConfig(**defaults))
+
+
+def submit_n(eng, n, seed=0, adapters=8):
+    rng = np.random.default_rng(seed)
+    reqs = [Request(input_len=int(rng.integers(4, 30)),
+                    output_len=int(rng.integers(2, 20)),
+                    adapter_id=int(rng.integers(0, adapters)))
+            for _ in range(n)]
+    for r in reqs:
+        eng.submit(r)
+    return reqs
+
+
+class TestEngine:
+    def test_all_requests_complete(self, small_model):
+        eng = make_engine(small_model)
+        reqs = submit_n(eng, 12)
+        eng.run_until_drained()
+        assert eng.stats()["completed"] == 12
+        for r in reqs:
+            assert r.finish_time is not None
+
+    def test_output_lengths_respected(self, small_model):
+        eng = make_engine(small_model)
+        reqs = submit_n(eng, 6)
+        eng.run_until_drained()
+        for r in reqs:
+            assert r.generated == r.output_len
+
+    def test_cache_hits_on_adapter_reuse(self, small_model):
+        eng = make_engine(small_model, n_adapters=2)
+        submit_n(eng, 10, adapters=2)
+        eng.run_until_drained()
+        st = eng.stats()
+        assert st["cache"]["hits"] > 0
+        assert st["cache"]["misses"] <= 2 + st["cache"]["evictions"]
+
+    def test_adapters_change_model_output(self, small_model):
+        """Same prompt through two adapters must produce different
+        logits — proves the multi-adapter LoRA path is live."""
+        cfg, params = small_model
+        eng = make_engine(small_model)
+        r1 = Request(input_len=12, output_len=6, adapter_id=0)
+        r2 = Request(input_len=12, output_len=6, adapter_id=5)
+        eng.submit(r1)
+        eng.submit(r2)
+        eng.run_until_drained()
+        o1 = eng.outputs[r1.req_id]
+        o2 = eng.outputs[r2.req_id]
+        assert o1 != o2, "different adapters must decode differently"
+
+    def test_same_adapter_same_prompt_deterministic(self, small_model):
+        eng = make_engine(small_model)
+        r1 = Request(input_len=12, output_len=6, adapter_id=3)
+        r2 = Request(input_len=12, output_len=6, adapter_id=3)
+        eng.submit(r1)
+        eng.submit(r2)
+        eng.run_until_drained()
+        assert eng.outputs[r1.req_id] == eng.outputs[r2.req_id]
+
+    def test_more_adapters_than_slots(self, small_model):
+        """Eviction pressure: 8 adapters, 3 slots — must still finish."""
+        eng = make_engine(small_model, n_lora_slots=3)
+        submit_n(eng, 16, adapters=8)
+        eng.run_until_drained()
+        st = eng.stats()
+        assert st["completed"] == 16
+        assert st["cache"]["evictions"] > 0
+        assert len(st["resident_adapters"]) <= 3
+
+    def test_pool_clean_after_drain(self, small_model):
+        eng = make_engine(small_model)
+        submit_n(eng, 8)
+        eng.run_until_drained()
+        eng.pool.check_invariants()
+        assert eng.pool.used_requests == 0

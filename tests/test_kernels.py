@@ -1,0 +1,213 @@
+"""Pallas kernel validation: shape/dtype sweeps vs jnp oracles
+(interpret mode — the kernel body executes on CPU), plus hypothesis
+property tests for the packing/paging helpers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bgmv import bgmv
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.sgmv import pack_segments, sgmv
+
+KEY = jax.random.PRNGKey(7)
+
+
+def tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestBGMV:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("Bt,din,r,dout,n", [
+        (1, 128, 8, 128, 2),
+        (4, 256, 16, 384, 6),
+        (8, 512, 64, 512, 3),
+        (5, 128, 128, 256, 10),     # rank 128 (paper's max)
+    ])
+    def test_matches_ref(self, Bt, din, r, dout, n, dtype):
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (Bt, din), dtype)
+        A = (jax.random.normal(ks[1], (n, din, r)) * 0.05).astype(dtype)
+        B = (jax.random.normal(ks[2], (n, r, dout)) * 0.05).astype(dtype)
+        idx = jax.random.randint(ks[3], (Bt,), 0, n)
+        y = bgmv(x, A, B, idx, out_tile=128, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32),
+            np.asarray(ref.bgmv_ref(x, A, B, idx), np.float32),
+            **tol(dtype))
+
+    def test_all_same_adapter(self):
+        ks = jax.random.split(KEY, 3)
+        x = jax.random.normal(ks[0], (4, 128))
+        A = jax.random.normal(ks[1], (3, 128, 8)) * 0.1
+        B = jax.random.normal(ks[2], (3, 8, 128)) * 0.1
+        idx = jnp.full((4,), 2)
+        y = bgmv(x, A, B, idx, out_tile=128, interpret=True)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray((x @ A[2]) @ B[2]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_zero_adapter_is_identity_delta(self):
+        x = jax.random.normal(KEY, (2, 128))
+        A = jnp.zeros((2, 128, 8))
+        B = jnp.zeros((2, 8, 128))
+        y = bgmv(x, A, B, jnp.zeros(2, jnp.int32), interpret=True)
+        assert float(jnp.abs(y).max()) == 0.0
+
+
+class TestSGMV:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("T,din,r,dout,n,tile", [
+        (128, 128, 8, 128, 2, 64),
+        (256, 128, 8, 256, 5, 64),
+        (512, 256, 32, 384, 4, 128),
+    ])
+    def test_matches_ref(self, T, din, r, dout, n, tile, dtype):
+        ks = jax.random.split(KEY, 4)
+        x = jax.random.normal(ks[0], (T, din), dtype)
+        A = (jax.random.normal(ks[1], (n, din, r)) * 0.05).astype(dtype)
+        B = (jax.random.normal(ks[2], (n, r, dout)) * 0.05).astype(dtype)
+        ts = jax.random.randint(ks[3], (T // tile,), 0, n)
+        y = sgmv(x, A, B, ts, tile=tile, out_tile=128, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32),
+            np.asarray(ref.sgmv_ref(x, A, B, ts, tile), np.float32),
+            **tol(dtype))
+
+    def test_ragged_wrapper_matches_per_request_matmul(self):
+        ks = jax.random.split(KEY, 3)
+        din, r, dout, n = 128, 8, 256, 5
+        seq_lens, slots = [10, 33, 64, 7], [2, 0, 4, 1]
+        x = jax.random.normal(ks[0], (sum(seq_lens), din))
+        A = jax.random.normal(ks[1], (n, din, r)) * 0.05
+        B = jax.random.normal(ks[2], (n, r, dout)) * 0.05
+        y = ops.lora_sgmv(x, A, B, seq_lens, slots, tile=64,
+                          prefer_kernel=True, interpret=True)
+        off, parts = 0, []
+        for L, s in zip(seq_lens, slots):
+            parts.append((x[off:off + L] @ A[s]) @ B[s])
+            off += L
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(jnp.concatenate(parts)),
+                                   rtol=1e-5, atol=1e-5)
+
+    @given(seq_lens=st.lists(st.integers(1, 200), min_size=1, max_size=8),
+           tile=st.sampled_from([32, 64, 128]))
+    @settings(max_examples=30, deadline=None)
+    def test_pack_segments_properties(self, seq_lens, tile):
+        slots = list(range(len(seq_lens)))
+        perm, tile_slot, padded_T = pack_segments(seq_lens, slots, tile)
+        assert padded_T % tile == 0
+        assert len(tile_slot) == padded_T // tile
+        # Every source token appears exactly once.
+        real = perm[perm >= 0]
+        assert sorted(real.tolist()) == list(range(sum(seq_lens)))
+        # No tile spans two adapters.
+        for t in range(padded_T // tile):
+            rows = perm[t * tile:(t + 1) * tile]
+            srcs = rows[rows >= 0]
+            if len(srcs):
+                bounds = np.cumsum([0] + list(seq_lens))
+                owners = np.searchsorted(bounds, srcs, side="right") - 1
+                assert len(set(owners.tolist())) == 1
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,Kh,G,dh,page,P", [
+        (1, 1, 1, 64, 16, 2),
+        (3, 2, 4, 64, 16, 4),
+        (2, 4, 8, 128, 32, 3),
+    ])
+    def test_matches_ref(self, B, Kh, G, dh, page, P, dtype):
+        n_pages = B * P + 4
+        ks = jax.random.split(KEY, 4)
+        q = jax.random.normal(ks[0], (B, Kh, G, dh), dtype)
+        kp = jax.random.normal(ks[1], (n_pages, page, Kh, dh), dtype)
+        vp = jax.random.normal(ks[2], (n_pages, page, Kh, dh), dtype)
+        pt = jax.random.permutation(ks[3], n_pages)[:B * P].reshape(B, P)
+        lens = jnp.asarray(
+            np.random.default_rng(0).integers(1, P * page + 1, B))
+        y = paged_attention(q, kp, vp, pt, lens, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(y, np.float32),
+            np.asarray(ref.paged_attention_ref(q, kp, vp, pt, lens),
+                       np.float32), **tol(dtype))
+
+    def test_single_valid_token_returns_its_value(self):
+        """With length 1, output must equal v of the single token."""
+        B, Kh, G, dh, page, P = 1, 1, 2, 64, 16, 2
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Kh, G, dh))
+        kp = jax.random.normal(ks[1], (4, page, Kh, dh))
+        vp = jax.random.normal(ks[2], (4, page, Kh, dh))
+        pt = jnp.array([[1, 3]])
+        y = paged_attention(q, kp, vp, pt, jnp.array([1]), interpret=True)
+        expect = jnp.broadcast_to(vp[1, 0, 0], (G, dh))
+        np.testing.assert_allclose(np.asarray(y[0, 0]), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_page_table_permutation_invariance(self):
+        """Same logical KV in different physical pages -> same output."""
+        B, Kh, G, dh, page, P = 1, 2, 2, 64, 8, 3
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, Kh, G, dh))
+        kv = jax.random.normal(ks[1], (P * page, Kh, dh))
+        vv = jax.random.normal(ks[2], (P * page, Kh, dh))
+        lens = jnp.array([P * page])
+
+        def layout(order):
+            kp = jnp.zeros((8, page, Kh, dh))
+            vp = jnp.zeros((8, page, Kh, dh))
+            for logical, physical in enumerate(order):
+                kp = kp.at[physical].set(
+                    kv[logical * page:(logical + 1) * page])
+                vp = vp.at[physical].set(
+                    vv[logical * page:(logical + 1) * page])
+            pt = jnp.array([order])
+            return paged_attention(q, kp, vp, pt, lens, interpret=True)
+
+        y1 = layout([0, 1, 2])
+        y2 = layout([5, 2, 7])
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,H,Kh,dh,causal", [
+        (1, 128, 2, 2, 64, True),
+        (2, 256, 4, 2, 64, True),     # GQA G=2
+        (1, 256, 8, 1, 128, True),    # MQA
+        (2, 128, 2, 2, 64, False),
+    ])
+    def test_matches_ref(self, B, S, H, Kh, dh, causal, dtype):
+        from repro.kernels.flash_attention import flash_attention
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, dh), dtype)
+        k = jax.random.normal(ks[1], (B, S, Kh, dh), dtype)
+        v = jax.random.normal(ks[2], (B, S, Kh, dh), dtype)
+        y = flash_attention(q, k, v, causal=causal, q_block=64,
+                            kv_block=64, interpret=True)
+        y_ref = ref.flash_attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(y_ref, np.float32),
+                                   **tol(dtype))
+
+    def test_first_token_attends_only_itself(self):
+        from repro.kernels.flash_attention import flash_attention
+        ks = jax.random.split(KEY, 3)
+        B, S, H, dh = 1, 128, 2, 64
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, H, dh))
+        v = jax.random.normal(ks[2], (B, S, H, dh))
+        y = flash_attention(q, k, v, causal=True, q_block=64,
+                            kv_block=64, interpret=True)
+        np.testing.assert_allclose(np.asarray(y[0, 0]),
+                                   np.asarray(v[0, 0]), rtol=1e-5,
+                                   atol=1e-5)

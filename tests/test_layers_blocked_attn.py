@@ -1,0 +1,75 @@
+"""Query-chunked attention == single-block attention (exactness), and
+HLO collective parser unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models.layers as L
+from repro.roofline.hlo_stats import (collective_bytes_from_text,
+                                      scaled_collective_bytes)
+
+
+class TestBlockedAttention:
+    def test_chunked_equals_unchunked_causal(self, monkeypatch):
+        monkeypatch.setattr(L, "Q_CHUNK_THRESHOLD", 64)
+        monkeypatch.setattr(L, "Q_CHUNK", 64)
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        B, S, H, Kh, dh = 2, 256, 4, 2, 32
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, Kh, dh))
+        v = jax.random.normal(ks[2], (B, S, Kh, dh))
+        y_chunked = L.gqa_attention(q, k, v, causal=True)
+        monkeypatch.setattr(L, "Q_CHUNK_THRESHOLD", 10**9)
+        y_full = L.gqa_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(y_chunked),
+                                   np.asarray(y_full),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_chunked_with_kv_len_mask(self, monkeypatch):
+        monkeypatch.setattr(L, "Q_CHUNK_THRESHOLD", 64)
+        monkeypatch.setattr(L, "Q_CHUNK", 64)
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        B, S, H, dh = 2, 128, 2, 32
+        q = jax.random.normal(ks[0], (B, S, H, dh))
+        k = jax.random.normal(ks[1], (B, S, H, dh))
+        v = jax.random.normal(ks[2], (B, S, H, dh))
+        kv_len = jnp.array([40, 128])
+        y_c = L.gqa_attention(q, k, v, causal=False, kv_len=kv_len)
+        monkeypatch.setattr(L, "Q_CHUNK_THRESHOLD", 10**9)
+        y_f = L.gqa_attention(q, k, v, causal=False, kv_len=kv_len)
+        np.testing.assert_allclose(np.asarray(y_c), np.asarray(y_f),
+                                   rtol=1e-5, atol=1e-5)
+
+
+HLO_SAMPLE = """
+HloModule test
+%body (p: f32[8]) -> f32[8] {
+  %ar = f32[4,128]{1,0} all-reduce(%x), channel_id=1, replica_groups=[4,4]<=[16], to_apply=%add
+}
+%wide.body2 (p: f32[8]) -> f32[8] {
+  %ag = bf16[64,32]{1,0} all-gather(%y), channel_id=2, replica_groups=[8,2]<=[16], dimensions={0}
+}
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %w = f32[4] while(%a), condition=%cond, body=%body
+  %w2 = f32[4] while(%w), condition=%cond2, body=%wide.body2
+  %cp = f32[2,64]{1,0} collective-permute(%z), channel_id=3
+}
+"""
+
+
+class TestHloStats:
+    def test_parses_ops_and_loop_attribution(self):
+        out = collective_bytes_from_text(HLO_SAMPLE, 16)
+        # all-reduce in a loop body: 2·b·(k-1)/k with b=4·128·4, k=4.
+        assert abs(out["per_op"]["all-reduce@loop"]
+                   - 2 * 2048 * 3 / 4) < 1e-6
+        # all-gather in the second loop body: b·(k-1)/k, b=64·32·2, k=2.
+        assert abs(out["per_op"]["all-gather@loop"] - 4096 * 0.5) < 1e-6
+        # permute at entry: full result bytes.
+        assert out["per_op"]["collective-permute"] == 2 * 64 * 4
+
+    def test_loop_scaling(self):
+        out = collective_bytes_from_text(HLO_SAMPLE, 16)
+        total = scaled_collective_bytes(out, n_layers=10)
+        expect = (2 * 2048 * 3 / 4) * 10 + (4096 * 0.5) * 10 + 512
+        assert abs(total - expect) < 1e-6

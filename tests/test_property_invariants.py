@@ -1,0 +1,177 @@
+"""Property-based tests (hypothesis) for system invariants.
+
+The control plane (pool/cache/scheduler) must maintain its invariants
+under *any* interleaving of request arrivals, batch formation steps,
+token generation, and completions — these are the invariants the
+serving engine and simulator rely on.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdapterCache, AdapterInfo, ChameleonScheduler,
+                        MemoryPool, NoisyOraclePredictor, Request,
+                        RequestState)
+from repro.core.kmeans import choose_queues, queue_index
+from repro.core.quotas import QueueStats, assign_quotas
+from repro.serving.cost_model import CostModel
+
+
+def make_world(capacity, adapter_sizes, seed=0):
+    pool = MemoryPool(capacity_tokens=capacity)
+    catalog = {i: AdapterInfo(adapter_id=i, rank=8, size_bytes=s * 100,
+                              size_tokens=s)
+               for i, s in enumerate(adapter_sizes)}
+    cache = AdapterCache(pool, catalog)
+    pred = NoisyOraclePredictor(accuracy=0.8, seed=seed)
+    sched = ChameleonScheduler(pool, cache, catalog, pred,
+                               t_refresh=5.0, refresh_min_samples=8)
+    return pool, cache, sched
+
+
+req_strategy = st.tuples(
+    st.integers(1, 60),      # input_len
+    st.integers(1, 40),      # output_len
+    st.integers(0, 5),       # adapter_id
+)
+
+
+class TestSchedulerInvariants:
+    @given(reqs=st.lists(req_strategy, min_size=1, max_size=60),
+           capacity=st.integers(300, 3000))
+    @settings(max_examples=40, deadline=None)
+    def test_full_lifecycle_conserves_everything(self, reqs, capacity):
+        """Submit all → run scheduling/decode rounds to completion.
+
+        Invariants checked every round:
+          - pool accounting (non-negative, bounded, exact);
+          - per-queue quota usage == sum of outstanding charges;
+          - a request is never in two places;
+          - at drain: zero request holds, zero quota used, all requests
+            FINISHED exactly once.
+        """
+        pool, cache, sched = make_world(capacity, [10, 10, 20, 20, 40, 40])
+        requests = [Request(input_len=i, output_len=o, adapter_id=a,
+                            arrival_time=0.0) for i, o, a in reqs]
+        for r in requests:
+            sched.submit(r, 0.0)
+        running: list[Request] = []
+        finished: list[Request] = []
+        now = 0.0
+        for _ in range(3000):
+            now += 0.1
+            admitted = sched.schedule(now, running)
+            for r in admitted:
+                assert r not in running
+                running.append(r)
+            pool.check_invariants()
+            charged = sum(t for r in running for _, t in r.charges)
+            used = sum(q.used for q in sched.queues)
+            assert used == charged, (used, charged)
+            # one decode round
+            done = []
+            for r in running:
+                r.generated += 1
+                if r.generated >= r.output_len:
+                    done.append(r)
+                elif r.bypassed and r.exceeded_prediction():
+                    done.append(r)   # squash path
+            for r in done:
+                running.remove(r)
+                if r.generated >= r.output_len:
+                    r.state = RequestState.FINISHED
+                    sched.on_finish(r, now)
+                    finished.append(r)
+                else:
+                    sched.on_squash(r, now)
+            if not running and sched.pending_count() == 0:
+                break
+        assert len(finished) == len(requests)
+        assert pool.used_requests == 0
+        assert sum(q.used for q in sched.queues) == 0
+        pool.check_invariants()
+
+    @given(reqs=st.lists(req_strategy, min_size=4, max_size=40))
+    @settings(max_examples=25, deadline=None)
+    def test_quota_never_negative_and_bounded(self, reqs):
+        pool, cache, sched = make_world(2000, [10] * 6)
+        now = 0.0
+        for i, (inp, out, a) in enumerate(reqs):
+            sched.submit(Request(input_len=inp, output_len=out,
+                                 adapter_id=a), now)
+            if i % 3 == 2:
+                sched.maybe_refresh(now)
+                sched.schedule(now, [])
+            now += 1.0
+        for q in sched.queues:
+            assert q.used >= 0
+
+
+class TestCacheInvariants:
+    @given(ops=st.lists(st.tuples(st.sampled_from(["acq", "rel", "pre"]),
+                                  st.integers(0, 4)),
+                        min_size=1, max_size=200))
+    @settings(max_examples=40, deadline=None)
+    def test_random_ops_never_corrupt_pool(self, ops):
+        pool = MemoryPool(capacity_tokens=100)
+        catalog = {i: AdapterInfo(adapter_id=i, rank=8, size_bytes=2000,
+                                  size_tokens=20) for i in range(5)}
+        cache = AdapterCache(pool, catalog)
+        pinned: dict[int, int] = {}
+        now = 0.0
+        for op, aid in ops:
+            now += 1.0
+            try:
+                if op == "acq":
+                    cache.acquire(aid, now)
+                    pinned[aid] = pinned.get(aid, 0) + 1
+                elif op == "rel" and pinned.get(aid, 0) > 0:
+                    cache.release(aid, now)
+                    pinned[aid] -= 1
+                elif op == "pre":
+                    cache.prefetch(aid, now)
+            except Exception:
+                pass     # PoolError is legal when over-pinned
+            pool.check_invariants()
+            assert pool.used_adapters == cache.resident_tokens()
+            # Pinned adapters must stay resident.
+            for a, c in pinned.items():
+                if c > 0:
+                    assert cache.resident(a), f"pinned {a} evicted!"
+
+
+class TestMathProperties:
+    @given(v=st.lists(st.floats(0.0, 1.0), min_size=2, max_size=300))
+    @settings(max_examples=40, deadline=None)
+    def test_kmeans_cutoffs_partition_the_line(self, v):
+        arr = np.asarray(v)
+        k, cents, cuts = choose_queues(arr, k_max=4)
+        assert 1 <= k <= 4
+        assert len(cuts) == k - 1
+        assert list(cuts) == sorted(cuts)
+        for x in v:
+            assert 0 <= queue_index(x, cuts) < k
+
+    @given(n=st.integers(1, 4),
+           total=st.integers(100, 100000),
+           seed=st.integers(0, 100))
+    @settings(max_examples=40, deadline=None)
+    def test_quotas_partition_budget(self, n, total, seed):
+        rng = np.random.default_rng(seed)
+        queues = [QueueStats(max_size=float(rng.integers(10, 1000)),
+                             duration=float(rng.uniform(0.1, 10)),
+                             arrival_rate=float(rng.uniform(0, 20)),
+                             slo=5.0) for _ in range(n)]
+        q = assign_quotas(queues, total)
+        assert sum(q) == total
+        assert all(x >= 1 for x in q)
+
+    @given(inp=st.integers(1, 2048), out=st.integers(1, 512),
+           rank=st.sampled_from([8, 16, 32, 64, 128]))
+    @settings(max_examples=40, deadline=None)
+    def test_cost_model_monotone(self, inp, out, rank):
+        cm = CostModel()
+        t1 = cm.isolated_time(inp, out, rank)
+        assert t1 > 0
+        assert cm.isolated_time(inp + 64, out, rank) >= t1
+        assert cm.isolated_time(inp, out + 16, rank) >= t1
+        assert cm.isolated_ttft(inp, 128) >= cm.isolated_ttft(inp, 8)

@@ -1,0 +1,116 @@
+"""Integration tests: trace synthesis + DES + paper-claim directionality."""
+import numpy as np
+import pytest
+
+from repro.serving import (NodeConfig, TraceConfig, build_node, synthesize)
+
+
+def run(system, rps=10.0, seed=1, duration=60.0, **trace_kw):
+    sim, adapters, cost = build_node(system, NodeConfig())
+    trace = synthesize(TraceConfig(rps=rps, duration_s=duration, seed=seed,
+                                   **trace_kw), list(adapters.values()))
+    return sim.run(trace), sim, trace
+
+
+class TestTrace:
+    def test_deterministic(self):
+        _, _, t1 = run("slora", seed=3)
+        _, _, t2 = run("slora", seed=3)
+        assert [r.input_len for r in t1.requests] == \
+               [r.input_len for r in t2.requests]
+        assert [r.adapter_id for r in t1.requests] == \
+               [r.adapter_id for r in t2.requests]
+
+    def test_rps_calibration(self):
+        _, _, t = run("slora", rps=8.0, duration=120.0)
+        assert abs(t.rps_realised() - 8.0) < 1.0
+
+    def test_powerlaw_rank_popularity(self):
+        _, sim, t = run("slora", rps=10.0, duration=120.0)
+        ranks = [sim.adapters[r.adapter_id].rank for r in t.requests]
+        counts = {rk: ranks.count(rk) for rk in (8, 128)}
+        assert counts[8] > 5 * counts[128], counts
+
+    def test_heavy_tail_outputs(self):
+        _, _, t = run("slora", rps=10.0, duration=120.0)
+        outs = np.array([r.output_len for r in t.requests])
+        assert np.percentile(outs, 99) > 4 * np.median(outs)
+
+
+class TestSimulator:
+    def test_all_requests_complete(self):
+        m, _, t = run("chameleon", rps=8.0)
+        assert m.completed() == t.n
+
+    def test_deterministic_metrics(self):
+        m1, _, _ = run("chameleon", rps=8.0, seed=5)
+        m2, _, _ = run("chameleon", rps=8.0, seed=5)
+        assert m1.p99_ttft() == m2.p99_ttft()
+        assert m1.p50_ttft() == m2.p50_ttft()
+
+    def test_pool_drains_clean(self):
+        m, sim, _ = run("chameleon", rps=8.0)
+        sim.pool.check_invariants()
+        assert sim.pool.used_requests == 0   # all reservations returned
+
+    def test_ttft_includes_queueing(self):
+        m, _, _ = run("slora", rps=12.0)
+        assert m.p99_ttft() > m.p50_ttft() > 0
+
+    @pytest.mark.parametrize("system", ["slora", "userve-sjf", "chameleon",
+                                        "chameleon-nocache",
+                                        "chameleon-nosched",
+                                        "chameleon-lru",
+                                        "chameleon-fairshare",
+                                        "chameleon-prefetch",
+                                        "chameleon-outputonly"])
+    def test_every_system_runs(self, system):
+        m, _, t = run(system, rps=6.0, duration=30.0)
+        assert m.completed() == t.n
+        assert np.isfinite(m.p99_ttft())
+
+
+class TestPaperDirectionality:
+    """The paper's qualitative claims, as regression guards."""
+
+    def test_chameleon_beats_slora_tail_at_high_load(self):
+        m_s, _, _ = run("slora", rps=12.0, duration=120.0)
+        m_c, _, _ = run("chameleon", rps=12.0, duration=120.0)
+        assert m_c.p99_ttft() < 0.5 * m_s.p99_ttft(), (
+            m_c.p99_ttft(), m_s.p99_ttft())
+
+    def test_chameleon_beats_slora_median_at_high_load(self):
+        m_s, _, _ = run("slora", rps=12.0, duration=120.0)
+        m_c, _, _ = run("chameleon", rps=12.0, duration=120.0)
+        assert m_c.p50_ttft() < m_s.p50_ttft()
+
+    def test_sjf_starves_long_requests(self):
+        """Fig 13: SJF's tail is *worse* than FIFO's at high load."""
+        m_f, _, _ = run("slora", rps=13.0, duration=120.0)
+        m_j, _, _ = run("userve-sjf", rps=13.0, duration=120.0)
+        assert m_j.p99_ttft() > m_f.p99_ttft()
+
+    def test_sjf_helps_median(self):
+        m_f, _, _ = run("slora", rps=13.0, duration=120.0)
+        m_j, _, _ = run("userve-sjf", rps=13.0, duration=120.0)
+        assert m_j.p50_ttft() < m_f.p50_ttft()
+
+    def test_cache_raises_hit_rate(self):
+        m_s, sim_s, _ = run("slora", rps=10.0, duration=120.0)
+        m_c, sim_c, _ = run("chameleon-nosched", rps=10.0, duration=120.0)
+        assert m_c.cache_stats["hit_rate"] > m_s.cache_stats["hit_rate"]
+
+    def test_cache_cuts_link_traffic(self):
+        m_s, _, _ = run("slora", rps=10.0, duration=120.0)
+        m_c, _, _ = run("chameleon-nosched", rps=10.0, duration=120.0)
+        assert m_c.cache_stats["gb_loaded"] < m_s.cache_stats["gb_loaded"]
+
+    def test_squash_rate_below_5pct(self):
+        m, sim, t = run("chameleon", rps=12.0, duration=120.0)
+        assert sim.sched.n_squashed <= 0.05 * t.n, (
+            f"squashed {sim.sched.n_squashed}/{t.n}")
+
+    def test_low_load_systems_equivalent(self):
+        m_s, _, _ = run("slora", rps=4.0, duration=60.0)
+        m_c, _, _ = run("chameleon", rps=4.0, duration=60.0)
+        assert abs(m_s.p50_ttft() - m_c.p50_ttft()) < 0.05

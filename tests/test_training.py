@@ -1,0 +1,196 @@
+"""Training substrate tests: optimizer, checkpoint, recovery, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.training import (AdamWConfig, AsyncCheckpointer, DataConfig,
+                            Heartbeat, NodeFailure, StragglerDetector,
+                            SyntheticLM, adamw_update,
+                            compress_with_feedback, init_opt_state,
+                            init_train_state, latest_step,
+                            make_train_step, restore_checkpoint,
+                            run_with_recovery, save_checkpoint, schedule)
+
+
+class TestOptimizer:
+    def setup_method(self):
+        self.cfg = AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=100)
+        self.params = {"layers/w": jnp.ones((4, 4)),
+                       "layers/norm": jnp.ones((4,))}
+
+    def test_update_moves_params(self):
+        opt = init_opt_state(self.params, self.cfg)
+        grads = {k: jnp.ones_like(v) for k, v in self.params.items()}
+        new_p, new_s, m = adamw_update(self.params, grads, opt, self.cfg)
+        assert float(jnp.abs(new_p["layers/w"] - 1.0).max()) > 0
+        assert int(new_s["step"]) == 1
+        assert float(m["grad_norm"]) > 0
+
+    def test_clipping_bounds_update(self):
+        opt = init_opt_state(self.params, self.cfg)
+        grads = {k: 1e6 * jnp.ones_like(v) for k, v in self.params.items()}
+        new_p, _, m = adamw_update(self.params, grads, opt, self.cfg)
+        assert np.isfinite(float(new_p["layers/w"].sum()))
+
+    def test_no_decay_on_norms(self):
+        cfg = AdamWConfig(lr=1e-2, weight_decay=10.0, warmup_steps=0)
+        opt = init_opt_state(self.params, cfg)
+        grads = {k: jnp.zeros_like(v) for k, v in self.params.items()}
+        new_p, _, _ = adamw_update(self.params, grads, opt, cfg)
+        np.testing.assert_allclose(np.asarray(new_p["layers/norm"]),
+                                   np.ones(4))        # untouched
+        assert float(new_p["layers/w"].max()) < 1.0   # decayed
+
+    def test_bf16_moments(self):
+        cfg = AdamWConfig(moment_dtype="bfloat16")
+        opt = init_opt_state(self.params, cfg)
+        assert opt["m/layers/w"].dtype == jnp.bfloat16
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                          min_lr_frac=0.1)
+        assert float(schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+
+
+class TestTrainLoop:
+    def test_loss_decreases(self):
+        cfg = get_config("internlm2-1.8b").reduced()
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+        params, opt = init_train_state(cfg, ocfg, jax.random.PRNGKey(0),
+                                       jnp.float32)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=32, global_batch=8))
+        step = jax.jit(make_train_step(cfg, ocfg))
+        losses = []
+        for i in range(30):
+            b = data.batch(i)
+            params, opt, m = step(params, opt,
+                                  {k: jnp.asarray(v) for k, v in b.items()})
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.3
+
+    def test_data_deterministic_and_host_sharded(self):
+        c = DataConfig(vocab_size=64, seq_len=16, global_batch=8,
+                       n_hosts=2, host_id=0)
+        a = SyntheticLM(c).batch(3)
+        b = SyntheticLM(c).batch(3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        other = SyntheticLM(DataConfig(vocab_size=64, seq_len=16,
+                                       global_batch=8, n_hosts=2,
+                                       host_id=1)).batch(3)
+        assert not np.array_equal(a["tokens"], other["tokens"])
+        assert a["tokens"].shape == (4, 16)   # local batch
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        trees = {"params": {"layers/w": jnp.arange(6.0).reshape(2, 3)},
+                 "opt": {"step": jnp.asarray(7)}}
+        save_checkpoint(str(tmp_path), 7, trees, extra={"mesh": [2, 2]})
+        step, out = restore_checkpoint(str(tmp_path))
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(out["params"]["layers/w"]),
+                                      np.arange(6.0).reshape(2, 3))
+
+    def test_latest_and_prune(self, tmp_path):
+        for s in (1, 2, 3, 4):
+            save_checkpoint(str(tmp_path), s,
+                            {"params": {"w": jnp.zeros(2)}})
+        assert latest_step(str(tmp_path)) == 4
+        from repro.training import prune_checkpoints
+        prune_checkpoints(str(tmp_path), keep=2)
+        steps = sorted(os.listdir(tmp_path))
+        assert steps == ["step_00000003", "step_00000004"]
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = AsyncCheckpointer(str(tmp_path))
+        ck.save(5, {"params": {"w": jnp.ones(3)}})
+        ck.wait()
+        step, out = restore_checkpoint(str(tmp_path))
+        assert step == 5
+
+    def test_elastic_restore_with_sharding(self, tmp_path):
+        """Restore onto an explicit (single-device) sharding."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        save_checkpoint(str(tmp_path), 1,
+                        {"params": {"w": jnp.arange(8.0)}})
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        sh = NamedSharding(mesh, P())
+        step, out = restore_checkpoint(
+            str(tmp_path), shardings={"params": {"w": sh}})
+        assert out["params"]["w"].sharding == sh
+
+
+class TestRecovery:
+    def test_recovers_from_injected_failures(self, tmp_path):
+        state = {"x": 0, "restores": 0}
+        saved = {"x": 0, "step": 0}
+        fail_at = {10, 25}
+
+        def train_one(step):
+            if step in fail_at:
+                fail_at.discard(step)
+                raise NodeFailure(host=3)
+            state["x"] += 1
+            return {"loss": 1.0 / (step + 1)}
+
+        def save(step):
+            saved.update(step=step, x=state["x"])
+
+        def restore():
+            state["x"] = saved["x"]
+            state["restores"] += 1
+            return saved["step"]
+
+        out = run_with_recovery(train_one, save, restore, n_steps=40,
+                                checkpoint_every=5)
+        assert out["steps_done"] == 40
+        assert out["recoveries"] == 2
+        assert state["restores"] == 3   # initial + 2 failures
+
+    def test_heartbeat_marks_dead(self):
+        hb = Heartbeat(n_hosts=3, timeout=5.0)
+        hb.beat(0, now=0.0)
+        hb.beat(1, now=0.0)
+        hb.beat(2, now=8.0)
+        assert hb.dead_hosts(now=9.0) == [0, 1]
+
+    def test_straggler_detection(self):
+        sd = StragglerDetector(n_hosts=4, threshold=1.5)
+        for _ in range(10):
+            for h in range(3):
+                sd.observe(h, 1.0)
+            sd.observe(3, 3.0)
+        assert sd.stragglers() == [3]
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_small(self):
+        g = {"w": jnp.asarray(np.random.default_rng(0).normal(
+            size=(64, 64)).astype(np.float32))}
+        _, deq, err = compress_with_feedback(g, None)
+        rel = float(jnp.linalg.norm(deq["w"] - g["w"])
+                    / jnp.linalg.norm(g["w"]))
+        assert rel < 0.02
+
+    def test_error_feedback_accumulates(self):
+        g = {"w": jnp.full((8,), 1e-8, jnp.float32)}   # below 1 quantum
+        _, deq, err = compress_with_feedback(g, None)
+        # Tiny grads quantise to zero; the residual must carry them.
+        assert float(jnp.abs(err["w"]).sum()) > 0
+
+    @given(scale=st.floats(1e-4, 1e3))
+    @settings(max_examples=20, deadline=None)
+    def test_quantize_bounded_error(self, scale):
+        from repro.training.compression import dequantize_int8, quantize_int8
+        g = jnp.asarray(np.random.default_rng(1).normal(
+            size=(128,)).astype(np.float32)) * scale
+        q, s = quantize_int8(g)
+        err = float(jnp.abs(dequantize_int8(q, s) - g).max())
+        assert err <= float(s) * 0.5 + 1e-9
