@@ -5,10 +5,13 @@ arrivals, power-law adapter popularity, 100 adapters) through the
 Chameleon node and the S-LoRA baseline, and prints the paper's headline
 comparison. Uses the calibrated simulator so a 2-minute production
 window runs in seconds of wall time; `--engine` instead drives the real
-JAX engine on a reduced model with a scaled-down trace.
+JAX engine on a reduced model with a scaled-down trace, and `--cluster`
+drives N real engine replicas behind adapter-affinity routing (shared
+AdapterCatalog, per-node cache/scheduler stats — DESIGN §3).
 
     PYTHONPATH=src python examples/serve_manyadapter.py [--rps 12]
     PYTHONPATH=src python examples/serve_manyadapter.py --engine
+    PYTHONPATH=src python examples/serve_manyadapter.py --cluster
 """
 import argparse
 
@@ -65,12 +68,54 @@ def run_engine() -> None:
     print("cache:", eng.stats()["cache"])
 
 
+def run_engine_cluster(n_engines: int) -> None:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.core.lora import build_adapter_pool
+    from repro.models import api
+    from repro.serving.cluster import EngineCluster, EngineClusterConfig
+    from repro.serving.engine import EngineConfig
+    from repro.serving.trace import (TraceConfig, downscale_for_engine,
+                                     synthesize)
+
+    print(f"=== real-engine cluster ({n_engines} replicas, "
+          f"adapter-affinity routing) ===")
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    ecfg = EngineConfig(max_slots=4, max_len=128, n_lora_slots=3,
+                        n_adapters=12)
+    base = synthesize(TraceConfig(rps=12.0, duration_s=4.0,
+                                  n_adapters=ecfg.n_adapters, seed=1),
+                      build_adapter_pool(ecfg.n_adapters, 64, 4, 64))
+    trace = downscale_for_engine(base, ecfg.n_adapters,
+                                 max_input=48, max_output=16)
+    cluster = EngineCluster(cfg, params, ecfg, EngineClusterConfig(
+        n_engines=n_engines, policy="adapter_affinity"))
+    cluster.warmup()
+    merged, per_node = cluster.run(trace.requests)
+    print(f"completed {merged.completed()}/{merged.n_submitted}  "
+          f"p50 TTFT {merged.p50_ttft():.3f}s  "
+          f"p99 TTFT {merged.p99_ttft():.3f}s  "
+          f"hit {merged.cache_stats['hit_rate']:.2f}  "
+          f"adapter loads {merged.cache_stats['misses']}")
+    for i, m in enumerate(per_node):
+        print(f"  node {i}: {m.completed():3d} reqs  "
+              f"p99 TTFT {m.p99_ttft():7.3f}s  "
+              f"hit {m.cache_stats['hit_rate']:.2f}  "
+              f"bypassed {m.sched_stats['bypassed']}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--rps", type=float, default=12.0)
     ap.add_argument("--engine", action="store_true")
+    ap.add_argument("--cluster", action="store_true")
+    ap.add_argument("--n-engines", type=int, default=2)
     args = ap.parse_args()
-    if args.engine:
+    if args.cluster:
+        run_engine_cluster(args.n_engines)
+    elif args.engine:
         run_engine()
     else:
         run_sim(args.rps)

@@ -52,6 +52,18 @@ class BaseScheduler:
     def pending_count(self) -> int:
         raise NotImplementedError
 
+    def queue_pressure(self) -> float:
+        """Routing signal: how loaded is this scheduler's backlog
+        (cluster routers rank replicas by this, DESIGN §3).
+
+        Base implementation: queued request count. Subclasses with a
+        pool add a token-backlog term normalised by capacity.
+        """
+        return float(self.pending_count())
+
+    def queued_requests_in_order(self) -> list[Request]:
+        return []
+
     def queued_adapter_ids(self) -> set[int]:
         return set()
 
@@ -141,6 +153,14 @@ class ChameleonScheduler(BaseScheduler):
         for q in self.queues:
             out.extend(q.reqs)
         return out
+
+    def queue_pressure(self) -> float:
+        """Backlog signal for cluster routing: queued requests plus the
+        quota tokens they would charge, expressed as a fraction of pool
+        capacity (so a few huge requests weigh like many small ones)."""
+        charge = sum(self._charge_tokens(r)
+                     for r in self.queued_requests_in_order())
+        return self.pending_count() + charge / max(1, self.pool.capacity_tokens)
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request, now: float) -> None:

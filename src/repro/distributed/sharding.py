@@ -61,10 +61,13 @@ def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
                 prod *= sz
         if not kept:
             out.append(None)
-        elif len(kept) == 1:
-            out.append(kept[0])
-        else:
+        elif isinstance(entry, tuple) and len(axes) > 1:
+            # A multi-axis tuple stays a tuple even when trimmed to one
+            # axis — ("pod","data") on dim 2 keeps ("pod",) — while a
+            # singleton entry normalises to its scalar form.
             out.append(tuple(kept))
+        else:
+            out.append(kept[0])
     while out and out[-1] is None:
         out.pop()
     return P(*out)

@@ -1,8 +1,16 @@
-"""Serving runtime: trace synthesis, cost model, simulator, JAX engine."""
+"""Serving runtime: trace synthesis, cost model, simulator, JAX engine.
+
+``repro.serving.engine`` (the real JAX data plane) is intentionally not
+imported here: the simulator path stays importable without pulling jax.
+"""
 from .cost_model import (A40, A100_80G, TPU_V5E, CostModel, HardwareSpec,
                          HW_PRESETS, MODEL_PRESETS, ModelSpec)
-from .metrics import RequestRecord, RunMetrics, slo_from_lowload
+from .metrics import (RequestRecord, RunMetrics, merge_metrics,
+                      slo_from_lowload)
 from .simulator import LinkChannel, NodeSimulator, SimConfig
-from .systems import SYSTEM_NAMES, NodeConfig, build_node
-from .trace import Trace, TraceConfig, load_azure_csv, synthesize
-from .cluster import Cluster, ClusterConfig, run_cluster
+from .systems import (ENGINE_SYSTEMS, SYSTEM_NAMES, NodeConfig,
+                      build_engine, build_node)
+from .trace import (Trace, TraceConfig, downscale_for_engine,
+                    load_azure_csv, synthesize)
+from .cluster import (POLICIES, Cluster, ClusterConfig, EngineCluster,
+                      EngineClusterConfig, Router, run_cluster)

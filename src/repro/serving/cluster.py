@@ -1,39 +1,136 @@
 """Cluster-level routing over Chameleon nodes (paper §6: node-level
 Chameleon composes with cluster schedulers like Llumnix/dLoRA).
 
-A ``Cluster`` owns N independent NodeSimulators (each with its own
-pool/cache/scheduler) and a routing policy that assigns arriving
-requests to nodes:
+Two data planes share one routing brain (DESIGN §3):
 
-- ``round_robin``       — baseline;
-- ``least_loaded``      — fewest outstanding requests;
-- ``adapter_affinity``  — prefer the node where the request's adapter
-  is (or was recently) resident, falling back to least-loaded when the
-  affinity target is overloaded. This is the cluster policy the
-  Chameleon cache makes profitable: affinity concentrates an adapter's
-  requests where its weights already live, raising hit rates without
-  the load-imbalance trap (the fallback bound) the paper warns about
-  for dLoRA-style clustering.
+- ``Cluster``        — N independent NodeSimulators (DES, calibrated
+  cost model): production-scale traffic in seconds of wall time;
+- ``EngineCluster``  — N real ``ChameleonEngine`` replicas (jit'd
+  prefill/decode on real tokens) sharing one ``AdapterCatalog``, so
+  the paper's cluster story is exercised against real batched
+  execution, not only the simulator.
 
-The DES runs nodes independently (no cross-node migration — the paper
-treats migration as out of scope) and merges metrics.
+Routing policies (``Router``):
+
+- ``round_robin`` / ``random``  — baselines;
+- ``least_loaded``              — lowest queue-pressure signal;
+- ``adapter_affinity``          — prefer a node where the request's
+  adapter is (or was recently) resident; first-touch adapters place on
+  the least-loaded node; a *consistent hash* (rendezvous) of the
+  adapter id is the fallback whenever no load feed is available, so
+  routing stays deterministic and cache-friendly even when the
+  frontend cannot scrape queue depths; when the affinity target is
+  overloaded relative to the least-loaded node, spill to least-loaded
+  (the bounded fallback that avoids dLoRA's imbalance trap). Affinity
+  is the cluster policy the Chameleon cache makes profitable: it
+  raises hit rates and cuts host->device adapter traffic without
+  load-imbalance pathologies.
+
+Nodes run independently (no cross-node migration — the paper treats
+migration as out of scope) and metrics merge via
+``metrics.merge_metrics``.
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 import numpy as np
 
-from .metrics import RunMetrics
+from .metrics import RunMetrics, merge_metrics
 from .systems import NodeConfig, build_node
 from .trace import Trace, TraceConfig, synthesize
 
+POLICIES = ("round_robin", "random", "least_loaded", "adapter_affinity")
 
+
+def _stable_hash(key: str) -> int:
+    return int.from_bytes(hashlib.md5(key.encode()).digest()[:8], "big")
+
+
+class Router:
+    """Routing policy shared by the DES cluster and the engine cluster.
+
+    The caller supplies, per decision, the live per-node load signal
+    (queue pressure) and optionally per-node residency of the request's
+    adapter; the router owns only policy state (RR counter, RNG,
+    affinity hints, rendezvous hash).
+    """
+
+    def __init__(self, policy: str, n_nodes: int,
+                 overload_factor: float = 1.5, seed: int = 0):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.policy = policy
+        self.n = n_nodes
+        self.overload_factor = overload_factor
+        self.rng = np.random.default_rng(seed)
+        self._rr = 0
+        self._hint: dict[int, int] = {}         # adapter -> last node
+
+    def _hash_node(self, adapter_id: int, nodes=None) -> int:
+        """Rendezvous (highest-random-weight) hash: deterministic,
+        uniform, and adding/removing a node only remaps ~1/N adapters."""
+        nodes = range(self.n) if nodes is None else nodes
+        return max(nodes,
+                   key=lambda nd: _stable_hash(f"a{adapter_id}:n{nd}"))
+
+    def route(self, adapter_id: int, loads=None,
+              resident=None) -> int:
+        """Pick a node.
+
+        ``loads``: per-node queue-pressure signal, or None when the
+        frontend has no load feed (then affinity degrades to pure
+        consistent hashing — still deterministic and cache-friendly);
+        ``resident``: optional per-node bool, adapter currently cached.
+        """
+        if self.policy == "round_robin":
+            node = self._rr
+            self._rr = (self._rr + 1) % self.n
+            return node
+        if self.policy == "random":
+            return int(self.rng.integers(0, self.n))
+        if loads is not None:
+            loads = np.asarray(loads, dtype=float)
+            least = int(np.argmin(loads))
+        elif self.policy == "least_loaded":
+            raise ValueError("least_loaded routing needs a load signal")
+        # adapter_affinity: live residency beats the stale hint beats
+        # load-based (or hash-based, without a load feed) placement.
+        if self.policy == "least_loaded":
+            return least
+        target = None
+        if resident is not None:
+            res_nodes = [i for i, r in enumerate(resident) if r]
+            if res_nodes:
+                target = (min(res_nodes, key=lambda i: loads[i])
+                          if loads is not None
+                          else self._hash_node(adapter_id, res_nodes))
+        if target is None:
+            target = self._hint.get(adapter_id)
+        if target is None:
+            # First touch: the adapter is resident nowhere, so there is
+            # no locality to honour — place by load when we can see it,
+            # by consistent hash when we cannot.
+            target = least if loads is not None \
+                else self._hash_node(adapter_id)
+        if loads is not None and loads[target] \
+                > self.overload_factor * max(1.0, loads[least]):
+            # Affinity target overloaded: spill and move the hint
+            # (dLoRA's imbalance trap, bounded).
+            target = least
+        self._hint[adapter_id] = target
+        return target
+
+
+# ===================================================================
+# Simulator-backed cluster (DES nodes, calibrated cost model)
+# ===================================================================
 @dataclass
 class ClusterConfig:
     n_nodes: int = 4
     system: str = "chameleon"
-    policy: str = "adapter_affinity"   # round_robin | least_loaded | ...
+    policy: str = "adapter_affinity"   # see POLICIES
     affinity_overload_factor: float = 1.5
     node: NodeConfig = field(default_factory=NodeConfig)
 
@@ -49,32 +146,10 @@ class Cluster:
             sim, adapters, cost = build_node(cfg.system, node_cfg)
             self.nodes.append(sim)
             self.adapters = adapters
-        self._rr = 0
-        self._affinity: dict[int, int] = {}     # adapter -> node hint
+        self.router = Router(cfg.policy, cfg.n_nodes,
+                             cfg.affinity_overload_factor,
+                             seed=cfg.node.seed)
         self._outstanding = np.zeros(cfg.n_nodes, int)
-
-    # ---------------------------------------------------------- routing
-    def _route(self, req) -> int:
-        n = self.cfg.n_nodes
-        if self.cfg.policy == "round_robin":
-            self._rr = (self._rr + 1) % n
-            return self._rr
-        if self.cfg.policy == "least_loaded":
-            return int(np.argmin(self._outstanding))
-        # adapter_affinity
-        hint = self._affinity.get(req.adapter_id)
-        least = int(np.argmin(self._outstanding))
-        if hint is None:
-            self._affinity[req.adapter_id] = least
-            return least
-        if (self._outstanding[hint]
-                > self.cfg.affinity_overload_factor
-                * max(1, self._outstanding[least])):
-            # Affinity target overloaded: spill and move the hint
-            # (dLoRA's imbalance trap, bounded).
-            self._affinity[req.adapter_id] = least
-            return least
-        return hint
 
     # ------------------------------------------------------------- run
     def run(self, trace: Trace) -> tuple[RunMetrics, list[RunMetrics]]:
@@ -95,28 +170,18 @@ class Cluster:
                 while h and h[0] <= req.arrival_time:
                     heapq.heappop(h)
                     self._outstanding[i] -= 1
-            node = self._route(req)
+            node = self.router.route(req.adapter_id, self._outstanding)
             per_node[node].append(req)
             self._outstanding[node] += 1
             est_service = 1.0 + 0.01 * req.output_len
             heapq.heappush(finish_heaps[node],
                            req.arrival_time + est_service)
 
-        merged = RunMetrics(n_submitted=trace.n)
         node_metrics = []
         for sim, reqs in zip(self.nodes, per_node):
             sub = Trace(requests=reqs, config=trace.config)
-            m = sim.run(sub)
-            node_metrics.append(m)
-            merged.records.extend(m.records)
-            merged.horizon = max(merged.horizon, m.horizon)
-        hits = sum(s.cache.stats.hits for s in self.nodes)
-        misses = sum(s.cache.stats.misses for s in self.nodes)
-        merged.cache_stats = {
-            "hit_rate": hits / max(hits + misses, 1),
-            "gb_loaded": sum(s.cache.stats.bytes_loaded
-                             for s in self.nodes) / 1e9,
-        }
+            node_metrics.append(sim.run(sub))
+        merged = merge_metrics(node_metrics, n_submitted=trace.n)
         return merged, node_metrics
 
 
@@ -129,3 +194,151 @@ def run_cluster(policy: str, rps: float, n_nodes: int = 4,
         TraceConfig(rps=rps, duration_s=duration, seed=seed),
         list(cluster.adapters.values()))
     return cluster.run(trace)
+
+
+# ===================================================================
+# Real-engine cluster (N ChameleonEngine replicas, shared catalog)
+# ===================================================================
+@dataclass
+class EngineClusterConfig:
+    n_engines: int = 2
+    system: str = "chameleon"          # see systems.ENGINE_SYSTEMS
+    policy: str = "adapter_affinity"
+    affinity_overload_factor: float = 1.5
+    seed: int = 0
+
+
+class _SharedClock:
+    """Resettable monotonic clock shared by every replica in a cluster."""
+
+    def __init__(self):
+        import time as _time
+        self._time = _time
+        self.t0 = _time.monotonic()
+
+    def reset(self) -> None:
+        self.t0 = self._time.monotonic()
+
+    def __call__(self) -> float:
+        return self._time.monotonic() - self.t0
+
+
+class EngineCluster:
+    """N real JAX engines behind one router, one shared AdapterCatalog.
+
+    Engines share host-side adapter weights (the catalog) and a wall
+    clock, but own private device state — KV caches, adapter-slot
+    buffers, pool/cache/scheduler — exactly like replicas on separate
+    accelerators. The router sees live queue pressure and adapter
+    residency, the signals a real cluster frontend would scrape.
+    """
+
+    def __init__(self, cfg, params, ecfg=None, ccfg=None):
+        from .engine import AdapterCatalog, EngineConfig
+        from .systems import build_engine
+
+        self.ccfg = ccfg or EngineClusterConfig()
+        self.ecfg = ecfg or EngineConfig()
+        self.catalog = AdapterCatalog(cfg, self.ecfg.n_adapters,
+                                      self.ecfg.r_max,
+                                      seed=self.ccfg.seed)
+        self._clock = _SharedClock()
+        self.engines = [
+            build_engine(self.ccfg.system, cfg, params, self.ecfg,
+                         catalog=self.catalog, clock=self._clock)
+            for _ in range(self.ccfg.n_engines)]
+        self.router = Router(self.ccfg.policy, self.ccfg.n_engines,
+                             self.ccfg.affinity_overload_factor,
+                             seed=self.ccfg.seed)
+        self.routed = np.zeros(self.ccfg.n_engines, int)
+        self.n_submitted = 0
+
+    def now(self) -> float:
+        return self._clock()
+
+    def warmup(self) -> None:
+        """Force the dominant jit compiles (decode + one prefill bucket)
+        on every replica, then reset stats and the shared clock so a
+        subsequent replay measures steady-state serving, not XLA
+        compilation. Every replica ends in the same warm state, so
+        policy comparisons stay fair."""
+        from repro.core import Request
+        for e in self.engines:
+            e.submit(Request(input_len=8, output_len=2, adapter_id=0))
+            e.drain()
+            e.reset_stats()
+        self._clock.reset()
+
+    # ------------------------------------------------------------ serve
+    def submit(self, req) -> int:
+        """Route and enqueue; returns the chosen node index."""
+        loads = [e.queue_pressure() for e in self.engines]
+        resident = [e.cache.resident(req.adapter_id)
+                    for e in self.engines]
+        node = self.router.route(req.adapter_id, loads, resident)
+        self.engines[node].submit(req)
+        self.routed[node] += 1
+        self.n_submitted += 1
+        return node
+
+    def step(self) -> None:
+        for e in self.engines:
+            e.step()
+
+    def busy(self) -> bool:
+        return any(e.busy() for e in self.engines)
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if not self.busy():
+                break
+            self.step()
+
+    def run(self, requests, max_steps: int = 100_000,
+            ) -> tuple[RunMetrics, list[RunMetrics]]:
+        """Replay requests against the wall clock: submit each when its
+        ``arrival_time`` passes, stepping all engines in between.
+
+        ``max_steps`` bounds *engine* iterations only; idle gaps
+        between arrivals sleep until the next arrival instead of
+        spinning the budget away.
+        """
+        import time as _time
+        import warnings
+
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        i = 0
+        steps = 0
+        while steps < max_steps:
+            now = self.now()
+            while i < len(pending) and pending[i].arrival_time <= now:
+                self.submit(pending[i])
+                i += 1
+            if not self.busy():
+                if i >= len(pending):
+                    break
+                _time.sleep(min(0.05, max(0.0,
+                            pending[i].arrival_time - self.now())))
+                continue
+            self.step()
+            steps += 1
+        if i < len(pending) or self.busy():
+            warnings.warn(
+                f"EngineCluster.run hit max_steps={max_steps} with "
+                f"{len(pending) - i} unsubmitted and work in flight; "
+                f"metrics cover a truncated run", RuntimeWarning)
+        return self.metrics()
+
+    # --------------------------------------------------------- reporting
+    def metrics(self) -> tuple[RunMetrics, list[RunMetrics]]:
+        per_node = [e.metrics() for e in self.engines]
+        merged = merge_metrics(per_node, n_submitted=self.n_submitted)
+        return merged, per_node
+
+    def stats(self) -> dict:
+        return {
+            "routed": self.routed.tolist(),
+            "adapter_loads": sum(e.cache.stats.misses
+                                 for e in self.engines),
+            "per_engine": [e.stats() for e in self.engines],
+        }

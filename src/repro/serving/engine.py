@@ -14,25 +14,36 @@ Static-shape design (TPU-native):
   writes adapter weights into a slot (device-side copy), on_evict frees
   it. Residency decisions stay 100 % in repro.core — this file only
   moves bytes.
+
+Engine surface (DESIGN §3): ``submit`` is non-blocking (enqueue only),
+``step`` runs one iteration — *batched* prefill admission followed by
+one decode — and ``drain`` runs the queue dry. Prefills admitted in the
+same iteration share one jit'd call over a (B, S) bucket instead of one
+compile-and-launch per request, so TTFT under burst load reflects batch
+admission, not serial prefill launches.
+
+Multi-replica serving shares one ``AdapterCatalog`` (host-side adapter
+weights + size metadata) across engines: replicas differ only in device
+state, never in adapter bytes.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Optional
+from dataclasses import dataclass
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (AdapterCache, AdapterInfo, ChameleonScheduler,
-                        MemoryPool, NoisyOraclePredictor, Request,
-                        RequestState, build_adapter_pool)
+from repro.core import (AdapterCache, AdapterInfo, CacheStats,
+                        ChameleonScheduler, MemoryPool,
+                        NoisyOraclePredictor, Request, RequestState)
 from repro.models import api
 from repro.models.base import ModelConfig
 from repro.models.lora_apply import (init_lora_slots, random_lora_weights,
                                      write_adapter_to_slot)
+from repro.serving.metrics import RequestRecord, RunMetrics
 
 
 @dataclass
@@ -46,12 +57,54 @@ class EngineConfig:
     seed: int = 0
 
 
+class AdapterCatalog:
+    """Host-side LoRA adapter store shared by every engine replica.
+
+    Holds the adapter weights ("host memory" in the paper) and the
+    AdapterInfo metadata the control plane prices residency with. One
+    catalog serves N engines: replicas keep per-device slot buffers but
+    never duplicate the host-side weights (DESIGN §3).
+    """
+
+    def __init__(self, cfg: ModelConfig, n_adapters: int, r_max: int,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.r_max = r_max
+        key = jax.random.PRNGKey(seed)
+        self.ranks = [min(cfg.lora_ranks[i % len(cfg.lora_ranks)], r_max)
+                      for i in range(n_adapters)]
+        keys = jax.random.split(key, n_adapters)
+        self.weights = {
+            aid: random_lora_weights(keys[aid], self.ranks[aid], r_max,
+                                     cfg.n_layers, cfg.d_model,
+                                     cfg.q_dim, cfg.kv_dim)
+            for aid in range(n_adapters)}
+        kv_tok = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim * 2
+        lora_bytes = {aid: sum(
+            int(np.prod(a.shape) + np.prod(b.shape)) * 2
+            for a, b in self.weights[aid].values())
+            for aid in self.weights}
+        self.infos = {aid: AdapterInfo(
+            adapter_id=aid, rank=self.ranks[aid],
+            size_bytes=lora_bytes[aid],
+            size_tokens=max(1, lora_bytes[aid] // kv_tok))
+            for aid in self.weights}
+
+    def __len__(self) -> int:
+        return len(self.weights)
+
+    def rank_of(self, adapter_id: int) -> int:
+        return self.infos[adapter_id].rank
+
+
 class ChameleonEngine:
     """Single-host engine over a (small) real model."""
 
     def __init__(self, cfg: ModelConfig, params: dict,
                  ecfg: EngineConfig | None = None,
-                 scheduler_cls=ChameleonScheduler, cache_enabled=True):
+                 scheduler_cls=ChameleonScheduler, cache_enabled=True,
+                 catalog: AdapterCatalog | None = None,
+                 clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg or EngineConfig()
@@ -59,47 +112,33 @@ class ChameleonEngine:
         key = jax.random.PRNGKey(e.seed)
 
         # --- LoRA adapter catalog (host-side weights = "host memory") ---
-        ranks = [cfg.lora_ranks[i % len(cfg.lora_ranks)]
-                 for i in range(e.n_adapters)]
-        ranks = [min(r, e.r_max) for r in ranks]
-        keys = jax.random.split(key, e.n_adapters)
-        self.host_adapters = {
-            aid: random_lora_weights(keys[aid], ranks[aid], e.r_max,
-                                     cfg.n_layers, cfg.d_model,
-                                     cfg.q_dim, cfg.kv_dim)
-            for aid in range(e.n_adapters)}
-        # Device adapter-slot buffers.
+        self.catalog = catalog or AdapterCatalog(cfg, e.n_adapters,
+                                                 e.r_max, seed=e.seed)
+        self.host_adapters = self.catalog.weights
+        # Device adapter-slot buffers (per replica).
         self.lora = init_lora_slots(key, e.n_lora_slots, cfg.n_layers,
                                     cfg.d_model, cfg.q_dim, cfg.kv_dim,
-                                    e.r_max)
+                                    self.catalog.r_max)
         self.slot_of: dict[int, int] = {}       # adapter_id -> lora slot
         self.free_slots = list(range(e.n_lora_slots))
 
         # --- memory pool in token units ---
-        kv_token_bytes = (2 * cfg.n_layers * cfg.n_kv_heads * cfg.head_dim
-                          * 2)
-        lora_bytes = {aid: sum(
-            int(np.prod(a.shape) + np.prod(b.shape)) * 2
-            for a, b in self.host_adapters[aid].values())
-            for aid in self.host_adapters}
-        catalog = {aid: AdapterInfo(
-            adapter_id=aid, rank=ranks[aid], size_bytes=lora_bytes[aid],
-            size_tokens=max(1, lora_bytes[aid] // kv_token_bytes))
-            for aid in self.host_adapters}
-        # Capacity: KV slots + room for a few adapters.
+        infos = self.catalog.infos
         cap = e.max_slots * e.max_len \
-            + 4 * max(c.size_tokens for c in catalog.values())
+            + 4 * max(c.size_tokens for c in infos.values())
         self.pool = MemoryPool(capacity_tokens=cap)
-        self.cache = AdapterCache(self.pool, catalog,
+        self.cache = AdapterCache(self.pool, infos,
                                   enabled=cache_enabled,
                                   on_load=self._load_adapter,
                                   on_evict=self._evict_adapter,
                                   max_entries=e.n_lora_slots)
         pred = NoisyOraclePredictor(accuracy=e.predictor_accuracy,
                                     seed=e.seed)
-        self.sched = scheduler_cls(self.pool, self.cache, catalog, pred,
-                                   max_batch_requests=e.max_slots,
-                                   t_refresh=5.0)
+        skw = dict(max_batch_requests=e.max_slots)
+        if issubclass(scheduler_cls, ChameleonScheduler):
+            skw["t_refresh"] = 5.0
+        self.sched = scheduler_cls(self.pool, self.cache, infos, pred,
+                                   **skw)
 
         # --- device state ---
         self.kv = api.init_serve_state(cfg, e.max_slots, e.max_len,
@@ -110,8 +149,12 @@ class ChameleonEngine:
         self.adapter_slot = jnp.zeros((e.max_slots,), jnp.int32)
         self.slot_req: list[Optional[Request]] = [None] * e.max_slots
         self.t0 = time.monotonic()
+        self._clock = clock
         self.completed: list[Request] = []
+        self.records: list[RequestRecord] = []
         self.outputs: dict[int, list[int]] = {}
+        self._tbts: dict[int, list[float]] = {}
+        self._last_tok: dict[int, float] = {}
 
         self._decode_jit = jax.jit(self._decode_fn)
         self._prefill_jit = jax.jit(self._prefill_fn,
@@ -119,6 +162,8 @@ class ChameleonEngine:
 
     # ------------------------------------------------------------- clock
     def now(self) -> float:
+        if self._clock is not None:
+            return self._clock()
         return time.monotonic() - self.t0
 
     # ----------------------------------------------------- adapter moves
@@ -146,58 +191,87 @@ class ChameleonEngine:
 
     # ---------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
+        """Non-blocking: enqueue with the scheduler; no device work."""
         self.sched.submit(req, self.now())
 
-    def _place(self, req: Request) -> None:
-        slot = int(np.where(~self.active)[0][0])
-        self.active[slot] = True
-        self.slot_req[slot] = req
-        # Prefill this request alone, right-padded to a power-of-two
-        # bucket (keeps RoPE positions correct and recompiles bounded).
-        S = 1 << max(3, (req.input_len - 1).bit_length())
-        toks = np.zeros((1, S), np.int32)
-        prompt = np.arange(req.input_len) % self.cfg.vocab_size
-        toks[0, :req.input_len] = prompt
-        lslot = self.slot_of[req.adapter_id]
-        lora1 = {k: (a[:, lslot:lslot + 1], b[:, lslot:lslot + 1])
-                 for k, (a, b) in self.lora.items()}
-        logits, kv_new = self._prefill_jit(
-            self.params, lora1, jnp.asarray(toks), jnp.zeros(1, jnp.int32),
-            jnp.asarray([req.input_len - 1]), S)
-        # Write the request's KV into its slot (drop right padding).
-        k_new, v_new = kv_new
-        kseq = k_new[:, 0, :req.input_len]
-        vseq = v_new[:, 0, :req.input_len]
+    def _place_batch(self, reqs: list[Request]) -> None:
+        """Batched prefill admission: one jit'd prefill over a (B, S)
+        bucket covers every request admitted this iteration.
+
+        Right-padding is safe under causal attention (positions past
+        ``last_pos`` never influence the selected logits), and padded
+        batch rows run masked garbage exactly like inactive decode
+        slots. Buckets are powers of two so recompiles stay bounded.
+        """
+        if not reqs:
+            return
+        free = [int(s) for s in np.where(~self.active)[0]]
+        S = 1 << max(3, (max(r.input_len for r in reqs) - 1).bit_length())
+        B = 1 << max(0, (len(reqs) - 1).bit_length())
+        toks = np.zeros((B, S), np.int32)
+        last_pos = np.zeros((B,), np.int32)
+        lslots = np.zeros((B,), np.int32)
+        for i, req in enumerate(reqs):
+            toks[i, :req.input_len] = (np.arange(req.input_len)
+                                       % self.cfg.vocab_size)
+            last_pos[i] = req.input_len - 1
+            lslots[i] = self.slot_of[req.adapter_id]
+        logits, (k_new, v_new) = self._prefill_jit(
+            self.params, self.lora, jnp.asarray(toks),
+            jnp.asarray(lslots), jnp.asarray(last_pos), S)
+        first_toks = np.asarray(jnp.argmax(logits, axis=-1))
         k, v = self.kv
-        k = k.at[:, slot, :req.input_len].set(kseq)
-        v = v.at[:, slot, :req.input_len].set(vseq)
+        now = self.now()
+        for i, req in enumerate(reqs):
+            slot = free[i]
+            self.active[slot] = True
+            self.slot_req[slot] = req
+            L = req.input_len
+            k = k.at[:, slot, :L].set(k_new[:, i, :L])
+            v = v.at[:, slot, :L].set(v_new[:, i, :L])
+            first = int(first_toks[i])
+            self.tokens = self.tokens.at[slot, 0].set(first)
+            self.cache_len = self.cache_len.at[slot].set(L)
+            self.adapter_slot = self.adapter_slot.at[slot].set(
+                int(lslots[i]))
+            req.generated = 1
+            req.first_token_time = now
+            self.outputs[req.req_id] = [first]
+            self._tbts[req.req_id] = []
+            self._last_tok[req.req_id] = now
         self.kv = (k, v)
-        first = int(jnp.argmax(logits[0]))
-        self.tokens = self.tokens.at[slot, 0].set(first)
-        self.cache_len = self.cache_len.at[slot].set(req.input_len)
-        self.adapter_slot = self.adapter_slot.at[slot].set(lslot)
-        req.generated = 1
-        req.first_token_time = self.now()
-        self.outputs[req.req_id] = [first]
-        if req.done:
-            self._finish(slot)
+        for i, req in enumerate(reqs):
+            if req.done:
+                self._finish(free[i])
 
     def _finish(self, slot: int) -> None:
         req = self.slot_req[slot]
         req.state = RequestState.FINISHED
-        req.finish_time = self.now()
-        self.sched.on_finish(req, self.now())
+        now = self.now()
+        req.finish_time = now
+        self.sched.on_finish(req, now)
         self.completed.append(req)
         self.active[slot] = False
         self.slot_req[slot] = None
+        tbts = self._tbts.pop(req.req_id, [])
+        self._last_tok.pop(req.req_id, None)
+        self.records.append(RequestRecord(
+            req_id=req.req_id, adapter_id=req.adapter_id,
+            rank=self.catalog.rank_of(req.adapter_id),
+            input_len=req.input_len, output_len=req.output_len,
+            arrival=req.arrival_time,
+            ttft=req.ttft() or 0.0, e2e=req.e2e() or 0.0,
+            tbt_mean=float(np.mean(tbts)) if tbts else 0.0,
+            tbt_p99=float(np.percentile(tbts, 99)) if tbts else 0.0,
+            slowdown=1.0,   # no isolated-run oracle on the real engine
+            squashes=req.squash_count, bypassed=req.bypassed))
 
     def step(self) -> None:
-        """One engine iteration: admit -> (prefills) -> one decode."""
+        """One engine iteration: admit -> batched prefill -> one decode."""
         now = self.now()
         running = [r for r in self.slot_req if r is not None]
         admitted = self.sched.schedule(now, running)
-        for req in admitted:
-            self._place(req)
+        self._place_batch(admitted)
         if not self.active.any():
             return
         logits, self.kv = self._decode_jit(
@@ -207,11 +281,15 @@ class ChameleonEngine:
         self.tokens = nxt[:, None]
         self.cache_len = self.cache_len + jnp.asarray(self.active,
                                                       jnp.int32)
+        now = self.now()
         to_finish, to_squash = [], []
         for slot in np.where(self.active)[0]:
             req = self.slot_req[slot]
             req.generated += 1
             self.outputs[req.req_id].append(int(nxt[slot]))
+            self._tbts[req.req_id].append(
+                now - self._last_tok[req.req_id])
+            self._last_tok[req.req_id] = now
             if req.done or req.generated + req.input_len \
                     >= self.ecfg.max_len - 1:
                 to_finish.append(slot)
@@ -224,15 +302,44 @@ class ChameleonEngine:
             self.active[slot] = False
             self.slot_req[slot] = None
             self.outputs.pop(req.req_id, None)
+            self._tbts.pop(req.req_id, None)
+            self._last_tok.pop(req.req_id, None)
             self.sched.on_squash(req, self.now())
+
+    def busy(self) -> bool:
+        """True while any work is in flight or queued."""
+        return bool(self.active.any()) or self.sched.pending_count() > 0
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if not self.active.any() and self.sched.pending_count() == 0:
+            if not self.busy():
                 break
             self.step()
 
+    # ``drain`` is the surface name the cluster layer uses (DESIGN §3).
+    drain = run_until_drained
+
+    def reset_stats(self) -> None:
+        """Clear accounting after a warmup pass (jit compiles, first
+        adapter loads) so reported metrics cover only the measured run.
+        Device state and cache residency are kept — replicas start warm
+        but identically so across routing policies."""
+        self.completed = []
+        self.records = []
+        self.outputs = {}
+        self._tbts = {}
+        self._last_tok = {}
+        self.cache.stats = CacheStats()
+        if hasattr(self.sched, "n_bypassed"):
+            self.sched.n_bypassed = 0
+        if hasattr(self.sched, "n_squashed"):
+            self.sched.n_squashed = 0
+
     # ---------------------------------------------------------- reporting
+    def queue_pressure(self) -> float:
+        """Routing signal: scheduler backlog plus occupied batch slots."""
+        return self.sched.queue_pressure() + float(self.active.sum())
+
     def stats(self) -> dict:
         return {
             "completed": len(self.completed),
@@ -241,3 +348,25 @@ class ChameleonEngine:
             "squashed": getattr(self.sched, "n_squashed", 0),
             "resident_adapters": sorted(self.cache.resident_ids()),
         }
+
+    def metrics(self) -> RunMetrics:
+        """Per-node RunMetrics, aggregatable at cluster level."""
+        # Submitted = completed + in the batch + still queued, so a
+        # truncated run shows its loss instead of a fake 100% rate.
+        n_sub = (len(self.records) + int(self.active.sum())
+                 + self.sched.pending_count())
+        m = RunMetrics(records=list(self.records), horizon=self.now(),
+                       n_submitted=n_sub)
+        m.cache_stats = {
+            "hit_rate": round(self.cache.stats.hit_rate, 4),
+            "hits": self.cache.stats.hits,
+            "misses": self.cache.stats.misses,
+            "evictions": self.cache.stats.evictions,
+            "gb_loaded": round(self.cache.stats.bytes_loaded / 1e9, 6),
+        }
+        m.sched_stats = {
+            "bypassed": getattr(self.sched, "n_bypassed", 0),
+            "squashed": getattr(self.sched, "n_squashed", 0),
+            "pressure": round(self.queue_pressure(), 3),
+        }
+        return m

@@ -114,6 +114,47 @@ class RunMetrics:
         }
 
 
+def merge_metrics(per_node: list[RunMetrics],
+                  n_submitted: int | None = None) -> RunMetrics:
+    """Aggregate per-node RunMetrics into one cluster-level view.
+
+    Records concatenate (percentiles are then cluster-wide over every
+    request), the horizon is the slowest node's, and cache/scheduler
+    counters sum — with hit_rate recomputed from the summed hit/miss
+    counts rather than averaged (nodes see different traffic volumes),
+    and non-additive gauges (busy fractions, pressure) reported as the
+    worst node's value instead of a meaningless sum.
+    """
+    ratio_gauges = ("link_busy_frac", "pressure")
+    merged = RunMetrics(
+        n_submitted=(n_submitted if n_submitted is not None
+                     else sum(m.n_submitted for m in per_node)))
+    hits = misses = 0
+    summed: dict[str, float] = {}
+    sched: dict[str, float] = {}
+    for m in per_node:
+        merged.records.extend(m.records)
+        merged.horizon = max(merged.horizon, m.horizon)
+        hits += int(m.cache_stats.get("hits", 0))
+        misses += int(m.cache_stats.get("misses", 0))
+        for k, v in m.cache_stats.items():
+            if k in ("hit_rate", "hits", "misses") \
+                    or not isinstance(v, (int, float)):
+                continue
+            summed[k] = (max(summed.get(k, 0), v) if k in ratio_gauges
+                         else summed.get(k, 0) + v)
+        for k, v in m.sched_stats.items():
+            if not isinstance(v, (int, float)):
+                continue
+            sched[k] = (max(sched.get(k, 0), v) if k in ratio_gauges
+                        else sched.get(k, 0) + v)
+    merged.cache_stats = {
+        "hit_rate": hits / max(hits + misses, 1),
+        "hits": hits, "misses": misses, **summed}
+    merged.sched_stats = sched
+    return merged
+
+
 def slo_from_lowload(cost_model, trace_like, multiplier: float = 5.0,
                      stat: float = 99.0) -> tuple[float, float]:
     """Paper SLO: 5× the low-load TTFT and TBT.

@@ -100,3 +100,36 @@ def build_node(system: str, cfg: NodeConfig):
         sim_cfg.sync_adapter_load = True
     sim = NodeSimulator(cost, pool, cache, sched, adapters, sim_cfg)
     return sim, adapters, cost
+
+
+# System -> (scheduler class, adapter cache enabled) for the *real*
+# engine data plane. The subset of SYSTEM_NAMES whose behavioural
+# difference lives in the control plane the engine actually runs
+# (cost-model-only variants like -prefetch stay simulator-only).
+ENGINE_SYSTEMS = {
+    "chameleon": (ChameleonScheduler, True),
+    "chameleon-nocache": (ChameleonScheduler, False),
+    "chameleon-nosched": (FIFOScheduler, True),
+    "slora": (FIFOScheduler, False),
+    "userve-sjf": (SJFScheduler, False),
+}
+
+
+def build_engine(system: str, cfg, params, ecfg=None, catalog=None,
+                 clock=None):
+    """Assemble one real-engine replica for ``system``.
+
+    Mirrors ``build_node`` for the JAX data plane: same policy matrix,
+    but the returned object runs jit'd prefill/decode on real tokens.
+    ``catalog`` (shared AdapterCatalog) and ``clock`` let a cluster
+    deduplicate host adapter weights and share a timebase across
+    replicas.
+    """
+    from .engine import ChameleonEngine
+    if system not in ENGINE_SYSTEMS:
+        raise ValueError(f"unknown engine system {system!r}; "
+                         f"one of {tuple(ENGINE_SYSTEMS)}")
+    sched_cls, cache_enabled = ENGINE_SYSTEMS[system]
+    return ChameleonEngine(cfg, params, ecfg, scheduler_cls=sched_cls,
+                           cache_enabled=cache_enabled, catalog=catalog,
+                           clock=clock)

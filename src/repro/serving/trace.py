@@ -104,6 +104,37 @@ def synthesize(cfg: TraceConfig, pool: list[AdapterInfo]) -> Trace:
     return Trace(requests=reqs, config=cfg)
 
 
+def downscale_for_engine(trace: Trace, n_adapters: int,
+                         max_input: int, max_output: int,
+                         time_scale: float = 1.0) -> Trace:
+    """Map a production-scale trace onto the reduced real-engine setting.
+
+    The JAX engine in this container runs a reduced model with short
+    context; this shrinks lengths *proportionally* (preserving the
+    heavy-tailed shape that drives the paper's scheduling results),
+    folds adapter ids into the engine's catalog (preserving the
+    power-law popularity skew), and compresses arrival times by
+    ``time_scale`` so minutes of trace replay in seconds of wall time.
+    Fresh Request objects are returned — replaying the same trace twice
+    (e.g. per routing policy) must not share mutable request state.
+    """
+    src = trace.requests
+    if not src:
+        return Trace(requests=[], config=trace.config)
+    in_hi = max(r.input_len for r in src)
+    out_hi = max(r.output_len for r in src)
+    reqs = []
+    for r in src:
+        inp = max(4, int(round(r.input_len * max_input / max(in_hi, 1))))
+        out = max(1, int(round(r.output_len * max_output / max(out_hi, 1))))
+        reqs.append(Request(
+            input_len=min(inp, max_input),
+            output_len=min(out, max_output),
+            adapter_id=r.adapter_id % n_adapters,
+            arrival_time=r.arrival_time * time_scale))
+    return Trace(requests=reqs, config=trace.config)
+
+
 def load_azure_csv(path: str, cfg: TraceConfig,
                    pool: list[AdapterInfo]) -> Trace:
     """Load a real trace CSV (columns: arrival_s,input_tokens,output_tokens).

@@ -1,0 +1,110 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo targets has no network access, so test deps
+beyond pytest cannot be assumed. Property tests degrade gracefully:
+with real hypothesis installed they run as written (shrinking, example
+database, the works); without it, this shim replays each ``@given``
+test over a deterministic pseudo-random sample of the strategy space —
+boundary values first, then seeded draws — so the invariants still get
+exercised on every CI run.
+
+Only the strategy combinators the test-suite uses are implemented:
+``integers``, ``floats``, ``lists``, ``tuples``, ``sampled_from``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+_FALLBACK_EXAMPLES = 8          # draws per test beyond the boundary cases
+
+
+class _Strategy:
+    """A strategy = a function from RNG to a value, plus boundary picks."""
+
+    def __init__(self, draw, boundaries=()):
+        self._draw = draw
+        self.boundaries = list(boundaries)
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         boundaries=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         boundaries=[min_value, max_value])
+
+    @staticmethod
+    def sampled_from(seq) -> _Strategy:
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq),
+                         boundaries=seq[:1] + seq[-1:])
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size=0, max_size=10) -> _Strategy:
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elem.example(rng) for _ in range(n)]
+        lo = [elem.boundaries[0]] * min_size if elem.boundaries else []
+        return _Strategy(draw, boundaries=[lo])
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        def draw(rng):
+            return tuple(e.example(rng) for e in elems)
+        bound = (tuple(e.boundaries[0] for e in elems)
+                 if all(e.boundaries for e in elems) else None)
+        return _Strategy(draw, boundaries=[bound] if bound else [])
+
+
+st = strategies
+
+
+def settings(**_kw):
+    """Accepted and ignored (max_examples, deadline, ...)."""
+    def deco(fn):
+        return fn
+    return deco
+
+
+def given(**strats):
+    """Run the test over boundary cases + seeded random draws."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # Deterministic per-test seed: stable across runs/machines.
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            names = list(strats)
+            cases = []
+            # Boundary sweep: k-th boundary of every strategy together.
+            n_bounds = max((len(strats[n].boundaries) for n in names),
+                           default=0)
+            for k in range(n_bounds):
+                case = {}
+                for n in names:
+                    b = strats[n].boundaries
+                    case[n] = (b[min(k, len(b) - 1)] if b
+                               else strats[n].example(rng))
+                cases.append(case)
+            for _ in range(_FALLBACK_EXAMPLES):
+                cases.append({n: strats[n].example(rng) for n in names})
+            for case in cases:
+                fn(*args, **kwargs, **case)
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution (hypothesis does the same).
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for n, p in sig.parameters.items() if n not in strats])
+        return wrapper
+    return deco

@@ -7,7 +7,10 @@ exercised by launch/dryrun.py (results in results/dryrun.json).
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # no network in CI containers: shim it
+    from _hypothesis_shim import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config

@@ -6,7 +6,10 @@ token generation, and completions — these are the invariants the
 serving engine and simulator rely on.
 """
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # no network in CI containers: shim it
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import (AdapterCache, AdapterInfo, ChameleonScheduler,
                         MemoryPool, NoisyOraclePredictor, Request,

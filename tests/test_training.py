@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # no network in CI containers: shim it
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.configs import get_config
 from repro.training import (AdamWConfig, AsyncCheckpointer, DataConfig,
