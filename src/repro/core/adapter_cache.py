@@ -166,12 +166,18 @@ class AdapterCache:
             e.frequency *= self.freq_decay
 
     # -- acquire / release -------------------------------------------------
-    def acquire(self, adapter_id: int, now: float) -> bool:
+    def acquire(self, adapter_id: int, now: float,
+                queued_protect: Iterable[int] = ()) -> bool:
         """Pin an adapter for a running request.
 
         Returns True on a cache hit; False when the adapter had to be
         loaded (caller charges the load latency). Raises PoolError if it
         cannot fit even after evicting every unpinned adapter.
+
+        ``queued_protect`` (adapter ids of queued requests) flows through
+        to eviction so the §4.1 second-tier protection holds on the load
+        path too — without it, loading a cold adapter would happily evict
+        an adapter the very next admission is about to need.
         """
         self._decay_all()
         entry = self.entries.get(adapter_id)
@@ -182,8 +188,8 @@ class AdapterCache:
             self.stats.hits += 1
             return True
         info = self.catalog[adapter_id]
-        self._ensure_slot_capacity(now)
-        self.make_room(info.size_tokens, now)
+        self._ensure_slot_capacity(now, queued_protect)
+        self.make_room(info.size_tokens, now, queued_protect)
         self.pool.hold_adapter(adapter_id, info.size_tokens)
         entry = CacheEntry(info=info, last_used=now, frequency=1.0,
                            ref_count=1)
@@ -205,8 +211,13 @@ class AdapterCache:
             self._evict(adapter_id)
 
     # -- prefetch ----------------------------------------------------------
-    def prefetch(self, adapter_id: int, now: float) -> bool:
-        """Load without pinning (for queued requests). True if loaded."""
+    def prefetch(self, adapter_id: int, now: float,
+                 queued_protect: Iterable[int] = ()) -> bool:
+        """Load without pinning (for queued requests). True if loaded.
+
+        ``queued_protect`` keeps the §4.1 second-tier protection live on
+        this load path too (see ``acquire``).
+        """
         if adapter_id in self.entries:
             return False
         info = self.catalog[adapter_id]
@@ -216,8 +227,8 @@ class AdapterCache:
                 and len(self.entries) >= self.max_entries
                 and not self._evictable()):
             return False
-        self._ensure_slot_capacity(now)
-        self.make_room(info.size_tokens, now)
+        self._ensure_slot_capacity(now, queued_protect)
+        self.make_room(info.size_tokens, now, queued_protect)
         self.pool.hold_adapter(adapter_id, info.size_tokens)
         self.entries[adapter_id] = CacheEntry(info=info, last_used=now,
                                               frequency=0.5, ref_count=0)
@@ -226,12 +237,17 @@ class AdapterCache:
             self.on_load(info)
         return True
 
-    def _ensure_slot_capacity(self, now: float) -> None:
-        """Evict (lowest score first) until an entry slot is free."""
+    def _ensure_slot_capacity(self, now: float,
+                              queued_protect: Iterable[int] = ()) -> None:
+        """Evict (lowest score first) until an entry slot is free.
+
+        Same two protection tiers as ``make_room``: protected (queued)
+        adapters go only when no unprotected candidate remains.
+        """
         if self.max_entries is None:
             return
         while len(self.entries) >= self.max_entries:
-            cands = self._evictable()
+            cands = self._evictable(queued_protect) or self._evictable()
             if not cands:
                 from .memory_pool import PoolError
                 raise PoolError("all adapter slots pinned")

@@ -60,18 +60,22 @@ class _SingleQueueScheduler(BaseScheduler):
 
     def _admit(self, req: Request, now: float) -> bool:
         need = req.input_len + req.predicted_output
+        if not self.reserve_from_pool:
+            # Paged engine: demand is page-granular (see
+            # ChameleonScheduler._admit).
+            need = self.pool.pages_for(need) * self.pool.page_size
         ad = self.adapters[req.adapter_id]
         extra = 0 if self.cache.resident(req.adapter_id) else ad.size_tokens
-        if not self.cache.shrink_for_requests(need + extra, now,
-                                              self.queued_adapter_ids()
-                                              - {req.adapter_id}):
+        protect = self.queued_adapter_ids() - {req.adapter_id}
+        if not self.cache.shrink_for_requests(need + extra, now, protect):
             return False
         try:
-            self.cache.acquire(req.adapter_id, now)
-            self.pool.reserve_request(req.req_id, need)
+            self.cache.acquire(req.adapter_id, now, queued_protect=protect)
+            if self.reserve_from_pool:
+                self.pool.reserve_request(req.req_id, need)
         except PoolError:
             return False
-        req.reserved_tokens = need
+        req.reserved_tokens = need if self.reserve_from_pool else 0
         return True
 
     def schedule(self, now: float, running: list[Request]) -> list[Request]:
@@ -90,11 +94,13 @@ class _SingleQueueScheduler(BaseScheduler):
         return batch
 
     def on_finish(self, req: Request, now: float) -> None:
-        self.pool.release_request(req.req_id)
+        if self.reserve_from_pool:
+            self.pool.release_request(req.req_id)
         self.cache.release(req.adapter_id, now)
 
     def on_squash(self, req: Request, now: float) -> None:
-        self.pool.release_request(req.req_id)
+        if self.reserve_from_pool:
+            self.pool.release_request(req.req_id)
         self.cache.release(req.adapter_id, now)
         req.reset_for_requeue()
         self.requeue(req, now)

@@ -7,10 +7,18 @@ pre-allocates one pool and accounts *everything* in token units:
     1 token  =  bytes of one KV-cache token slot
                (2 · n_kv_heads · head_dim · n_layers · dtype_bytes)
 
-- Running requests reserve input+output+KV tokens.
+- Running requests hold KV tokens. Dense engines reserve the predicted
+  worst case (input + predicted output) up front; the paged engine holds
+  exactly its allocated KV pages and grows page by page, so ``free``
+  tracks *actual* HBM occupancy, not a prediction.
 - Resident adapters occupy ceil(adapter_bytes / token_bytes) tokens.
 - free = capacity − requests − adapters. The Chameleon cache *is* the
   adapter region; "dynamic cache resizing" = this watermark moving.
+
+``page_size > 1`` switches the pool to page currency for requests
+(S-LoRA-style unified paging): every request hold must be a whole
+number of pages, enforced by ``check_invariants``. Adapter holds stay
+token-granular — adapters are contiguous slot buffers, not paged.
 
 The pool is deliberately policy-free: eviction choices live in
 adapter_cache.py, admission choices in scheduler.py.
@@ -27,6 +35,7 @@ class PoolError(RuntimeError):
 @dataclass
 class MemoryPool:
     capacity_tokens: int
+    page_size: int = 1                # tokens per KV page (1 = dense mode)
     used_requests: int = 0
     used_adapters: int = 0
     _request_holds: dict = field(default_factory=dict)   # req_id -> tokens
@@ -46,6 +55,22 @@ class MemoryPool:
         """Tokens available to requests without evicting any adapter."""
         return self.free_tokens
 
+    # Pages -------------------------------------------------------------
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` KV entries."""
+        return -(-tokens // self.page_size)
+
+    @property
+    def free_pages(self) -> int:
+        return self.free_tokens // self.page_size
+
+    def request_pages(self, req_id: int) -> int:
+        return self._request_holds.get(req_id, 0) // self.page_size
+
+    def reserve_request_pages(self, req_id: int, n_pages: int) -> None:
+        """Page-granular hold (the paged engine's allocation unit)."""
+        self.reserve_request(req_id, n_pages * self.page_size)
+
     # Requests ----------------------------------------------------------
     def reserve_request(self, req_id: int, tokens: int) -> None:
         if tokens < 0:
@@ -53,6 +78,10 @@ class MemoryPool:
         if tokens > self.free_tokens:
             raise PoolError(
                 f"reserve_request({tokens}) exceeds free {self.free_tokens}")
+        if self.page_size > 1 and tokens % self.page_size:
+            raise PoolError(
+                f"paged pool: hold of {tokens} tokens is not a multiple "
+                f"of page_size={self.page_size}")
         self._request_holds[req_id] = self._request_holds.get(req_id, 0) + tokens
         self.used_requests += tokens
 
@@ -63,6 +92,22 @@ class MemoryPool:
         tokens = self._request_holds.pop(req_id, 0)
         self.used_requests -= tokens
         return tokens
+
+    def shrink_request(self, req_id: int, tokens: int) -> None:
+        """Give back part of a hold (paged engine: per-page reclaim)."""
+        held = self._request_holds.get(req_id, 0)
+        if tokens < 0 or tokens > held:
+            raise PoolError(
+                f"shrink_request({tokens}) exceeds hold {held}")
+        if self.page_size > 1 and tokens % self.page_size:
+            raise PoolError(
+                f"paged pool: shrink of {tokens} tokens is not a "
+                f"multiple of page_size={self.page_size}")
+        if tokens == held:
+            self._request_holds.pop(req_id, None)
+        else:
+            self._request_holds[req_id] = held - tokens
+        self.used_requests -= tokens
 
     # Adapters ----------------------------------------------------------
     def hold_adapter(self, adapter_id: int, tokens: int) -> None:
@@ -89,14 +134,24 @@ class MemoryPool:
         assert 0 <= self.used_requests
         assert 0 <= self.used_adapters
         assert self.used_requests + self.used_adapters <= self.capacity_tokens
+        if self.page_size > 1:
+            for req_id, tokens in self._request_holds.items():
+                assert tokens % self.page_size == 0, (
+                    f"request {req_id} holds {tokens} tokens, not a "
+                    f"multiple of page_size={self.page_size}")
 
     def snapshot(self) -> dict:
-        return {
+        snap = {
             "capacity": self.capacity_tokens,
             "requests": self.used_requests,
             "adapters": self.used_adapters,
             "free": self.free_tokens,
         }
+        if self.page_size > 1:
+            snap["page_size"] = self.page_size
+            snap["pages_used"] = self.used_requests // self.page_size
+            snap["pages_free"] = self.free_pages
+        return snap
 
 
 def kv_token_bytes(n_layers: int, n_kv_heads: int, head_dim: int,

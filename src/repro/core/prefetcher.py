@@ -27,6 +27,7 @@ class QueuedRequestPrefetcher:
         """Prefetch missing adapters of queued requests. Returns ids loaded."""
         loaded = []
         seen = set()
+        queued_ids = {r.adapter_id for r in queued_requests}
         for req in queued_requests:
             if len(loaded) >= self.max_per_round:
                 break
@@ -38,7 +39,8 @@ class QueuedRequestPrefetcher:
             # Only use genuinely free memory: prefetching must never
             # evict (that would fight the cost-aware policy).
             if info.size_tokens <= self.cache.pool.free_tokens:
-                if self.cache.prefetch(aid, now):
+                if self.cache.prefetch(aid, now,
+                                       queued_protect=queued_ids - {aid}):
                     loaded.append(aid)
         return loaded
 
@@ -85,7 +87,17 @@ class HistogramPrefetcher:
             if self.cache.resident(aid):
                 continue
             t = self._predict_next(aid)
-            if t is not None and now <= t <= now + self.horizon:
+            # Accept anything predicted inside the horizon, *including*
+            # overdue predictions (t < now): an adapter whose predicted
+            # arrival just slipped past is the most imminent of all, not
+            # a stale entry to skip — requiring now <= t meant a
+            # prefetcher tick landing one tick late never warmed it.
+            # Predictions more than one horizon in the past are stale
+            # (the adapter's traffic stopped), not imminent: without the
+            # lower bound a dead adapter's fixed past prediction would
+            # top-rank every tick forever, burning load bandwidth and a
+            # cache slot.
+            if t is not None and now - self.horizon <= t <= now + self.horizon:
                 cands.append((t, aid))
         cands.sort()
         loaded = []

@@ -36,6 +36,14 @@ class BaseScheduler:
 
     name = "base"
 
+    # Dense engines let the scheduler reserve the predicted worst case
+    # (input + predicted output) in the MemoryPool at admission. The
+    # paged engine flips this off: it holds exactly its allocated KV
+    # pages under the same req_id and grows/releases them itself, so the
+    # scheduler must neither reserve nor release request holds (a
+    # release here would drop the engine's page hold).
+    reserve_from_pool = True
+
     def submit(self, req: Request, now: float) -> None:
         raise NotImplementedError
 
@@ -274,16 +282,19 @@ class ChameleonScheduler(BaseScheduler):
                      for r in running]
         min_remaining = min(remaining) if remaining else 0
 
-        # Phase 1: per-queue quota admission.
+        # Phase 1: per-queue quota admission. Every queue lends whatever
+        # quota it did not consume — Algorithm 1 redistributes *all*
+        # unused quota top-down, including that of a queue whose head is
+        # memory-blocked (it cannot use the spare itself this iteration,
+        # so withholding it would just idle tokens).
         leftover = 0
         for q in self.queues:
             if len(batch) >= slots:
                 break
-            consumed = self._put_batch(q, q.available, batch, slots, now,
-                                       queued_protect, min_remaining,
-                                       charge_queue=self.queues.index(q))
-            if not q.reqs:
-                leftover += q.available
+            self._put_batch(q, q.available, batch, slots, now,
+                            queued_protect, min_remaining,
+                            charge_queue=self.queues.index(q))
+            leftover += q.available
         # Phase 2: redistribute spare tokens top-down.
         if leftover > 0:
             for qi, q in enumerate(self.queues):
@@ -299,19 +310,29 @@ class ChameleonScheduler(BaseScheduler):
 
     def _admit(self, req: Request, q: _QueueState, now: float,
                queued_protect: set[int]) -> bool:
-        """Memory-side admission: reserve pool tokens + adapter residency."""
+        """Memory-side admission: reserve pool tokens + adapter residency.
+
+        Paged mode keeps this worst-case check as the admission
+        *throttle* (without it every request would admit and preemption
+        would do all the work, wasting prefills) but rounds the demand
+        up to whole pages — the engine allocates page-granular, so a
+        request that passes here can always get its prompt pages.
+        """
         need = self._reserve_tokens(req)
+        if not self.reserve_from_pool:
+            need = self.pool.pages_for(need) * self.pool.page_size
         ad = self.adapters[req.adapter_id]
         extra = 0 if self.cache.resident(req.adapter_id) else ad.size_tokens
         protect = queued_protect - {req.adapter_id}
         if not self.cache.shrink_for_requests(need + extra, now, protect):
             return False
         try:
-            self.cache.acquire(req.adapter_id, now)
-            self.pool.reserve_request(req.req_id, need)
+            self.cache.acquire(req.adapter_id, now, queued_protect=protect)
+            if self.reserve_from_pool:
+                self.pool.reserve_request(req.req_id, need)
         except PoolError:
             return False
-        req.reserved_tokens = need
+        req.reserved_tokens = need if self.reserve_from_pool else 0
         return True
 
     def _charge(self, req: Request, need: int, charge_queue: Optional[int],
@@ -419,13 +440,15 @@ class ChameleonScheduler(BaseScheduler):
     def on_finish(self, req: Request, now: float) -> None:
         self.note_duration(req, now)
         self._return_charges(req)
-        self.pool.release_request(req.req_id)
+        if self.reserve_from_pool:
+            self.pool.release_request(req.req_id)
         self.cache.release(req.adapter_id, now)
 
     def on_squash(self, req: Request, now: float) -> None:
         """Bypasser exceeded its prediction: release and re-queue (§4.2)."""
         self._return_charges(req)
-        self.pool.release_request(req.req_id)
+        if self.reserve_from_pool:
+            self.pool.release_request(req.req_id)
         self.cache.release(req.adapter_id, now)
         self.n_squashed += 1
         req.reset_for_requeue()

@@ -48,6 +48,35 @@ def decode_step(cfg, params, tokens, state, cache_len=None, **kw):
     return m.decode_step(cfg, params, tokens, state, cache_len, **kw)
 
 
+# ------------------------------------------------------- paged serving
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Families whose decode can run over a paged KV pool.
+
+    Dense decoder LMs only for now: MoE decode shares the dense KV path
+    but scans supersteps (paged xs plumbing not wired), VLM needs M-RoPE
+    positions, SSM/hybrid/enc-dec carry non-KV state. Engines fall back
+    to the dense slab for unsupported families.
+    """
+    return cfg.family == Family.DENSE
+
+
+def init_paged_serve_state(cfg: ModelConfig, n_pages: int, page_size: int,
+                           dtype=jnp.bfloat16):
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV unsupported for family {cfg.family}")
+    return lm.make_paged_kv(cfg, n_pages, page_size, dtype)
+
+
+def decode_step_paged(cfg, params, tokens, kv_pages, page_table,
+                      cache_len, **kw):
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV unsupported for family {cfg.family}")
+    return lm.decode_step_paged(cfg, params, tokens, kv_pages,
+                                page_table, cache_len, **kw)
+
+
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
                      dtype=jnp.bfloat16):
     if cfg.family == Family.SSM:

@@ -67,6 +67,46 @@ def init_params(cfg: ModelConfig, key: jax.Array,
 
 
 # ------------------------------------------------------------ attention
+def _qkv_proj(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
+              lora=None, adapter_idx=None, prefix: str = ""):
+    """Normed q/k/v projections (+bias, +LoRA, +qk-norm, +RoPE).
+
+    Shared by the dense and paged attention blocks so the two data
+    planes are numerically the same computation up to the KV layout.
+    Returns (h, q, k, v) with q (B,S,H,Dh), k/v (B,S,Kh,Dh); ``h`` is the
+    post-norm hidden the o-projection's residual pairs with.
+    """
+    B, S, _ = x.shape
+    h = rms_norm(x, p[prefix + "attn_norm"], cfg.norm_eps)
+
+    def proj(name):
+        y = jnp.einsum("bsd,de->bse", h, p[prefix + name])
+        if cfg.qkv_bias and prefix + name + "_bias" in p:
+            y = y + p[prefix + name + "_bias"]
+        if lora is not None and name in lora:
+            y = y + lora_delta(h, lora[name], adapter_idx)
+        return y
+
+    q = proj("q").reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = proj("k").reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = proj("v").reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = head_rms_norm(q, p[prefix + "q_norm"], cfg.norm_eps)
+        k = head_rms_norm(k, p[prefix + "k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return h, q, k, v
+
+
+def _o_proj(cfg: ModelConfig, x: jax.Array, out: jax.Array, p: dict,
+            lora=None, adapter_idx=None, prefix: str = "") -> jax.Array:
+    """Output projection + LoRA + residual. out: (B, S, q_dim)."""
+    o = jnp.einsum("bse,ed->bsd", out, p[prefix + "o"])
+    if lora is not None and "o" in lora:
+        o = o + lora_delta(out, lora["o"], adapter_idx)
+    return x + o
+
+
 def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
           kv_cache=None, cache_len=None, lora=None, adapter_idx=None,
           prefix: str = ""):
@@ -75,25 +115,8 @@ def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
     Returns (out, new_kv): new_kv is (k, v) for prefill or the updated
     (k_cache, v_cache, ) slices for decode.
     """
-    B, S, D = x.shape
-    h = rms_norm(x, p[prefix + "attn_norm"], cfg.norm_eps)
-
-    def proj(name, w_out):
-        y = jnp.einsum("bsd,de->bse", h, p[prefix + name])
-        if cfg.qkv_bias and prefix + name + "_bias" in p:
-            y = y + p[prefix + name + "_bias"]
-        if lora is not None and name in lora:
-            y = y + lora_delta(h, lora[name], adapter_idx)
-        return y
-
-    q = proj("q", cfg.q_dim).reshape(B, S, cfg.n_heads, cfg.head_dim)
-    k = proj("k", cfg.kv_dim).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
-    v = proj("v", cfg.kv_dim).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
-    if cfg.qk_norm:
-        q = head_rms_norm(q, p[prefix + "q_norm"], cfg.norm_eps)
-        k = head_rms_norm(k, p[prefix + "k_norm"], cfg.norm_eps)
-    q = apply_rope(q, cos, sin)
-    k = apply_rope(k, cos, sin)
+    B, S, _ = x.shape
+    _, q, k, v = _qkv_proj(cfg, x, p, cos, sin, lora, adapter_idx, prefix)
 
     if kv_cache is None:
         out = gqa_attention(q, k, v, causal=True)
@@ -110,10 +133,37 @@ def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
         new_kv = (k_cache, v_cache)
 
     out = out.reshape(B, S, cfg.q_dim)
-    o = jnp.einsum("bse,ed->bsd", out, p[prefix + "o"])
-    if lora is not None and "o" in lora:
-        o = o + lora_delta(out, lora["o"], adapter_idx)
-    return x + o, new_kv
+    return _o_proj(cfg, x, out, p, lora, adapter_idx, prefix), new_kv
+
+
+def _attn_paged(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
+                k_pages: jax.Array, v_pages: jax.Array,
+                page_table: jax.Array, cache_len: jax.Array,
+                page_idx: jax.Array, page_off: jax.Array,
+                lora=None, adapter_idx=None):
+    """Decode attention over paged KV (one layer; S == 1).
+
+    k/v_pages: (n_pages, page, Kh, Dh); page_table: (B, P) physical page
+    ids per request; page_idx/page_off: (B,) precomputed write position
+    of the new token (page_table[b, cache_len[b]//page], cache_len[b] %
+    page). The fresh K/V is scattered into the pages, then attention
+    runs over the request's page list via ``kernels.ops.paged_attention``
+    (Pallas on TPU, the jnp reference on CPU). Requests never share
+    pages, so the batched scatter cannot collide (inactive slots all
+    write the reserved trash page 0, which active tables never map).
+    """
+    from repro.kernels.ops import paged_attention
+
+    B, S, _ = x.shape
+    _, q, k, v = _qkv_proj(cfg, x, p, cos, sin, lora, adapter_idx)
+    k_pages = k_pages.at[page_idx, page_off].set(k[:, 0])
+    v_pages = v_pages.at[page_idx, page_off].set(v[:, 0])
+    Kh, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qh = q[:, 0].reshape(B, Kh, G, cfg.head_dim)
+    out = paged_attention(qh, k_pages, v_pages, page_table,
+                          cache_len + 1)
+    out = out.reshape(B, S, cfg.q_dim)
+    return _o_proj(cfg, x, out, p, lora, adapter_idx), (k_pages, v_pages)
 
 
 def _mlp(cfg, x, p, prefix=""):
@@ -315,6 +365,18 @@ def make_kv_caches(cfg: ModelConfig, batch: int, max_len: int,
     return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
 
 
+def make_paged_kv(cfg: ModelConfig, n_pages: int, page_size: int,
+                  dtype=jnp.bfloat16):
+    """Paged KV pool: (L, n_pages, page, Kh, Dh) ×2.
+
+    Page 0 is reserved as the trash page inactive batch slots write
+    into; allocators hand out pages 1..n_pages-1 (engine convention).
+    """
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads,
+             cfg.head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
             mrope_pos=None, lora=None, adapter_idx=None, last_pos=None):
     """Returns (last-position logits (B, V), (k_stack, v_stack)).
@@ -357,3 +419,47 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
     return unembed(h, table)[:, 0], kv
+
+
+def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                      kv_pages, page_table: jax.Array,
+                      cache_len: jax.Array, lora=None, adapter_idx=None):
+    """One decode step over a paged KV pool (dense-family scan).
+
+    tokens: (B, 1); kv_pages: (k_pages, v_pages) each (L, n_pages,
+    page, Kh, Dh); page_table: (B, P) physical page ids per request;
+    cache_len: (B,) valid lengths. Returns (logits (B, V), new kv_pages).
+
+    The same ``lax.scan`` layer loop as ``decode_step``; only the KV
+    residency differs — fixed-size pages indirected through the page
+    table instead of a dense (B, max_len) slab, so HBM holds exactly the
+    pages requests allocated (DESIGN §2).
+    """
+    x = embed(tokens, params["embed/tok"])
+    cos, sin = _positions(cfg, tokens.shape, cache_len, None)
+    k_pages, v_pages = kv_pages
+    page = k_pages.shape[2]
+    B = tokens.shape[0]
+    # Write position of the new token, shared across layers.
+    page_idx = page_table[jnp.arange(B), cache_len // page]
+    page_off = cache_len % page
+    attn_stack = _slice_group(params, "layers/")
+
+    def body(carry, xs):
+        h = constrain_boundary(carry)
+        p = xs["p"]
+        lr = xs.get("lora")
+        h, (kp, vp) = _attn_paged(cfg, h, p, cos, sin, xs["kp"],
+                                  xs["vp"], page_table, cache_len,
+                                  page_idx, page_off, lr, adapter_idx)
+        h = constrain_boundary(_mlp(cfg, h, p))
+        return h, (kp, vp)
+
+    xs = {"p": attn_stack, "kp": k_pages, "vp": v_pages}
+    if lora is not None:
+        xs["lora"] = lora
+    h, (k_out, v_out) = jax.lax.scan(body, x, xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return unembed(h, table)[:, 0], (k_out, v_out)

@@ -336,9 +336,18 @@ class EngineCluster:
         return merged, per_node
 
     def stats(self) -> dict:
-        return {
+        out = {
             "routed": self.routed.tolist(),
             "adapter_loads": sum(e.cache.stats.misses
                                  for e in self.engines),
             "per_engine": [e.stats() for e in self.engines],
         }
+        pages = [e.kv_page_stats() for e in self.engines]
+        if any(pages):
+            # Cluster-wide KV page occupancy (paged replicas only).
+            out["kv_pages_used"] = sum(p.get("kv_pages_used", 0)
+                                       for p in pages)
+            out["kv_pages_total"] = sum(p.get("kv_pages_total", 0)
+                                        for p in pages)
+            out["preempted"] = sum(p.get("preempted", 0) for p in pages)
+        return out

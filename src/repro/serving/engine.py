@@ -9,7 +9,20 @@ kernels; on this CPU container the jnp reference path runs (same math).
 Static-shape design (TPU-native):
 - ``max_slots`` request slots; inactive slots run masked garbage that is
   never surfaced (standard TPU continuous batching);
-- KV caches (L, max_slots, max_len, Kh, Dh) written in place per slot;
+- KV lives in a **paged pool** by default (``EngineConfig.paged``):
+  fixed-size pages (L, n_pages, page, Kh, Dh) plus a per-slot page
+  table, with page 0 reserved as the trash page inactive slots write.
+  Pages are allocated on demand at prefill and per decoded page
+  boundary, and freed on finish/squash, so ``MemoryPool`` request holds
+  are *real* occupancy — the adapter cache, admission headroom, and
+  ``queue_pressure()`` all see actual free HBM instead of a
+  worst-case-reserved fiction. Decode attention routes through
+  ``kernels.ops.paged_attention`` (Pallas on TPU, jnp reference on
+  CPU). When a page cannot be allocated even after shrinking the
+  adapter cache, the slot is preempted (pages freed, request requeued)
+  — the price of admitting against actual rather than predicted
+  occupancy. ``paged=False`` keeps the dense
+  (L, max_slots, max_len, Kh, Dh) slab for parity testing;
 - ``n_lora_slots`` adapter-slot buffers; the cache manager's on_load
   writes adapter weights into a slot (device-side copy), on_evict frees
   it. Residency decisions stay 100 % in repro.core — this file only
@@ -55,6 +68,11 @@ class EngineConfig:
     n_adapters: int = 16
     predictor_accuracy: float = 0.8
     seed: int = 0
+    # Paged KV data plane (S-LoRA-style unified paging). ``paged=False``
+    # falls back to the dense (L, max_slots, max_len, Kh, Dh) slab;
+    # families without paged decode support fall back automatically.
+    paged: bool = True
+    page_size: int = 16
 
 
 class AdapterCatalog:
@@ -126,7 +144,9 @@ class ChameleonEngine:
         infos = self.catalog.infos
         cap = e.max_slots * e.max_len \
             + 4 * max(c.size_tokens for c in infos.values())
-        self.pool = MemoryPool(capacity_tokens=cap)
+        self.paged = bool(e.paged) and api.supports_paged(cfg)
+        self.pool = MemoryPool(capacity_tokens=cap,
+                               page_size=e.page_size if self.paged else 1)
         self.cache = AdapterCache(self.pool, infos,
                                   enabled=cache_enabled,
                                   on_load=self._load_adapter,
@@ -139,10 +159,30 @@ class ChameleonEngine:
             skw["t_refresh"] = 5.0
         self.sched = scheduler_cls(self.pool, self.cache, infos, pred,
                                    **skw)
+        # Paged mode: the engine holds exactly its allocated pages in
+        # the pool (per req_id) and grows/frees them itself; the
+        # scheduler's worst-case reservation is switched off.
+        self.sched.reserve_from_pool = not self.paged
 
         # --- device state ---
-        self.kv = api.init_serve_state(cfg, e.max_slots, e.max_len,
-                                       jnp.float32)
+        if self.paged:
+            ps = e.page_size
+            # One physical page per pool page + the reserved trash page
+            # (page 0). Sizing pages to the *whole* pool is the unified
+            # paging: KV can spread into memory adapters are not using.
+            self.n_pages = cap // ps + 1
+            self.pages_per_slot = -(-e.max_len // ps)
+            self.kv_pages = api.init_paged_serve_state(
+                cfg, self.n_pages, ps, jnp.float32)
+            self.page_table = np.zeros(
+                (e.max_slots, self.pages_per_slot), np.int32)
+            self.slot_pages: list[list[int]] = [[] for _ in
+                                                range(e.max_slots)]
+            self.free_pages = list(range(self.n_pages - 1, 0, -1))
+            self.kv = None
+        else:
+            self.kv = api.init_serve_state(cfg, e.max_slots, e.max_len,
+                                           jnp.float32)
         self.tokens = jnp.zeros((e.max_slots, 1), jnp.int32)
         self.cache_len = jnp.zeros((e.max_slots,), jnp.int32)
         self.active = np.zeros((e.max_slots,), bool)
@@ -155,8 +195,11 @@ class ChameleonEngine:
         self.outputs: dict[int, list[int]] = {}
         self._tbts: dict[int, list[float]] = {}
         self._last_tok: dict[int, float] = {}
+        self.batch_occupancy: list[int] = []   # active slots per step
+        self.n_preempted = 0                   # paged: out-of-page squashes
 
         self._decode_jit = jax.jit(self._decode_fn)
+        self._decode_paged_jit = jax.jit(self._decode_paged_fn)
         self._prefill_jit = jax.jit(self._prefill_fn,
                                     static_argnames=("S",))
 
@@ -183,11 +226,79 @@ class ChameleonEngine:
         return api.decode_step(self.cfg, params, tokens, kv, cache_len,
                                lora=lora, adapter_idx=adapter_slot)
 
+    def _decode_paged_fn(self, params, lora, tokens, kv_pages,
+                         page_table, cache_len, adapter_slot):
+        return api.decode_step_paged(self.cfg, params, tokens, kv_pages,
+                                     page_table, cache_len, lora=lora,
+                                     adapter_idx=adapter_slot)
+
     def _prefill_fn(self, params, lora, tokens, adapter_slot, last_pos,
                     S):
         del S
         return api.prefill(self.cfg, params, tokens, lora=lora,
                            adapter_idx=adapter_slot, last_pos=last_pos)
+
+    # ------------------------------------------------------- page moves
+    def _alloc_page(self, req_id: int, now: float) -> Optional[int]:
+        """One physical page for ``req_id``; None when HBM is truly full.
+
+        The pool gate runs first: if the unified pool has no free page
+        the adapter cache is asked to shrink (§4.1 dynamic downsizing,
+        second-tier protection for queued adapters applies). Physical
+        pages cannot run out before pool pages — the page arrays are
+        sized to the whole pool.
+        """
+        if not self.free_pages:
+            return None
+        ps = self.pool.page_size
+        if self.pool.free_tokens < ps and not self.cache.shrink_for_requests(
+                ps, now, self.sched.queued_adapter_ids()):
+            return None
+        try:
+            self.pool.reserve_request_pages(req_id, 1)
+        except PoolError:
+            return None
+        return self.free_pages.pop()
+
+    def _grow_slot(self, slot: int, n_pages: int, now: float) -> bool:
+        """Grow a slot's page list by ``n_pages``; all-or-nothing."""
+        req = self.slot_req[slot]
+        got = []
+        for _ in range(n_pages):
+            pid = self._alloc_page(req.req_id, now)
+            if pid is None:
+                for p in got:
+                    self.free_pages.append(p)
+                if got:
+                    self.pool.shrink_request(
+                        req.req_id, len(got) * self.pool.page_size)
+                return False
+            got.append(pid)
+        base = len(self.slot_pages[slot])
+        self.slot_pages[slot].extend(got)
+        self.page_table[slot, base:base + len(got)] = got
+        return True
+
+    def _free_slot_pages(self, slot: int, req_id: int) -> None:
+        if not self.paged:
+            return
+        self.free_pages.extend(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.page_table[slot, :] = 0
+        self.pool.release_request(req_id)
+
+    def _preempt(self, slot: int) -> None:
+        """Out of pages mid-flight: free the slot and requeue (squash
+        path — the request re-executes from scratch)."""
+        req = self.slot_req[slot]
+        self.active[slot] = False
+        self.slot_req[slot] = None
+        self.outputs.pop(req.req_id, None)
+        self._tbts.pop(req.req_id, None)
+        self._last_tok.pop(req.req_id, None)
+        self._free_slot_pages(slot, req.req_id)
+        self.n_preempted += 1
+        self.sched.on_squash(req, self.now())
 
     # ---------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
@@ -206,6 +317,25 @@ class ChameleonEngine:
         if not reqs:
             return
         free = [int(s) for s in np.where(~self.active)[0]]
+        if self.paged:
+            # Allocate each request's prompt pages up front; a request
+            # whose prompt cannot get pages even after shrinking the
+            # cache bounces straight back to its queue (squash path).
+            now = self.now()
+            placed = []
+            for req in reqs:
+                slot = free[len(placed)]
+                self.slot_req[slot] = req
+                if self._grow_slot(slot, self.pool.pages_for(req.input_len),
+                                   now):
+                    placed.append(req)
+                else:
+                    self.slot_req[slot] = None
+                    self.n_preempted += 1
+                    self.sched.on_squash(req, now)
+            reqs = placed
+            if not reqs:
+                return
         S = 1 << max(3, (max(r.input_len for r in reqs) - 1).bit_length())
         B = 1 << max(0, (len(reqs) - 1).bit_length())
         toks = np.zeros((B, S), np.int32)
@@ -220,15 +350,27 @@ class ChameleonEngine:
             self.params, self.lora, jnp.asarray(toks),
             jnp.asarray(lslots), jnp.asarray(last_pos), S)
         first_toks = np.asarray(jnp.argmax(logits, axis=-1))
-        k, v = self.kv
+        if self.paged:
+            kp, vp = self.kv_pages
+        else:
+            k, v = self.kv
         now = self.now()
+        ps = self.pool.page_size
         for i, req in enumerate(reqs):
             slot = free[i]
             self.active[slot] = True
             self.slot_req[slot] = req
             L = req.input_len
-            k = k.at[:, slot, :L].set(k_new[:, i, :L])
-            v = v.at[:, slot, :L].set(v_new[:, i, :L])
+            if self.paged:
+                pages = self.slot_pages[slot]
+                for j in range(0, L, ps):
+                    pid = pages[j // ps]
+                    n = min(ps, L - j)
+                    kp = kp.at[:, pid, :n].set(k_new[:, i, j:j + n])
+                    vp = vp.at[:, pid, :n].set(v_new[:, i, j:j + n])
+            else:
+                k = k.at[:, slot, :L].set(k_new[:, i, :L])
+                v = v.at[:, slot, :L].set(v_new[:, i, :L])
             first = int(first_toks[i])
             self.tokens = self.tokens.at[slot, 0].set(first)
             self.cache_len = self.cache_len.at[slot].set(L)
@@ -239,7 +381,10 @@ class ChameleonEngine:
             self.outputs[req.req_id] = [first]
             self._tbts[req.req_id] = []
             self._last_tok[req.req_id] = now
-        self.kv = (k, v)
+        if self.paged:
+            self.kv_pages = (kp, vp)
+        else:
+            self.kv = (k, v)
         for i, req in enumerate(reqs):
             if req.done:
                 self._finish(free[i])
@@ -250,6 +395,7 @@ class ChameleonEngine:
         now = self.now()
         req.finish_time = now
         self.sched.on_finish(req, now)
+        self._free_slot_pages(slot, req.req_id)
         self.completed.append(req)
         self.active[slot] = False
         self.slot_req[slot] = None
@@ -266,17 +412,39 @@ class ChameleonEngine:
             slowdown=1.0,   # no isolated-run oracle on the real engine
             squashes=req.squash_count, bypassed=req.bypassed))
 
+    def _ensure_decode_pages(self) -> None:
+        """Grow each active slot to cover its next decode write; slots
+        that cannot get a page even after shrinking the adapter cache
+        are preempted (freed pages let the remaining slots proceed)."""
+        now = self.now()
+        lens = np.asarray(self.cache_len)
+        ps = self.pool.page_size
+        for slot in np.where(self.active)[0]:
+            needed = int(lens[slot]) // ps + 1
+            short = needed - len(self.slot_pages[slot])
+            if short > 0 and not self._grow_slot(int(slot), short, now):
+                self._preempt(int(slot))
+
     def step(self) -> None:
         """One engine iteration: admit -> batched prefill -> one decode."""
         now = self.now()
         running = [r for r in self.slot_req if r is not None]
         admitted = self.sched.schedule(now, running)
         self._place_batch(admitted)
+        if self.paged:
+            self._ensure_decode_pages()
         if not self.active.any():
             return
-        logits, self.kv = self._decode_jit(
-            self.params, self.lora, self.tokens, self.kv,
-            self.cache_len, self.adapter_slot)
+        self.batch_occupancy.append(int(self.active.sum()))
+        if self.paged:
+            logits, self.kv_pages = self._decode_paged_jit(
+                self.params, self.lora, self.tokens, self.kv_pages,
+                jnp.asarray(self.page_table), self.cache_len,
+                self.adapter_slot)
+        else:
+            logits, self.kv = self._decode_jit(
+                self.params, self.lora, self.tokens, self.kv,
+                self.cache_len, self.adapter_slot)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         self.tokens = nxt[:, None]
         self.cache_len = self.cache_len + jnp.asarray(self.active,
@@ -304,6 +472,7 @@ class ChameleonEngine:
             self.outputs.pop(req.req_id, None)
             self._tbts.pop(req.req_id, None)
             self._last_tok.pop(req.req_id, None)
+            self._free_slot_pages(slot, req.req_id)
             self.sched.on_squash(req, self.now())
 
     def busy(self) -> bool:
@@ -329,6 +498,8 @@ class ChameleonEngine:
         self.outputs = {}
         self._tbts = {}
         self._last_tok = {}
+        self.batch_occupancy = []
+        self.n_preempted = 0
         self.cache.stats = CacheStats()
         if hasattr(self.sched, "n_bypassed"):
             self.sched.n_bypassed = 0
@@ -340,6 +511,16 @@ class ChameleonEngine:
         """Routing signal: scheduler backlog plus occupied batch slots."""
         return self.sched.queue_pressure() + float(self.active.sum())
 
+    def kv_page_stats(self) -> dict:
+        """Page-occupancy telemetry (paged mode; empty dict for dense)."""
+        if not self.paged:
+            return {}
+        total = self.n_pages - 1     # page 0 is the trash page
+        used = total - len(self.free_pages)
+        return {"kv_pages_used": used, "kv_pages_total": total,
+                "kv_page_util": used / max(1, total),
+                "preempted": self.n_preempted}
+
     def stats(self) -> dict:
         return {
             "completed": len(self.completed),
@@ -347,6 +528,8 @@ class ChameleonEngine:
             "bypassed": getattr(self.sched, "n_bypassed", 0),
             "squashed": getattr(self.sched, "n_squashed", 0),
             "resident_adapters": sorted(self.cache.resident_ids()),
+            "pool": self.pool.snapshot(),
+            **self.kv_page_stats(),
         }
 
     def metrics(self) -> RunMetrics:
@@ -368,5 +551,9 @@ class ChameleonEngine:
             "bypassed": getattr(self.sched, "n_bypassed", 0),
             "squashed": getattr(self.sched, "n_squashed", 0),
             "pressure": round(self.queue_pressure(), 3),
+            "batch_occupancy_mean": round(
+                float(np.mean(self.batch_occupancy))
+                if self.batch_occupancy else 0.0, 3),
+            **self.kv_page_stats(),
         }
         return m

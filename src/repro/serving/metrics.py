@@ -125,7 +125,11 @@ def merge_metrics(per_node: list[RunMetrics],
     and non-additive gauges (busy fractions, pressure) reported as the
     worst node's value instead of a meaningless sum.
     """
-    ratio_gauges = ("link_busy_frac", "pressure")
+    # Non-additive gauges: report the worst node instead of a sum.
+    # kv_page_util / batch_occupancy_mean are fractions of per-node
+    # capacity; kv_pages_used/total and preempted counts stay additive.
+    ratio_gauges = ("link_busy_frac", "pressure", "kv_page_util",
+                    "batch_occupancy_mean")
     merged = RunMetrics(
         n_submitted=(n_submitted if n_submitted is not None
                      else sum(m.n_submitted for m in per_node)))

@@ -1,0 +1,170 @@
+"""Smoke tests for the PR-2 control-plane bugfixes (fast; run first in CI).
+
+Three latent §4.1/§4.2 bugs found auditing the seed:
+
+1. ``AdapterCache.acquire``/``prefetch`` dropped ``queued_protect`` on
+   the way to ``make_room`` — the second-tier protection of queued
+   requests' adapters was computed by the scheduler and then silently
+   bypassed on every load.
+2. ``ChameleonScheduler.schedule`` Phase 1 only lent a queue's spare
+   quota when the queue drained completely, so a queue whose head is
+   memory-blocked never redistributed its unused quota (Algorithm 1
+   says *all* unused quota flows top-down).
+3. ``HistogramPrefetcher.run`` required ``now <= t``, so an adapter
+   whose predicted arrival had just slipped past was never warmed even
+   though it is the most imminent prediction of all.
+"""
+import pytest
+
+from repro.core import (AdapterCache, AdapterInfo, ChameleonScheduler,
+                        HistogramPrefetcher, MemoryPool,
+                        NoisyOraclePredictor, Request)
+from repro.core.scheduler import _QueueState
+
+
+def make_catalog(sizes):
+    return {aid: AdapterInfo(adapter_id=aid, rank=8, size_bytes=s,
+                             size_tokens=s) for aid, s in sizes.items()}
+
+
+def make_cache(capacity, sizes):
+    pool = MemoryPool(capacity_tokens=capacity)
+    return pool, AdapterCache(pool, make_catalog(sizes))
+
+
+# ------------------------------------------------------------------
+# Bugfix 1: queued_protect threads through acquire()/prefetch()
+# ------------------------------------------------------------------
+class TestAcquireProtectionTiers:
+    def _warm_cache(self):
+        """Adapter 1 resident and *older* (lowest eviction score), then
+        adapter 0 — without protection, 1 is the natural victim."""
+        pool, cache = make_cache(100, {0: 40, 1: 40, 2: 40, 3: 80})
+        cache.acquire(1, now=1.0); cache.release(1, now=1.0)
+        cache.acquire(0, now=5.0); cache.release(0, now=5.0)
+        return pool, cache
+
+    def test_unprotected_eviction_takes_the_queued_adapter(self):
+        pool, cache = self._warm_cache()
+        cache.acquire(2, now=6.0)             # no protect set
+        assert not cache.resident(1), "1 is oldest: natural victim"
+
+    def test_acquire_respects_queued_protection(self):
+        pool, cache = self._warm_cache()
+        # A queued request needs adapter 1: loading 2 must evict 0
+        # instead, even though 1 scores lower.
+        cache.acquire(2, now=6.0, queued_protect=[1])
+        assert cache.resident(1) and cache.resident(2)
+        assert not cache.resident(0)
+
+    def test_protection_is_second_tier_under_pressure(self):
+        pool, cache = self._warm_cache()
+        # Adapter 3 needs 80 tokens: evicting only the unprotected 0
+        # leaves 60 free, so the protected 1 must go too (second tier).
+        cache.acquire(3, now=6.0, queued_protect=[1])
+        assert cache.resident(3)
+        assert not cache.resident(0) and not cache.resident(1)
+
+    def test_prefetch_respects_queued_protection(self):
+        pool, cache = self._warm_cache()
+        assert cache.prefetch(2, now=6.0, queued_protect=[1])
+        assert cache.resident(1) and not cache.resident(0)
+
+
+# ------------------------------------------------------------------
+# Bugfix 2: a memory-blocked queue still lends its spare quota
+# ------------------------------------------------------------------
+class TestBlockedHeadQuotaRedistribution:
+    def test_blocked_head_queue_lends_spare_quota(self):
+        pool = MemoryPool(capacity_tokens=1000)
+        cache = AdapterCache(pool, make_catalog({0: 900, 1: 10}))
+        pred = NoisyOraclePredictor(accuracy=1.0, seed=0)
+        sched = ChameleonScheduler(pool, cache, cache.catalog, pred)
+        # Fill 200 tokens so adapter 0 (900 tokens) can never fit: the
+        # head of queue 0 is memory-blocked, not quota-blocked.
+        pool.reserve_request(999, 200)
+        sched.queues = [
+            _QueueState(cutoff_hi=1.0, quota=950),
+            _QueueState(cutoff_hi=float("inf"), quota=10),
+        ]
+        head = Request(input_len=10, output_len=10, adapter_id=0)
+        head.predicted_output = 10
+        head.queue_idx = 0
+        sched.queues[0].reqs.append(head)
+        # Queue 1's request charges 20+20+10 = 50 tokens > its quota of
+        # 10 — it can only run on quota borrowed from queue 0.
+        small = Request(input_len=20, output_len=20, adapter_id=1)
+        small.predicted_output = 20
+        small.queue_idx = 1
+        sched.queues[1].reqs.append(small)
+
+        batch = sched.schedule(now=1.0, running=[])
+        assert head not in batch, "adapter 0 cannot fit in memory"
+        assert small in batch, (
+            "queue 0's unused quota must be lent top-down even though "
+            "queue 0 did not drain (its head is memory-blocked)")
+        # Quota conservation: every admitted charge is accounted.
+        charged = sum(t for r in batch for _, t in r.charges)
+        assert sum(q.used for q in sched.queues) == charged
+
+    def test_drained_queue_still_lends(self):
+        """The pre-fix behaviour (drained queues lend) is preserved."""
+        pool = MemoryPool(capacity_tokens=1000)
+        cache = AdapterCache(pool, make_catalog({1: 10}))
+        pred = NoisyOraclePredictor(accuracy=1.0, seed=0)
+        sched = ChameleonScheduler(pool, cache, cache.catalog, pred)
+        sched.queues = [
+            _QueueState(cutoff_hi=1.0, quota=500),
+            _QueueState(cutoff_hi=float("inf"), quota=10),
+        ]
+        small = Request(input_len=20, output_len=20, adapter_id=1)
+        small.predicted_output = 20
+        small.queue_idx = 1
+        sched.queues[1].reqs.append(small)
+        batch = sched.schedule(now=1.0, running=[])
+        assert small in batch
+
+
+# ------------------------------------------------------------------
+# Bugfix 3: overdue predictions prefetch as most-imminent
+# ------------------------------------------------------------------
+class TestOverduePrefetch:
+    def _prefetcher(self, capacity=100):
+        pool, cache = make_cache(capacity, {0: 10, 1: 10, 2: 10})
+        return pool, cache, HistogramPrefetcher(cache, horizon=3.0)
+
+    def test_overdue_prediction_still_prefetches(self):
+        pool, cache, hp = self._prefetcher()
+        # Inter-arrivals of 10 s -> modal bucket [8, 16) -> midpoint 12
+        # -> next predicted arrival at t = 20 + 12 = 32.
+        for t in (0.0, 10.0, 20.0):
+            hp.observe_arrival(0, t)
+        # The prefetcher tick lands at t = 33: the prediction is one
+        # second overdue but well within the horizon — it must warm.
+        loaded = hp.run(now=33.0)
+        assert 0 in loaded
+        assert cache.resident(0)
+
+    def test_overdue_sorts_most_imminent(self):
+        pool, cache, hp = self._prefetcher()
+        hp.max_per_round = 1
+        for t in (0.0, 10.0, 20.0):
+            hp.observe_arrival(0, t)          # predicted at 32 (overdue)
+        for t in (13.0, 23.0, 33.0):
+            hp.observe_arrival(1, t)          # predicted at 45 (future)
+        loaded = hp.run(now=33.5)
+        assert loaded == [0], "overdue prediction outranks a future one"
+
+    def test_beyond_horizon_not_prefetched(self):
+        pool, cache, hp = self._prefetcher()
+        for t in (0.0, 100.0, 200.0):         # predicted ~ 200 + 96
+            hp.observe_arrival(0, t)
+        assert hp.run(now=201.0) == []
+
+    def test_stale_prediction_expires(self):
+        """A dead adapter's fixed past prediction must not top-rank
+        forever: overdue is imminent only within one horizon."""
+        pool, cache, hp = self._prefetcher()
+        for t in (0.0, 10.0, 20.0):           # predicted at ~32
+            hp.observe_arrival(0, t)
+        assert hp.run(now=100.0) == []

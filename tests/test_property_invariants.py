@@ -142,6 +142,63 @@ class TestCacheInvariants:
                     assert cache.resident(a), f"pinned {a} evicted!"
 
 
+class TestPagedPoolInvariants:
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["grow", "shrink", "release",
+                                   "hold", "drop"]),
+                  st.integers(0, 4),      # req / adapter id
+                  st.integers(1, 6)),     # pages (or adapter tokens x10)
+        min_size=1, max_size=200),
+        page_size=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=40, deadline=None)
+    def test_paged_churn_preserves_invariants(self, ops, page_size):
+        """Random page grow/shrink/release interleaved with adapter
+        holds/drops (the paged engine's churn): accounting stays exact,
+        request holds stay page-multiples, capacity is never exceeded."""
+        pool = MemoryPool(capacity_tokens=240, page_size=page_size)
+        pages_held: dict[int, int] = {}
+        for op, rid, n in ops:
+            try:
+                if op == "grow":
+                    pool.reserve_request_pages(rid, n)
+                    pages_held[rid] = pages_held.get(rid, 0) + n
+                elif op == "shrink":
+                    give = min(n, pages_held.get(rid, 0))
+                    pool.shrink_request(rid, give * page_size)
+                    if pages_held.get(rid) is not None:
+                        pages_held[rid] -= give
+                        if pages_held[rid] == 0:
+                            del pages_held[rid]
+                elif op == "release":
+                    pool.release_request(rid)
+                    pages_held.pop(rid, None)
+                elif op == "hold":
+                    pool.hold_adapter(rid, n * 10)
+                elif op == "drop":
+                    pool.drop_adapter(rid)
+            except Exception:
+                pass        # PoolError is legal when over-committed
+            pool.check_invariants()
+            assert pool.used_requests == \
+                sum(pages_held.values()) * page_size
+            for rid_, p in pages_held.items():
+                assert pool.request_pages(rid_) == p
+            assert pool.free_pages * page_size <= pool.free_tokens
+
+    def test_non_page_multiple_hold_rejected(self):
+        from repro.core import PoolError
+        import pytest as _pytest
+        pool = MemoryPool(capacity_tokens=64, page_size=8)
+        with _pytest.raises(PoolError):
+            pool.reserve_request(1, 12)
+        pool.reserve_request_pages(1, 2)
+        with _pytest.raises(PoolError):
+            pool.shrink_request(1, 3)
+        pool.shrink_request(1, 8)
+        pool.check_invariants()
+        assert pool.request_pages(1) == 1
+
+
 class TestMathProperties:
     @given(v=st.lists(st.floats(0.0, 1.0), min_size=2, max_size=300))
     @settings(max_examples=40, deadline=None)
