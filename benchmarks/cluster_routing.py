@@ -122,6 +122,8 @@ def validate_real_engine(rows) -> dict:
 if __name__ == "__main__":
     import argparse
 
+    from .common import emit_json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--real-engine", action="store_true",
                     help="drive N real JAX engine replicas instead of "
@@ -129,15 +131,23 @@ if __name__ == "__main__":
     ap.add_argument("--n-engines", type=int, default=2)
     ap.add_argument("--system", default="chameleon")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write {name, paper_ref, rows, validated} "
+                         "to PATH (CI schema)")
     args = ap.parse_args()
     if args.real_engine:
         rows = run_real_engine(n_engines=args.n_engines,
                                quick=not args.full, system=args.system)
         validated = validate_real_engine(rows)
+        variant = f"{NAME}_real_engine"
     else:
         rows = run(quick=not args.full)
         validated = validate(rows)
+        variant = NAME
     for r in rows:
         print({k: (round(v, 3) if isinstance(v, float) else v)
                for k, v in r.items()})
     print(validated)
+    if args.json:
+        print("wrote", emit_json(args.json, variant, PAPER_REF, rows,
+                                 validated))

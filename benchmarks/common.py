@@ -54,3 +54,21 @@ def timed(fn, *args, **kw):
     t0 = time.time()
     out = fn(*args, **kw)
     return out, time.time() - t0
+
+
+def emit_json(path: str, name: str, paper_ref: str, rows: list[dict],
+              validated: dict) -> str:
+    """Write a benchmark result document in the CI-checked schema.
+
+    Schema (asserted by ``benchmarks.check_json``): top-level keys
+    ``name`` / ``paper_ref`` / ``rows`` (non-empty list of flat dicts)
+    / ``validated`` (flat dict of derived claims).
+    """
+    doc = {"name": name, "paper_ref": paper_ref, "rows": rows,
+           "validated": validated}
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, default=float)
+    return path

@@ -50,9 +50,13 @@ def run_paged_ab(n_requests: int = 32, seed: int = 0,
 
     rows = []
     for paged in (False, True):
+        # One variable per A/B: the KV layout. Async loading and the
+        # prefetchers (their own A/B lives in run_loading_ab) are
+        # pinned off so both runs schedule deterministically.
         eng = ChameleonEngine(cfg, params, EngineConfig(
             max_slots=4, max_len=256, n_lora_slots=16, n_adapters=16,
-            seed=seed, paged=paged))
+            seed=seed, paged=paged, async_load=False,
+            queued_prefetch=False, histogram_prefetch=False))
         reqs = [Request(input_len=i, output_len=o, adapter_id=a)
                 for i, o, a in specs]
         for r in reqs:
@@ -63,6 +67,11 @@ def run_paged_ab(n_requests: int = 32, seed: int = 0,
             eng.pool.check_invariants()
             steps += 1
         m = eng.metrics()
+        # Uniform row keys across modes (the CI schema check requires
+        # it): dense reports zeroed page stats.
+        page_stats = {"kv_pages_used": 0, "kv_pages_total": 0,
+                      "kv_page_util": 0.0, "preempted": eng.n_preempted}
+        page_stats.update(eng.kv_page_stats())
         rows.append({
             "mode": "paged" if paged else "dense",
             "submitted": n_requests,
@@ -73,7 +82,7 @@ def run_paged_ab(n_requests: int = 32, seed: int = 0,
             "batch_occupancy_mean":
                 m.sched_stats["batch_occupancy_mean"],
             "steps": steps,
-            **eng.kv_page_stats(),
+            **page_stats,
         })
     return rows
 
@@ -96,6 +105,102 @@ def validate_paged(rows) -> dict:
             paged["hit_rate"] > dense["hit_rate"]
             or paged["batch_occupancy_mean"]
             > dense["batch_occupancy_mean"],
+    }
+
+
+def run_loading_ab(n_requests: int = 36, seed: int = 0,
+                   quick: bool = False) -> list[dict]:
+    """A/B the *real* engine: synchronous vs overlapped adapter loading.
+
+    Same model, same requests, same modeled H2D bandwidth — the only
+    variable is ``EngineConfig.async_load``. Sync mode blocks the whole
+    step loop for every adapter transfer (S-LoRA batch-launch
+    semantics, simulator's ``sync_adapter_load``); async mode
+    dispatches the slot write, keeps decoding, and defers only the
+    loading request (paper §4 "minimize adapter loading times"). Many
+    adapters churning through few slots put loads on the critical path,
+    so overlapping them must show up in tail TTFT.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import Request
+    from repro.models import api as model_api
+    from repro.serving.engine import ChameleonEngine, EngineConfig
+
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = model_api.init_params(cfg, jax.random.PRNGKey(seed),
+                                   jnp.float32)
+    if quick:
+        n_requests = min(n_requests, 24)
+    rng = np.random.default_rng(seed)
+    # Fixed input length -> one prefill bucket, so jit compiles once in
+    # warmup and the measured phase times loads, not compiles.
+    specs = [(24, int(rng.integers(8, 24)), int(rng.integers(0, 16)))
+             for _ in range(n_requests)]
+
+    rows = []
+    for async_load in (False, True):
+        ecfg = EngineConfig(max_slots=4, max_len=128, n_lora_slots=4,
+                            n_adapters=16, seed=seed,
+                            async_load=async_load, h2d_gbps=0.0)
+        eng = ChameleonEngine(cfg, params, ecfg)
+        # Warmup: compile prefill/decode and then drop residency state
+        # back to a cold-ish cache by the measured phase's adapters.
+        warm = Request(input_len=24, output_len=4, adapter_id=15)
+        warm.arrival_time = eng.now()
+        eng.submit(warm)
+        eng.run_until_drained()
+        eng.reset_stats()
+        # Model the H2D link only for the measured phase: ~12 ms per
+        # adapter at the catalog's mean size.
+        mean_bytes = float(np.mean(
+            [i.size_bytes for i in eng.catalog.infos.values()]))
+        eng.ecfg.h2d_gbps = mean_bytes / 0.012 / 1e9
+        reqs = []
+        for i, o, a in specs:
+            r = Request(input_len=i, output_len=o, adapter_id=a)
+            r.arrival_time = eng.now()
+            reqs.append(r)
+            eng.submit(r)
+        steps = 0
+        while eng.busy() and steps < 200_000:
+            eng.step()
+            steps += 1
+        m = eng.metrics()
+        rows.append({
+            "mode": "overlapped" if async_load else "sync",
+            "submitted": n_requests,
+            "completed": len(eng.completed),
+            "p50_ttft": m.p50_ttft(),
+            "p99_ttft": m.p99_ttft(),
+            "p99_tbt": m.p99_tbt(),
+            "adapter_loads": m.cache_stats["misses"],
+            "gb_loaded": m.cache_stats["gb_loaded"],
+            "deferred": m.sched_stats["deferred"],
+            "async_loads": m.sched_stats["async_loads"],
+            "steps": steps,
+        })
+    return rows
+
+
+def validate_loading(rows) -> dict:
+    sync = next(r for r in rows if r["mode"] == "sync")
+    over = next(r for r in rows if r["mode"] == "overlapped")
+    return {
+        "all_completed":
+            sync["completed"] == sync["submitted"]
+            and over["completed"] == over["submitted"],
+        "p99_ttft_sync": round(sync["p99_ttft"], 4),
+        "p99_ttft_overlapped": round(over["p99_ttft"], 4),
+        "p99_ttft_reduction": round(
+            1 - over["p99_ttft"] / max(sync["p99_ttft"], 1e-9), 3),
+        # The acceptance claim: overlapped loading improves P99 TTFT at
+        # identical load and identical modeled H2D bandwidth.
+        "overlap_beats_sync_p99_ttft":
+            over["p99_ttft"] < sync["p99_ttft"],
+        "overlap_deferred_placements": over["deferred"],
     }
 
 
@@ -145,21 +250,37 @@ def validate(rows) -> dict:
 
 if __name__ == "__main__":
     import argparse
+
+    from .common import emit_json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--paged", action="store_true",
                     help="A/B the real engine dense vs paged KV "
                          "instead of the simulator load sweep")
+    ap.add_argument("--loading", action="store_true",
+                    help="A/B the real engine sync vs overlapped "
+                         "adapter loading")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write {name, paper_ref, rows, validated} "
+                         "to PATH (CI schema)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.paged:
         rows = run_paged_ab(quick=args.quick)
-        for r in rows:
-            print({k: (round(v, 4) if isinstance(v, float) else v)
-                   for k, v in r.items()})
-        print(validate_paged(rows))
+        validated = validate_paged(rows)
+        variant = f"{NAME}_paged_ab"
+    elif args.loading:
+        rows = run_loading_ab(quick=args.quick)
+        validated = validate_loading(rows)
+        variant = f"{NAME}_loading_ab"
     else:
         rows = run(quick=True)
-        for r in rows:
-            print({k: (round(v, 3) if isinstance(v, float) else v)
-                   for k, v in r.items()})
-        print(validate(rows))
+        validated = validate(rows)
+        variant = NAME
+    for r in rows:
+        print({k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in r.items()})
+    print(validated)
+    if args.json:
+        print("wrote", emit_json(args.json, variant, PAPER_REF, rows,
+                                 validated))

@@ -3,8 +3,8 @@
 Pure-Python control plane (host-side, as in the real system); the JAX
 data plane lives in repro.serving / repro.models / repro.kernels.
 """
-from .adapter_cache import (AdapterCache, CacheEntry, CacheStats,
-                            CostAwareEviction, EvictionWeights,
+from .adapter_cache import (AdapterCache, AdapterState, CacheEntry,
+                            CacheStats, CostAwareEviction, EvictionWeights,
                             FairShareEviction, LRUEviction)
 from .baselines import FIFOScheduler, SJFScheduler
 from .kmeans import choose_queues, kmeans_1d, queue_index
@@ -20,7 +20,8 @@ from .scheduler import BaseScheduler, ChameleonScheduler
 from .wrs import OutputOnlyCalculator, WRSCalculator, WRSWeights
 
 __all__ = [
-    "AdapterCache", "CacheEntry", "CacheStats", "CostAwareEviction",
+    "AdapterCache", "AdapterState", "CacheEntry", "CacheStats",
+    "CostAwareEviction",
     "EvictionWeights", "FairShareEviction", "LRUEviction",
     "FIFOScheduler", "SJFScheduler",
     "choose_queues", "kmeans_1d", "queue_index",

@@ -21,10 +21,27 @@ size (bigger = costlier to reload = keep).
 """
 from __future__ import annotations
 
+import enum
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Optional
 
 from .lora import AdapterInfo
+
+
+class AdapterState(enum.Enum):
+    """Residency sub-state of a cache entry (async load state machine).
+
+    Entries are READY by default (synchronous loads, the simulator's
+    charged-latency loads). An engine whose ``on_load`` hook only
+    *dispatches* the host→device slot write marks the entry LOADING and
+    flips it to READY once the transfer completes; schedulers refuse to
+    place a LOADING adapter into a batch (the request defers, the rest
+    of the batch proceeds) and eviction never selects a mid-flight
+    entry.
+    """
+
+    LOADING = "loading"
+    READY = "ready"
 
 
 @dataclass
@@ -33,6 +50,7 @@ class CacheEntry:
     last_used: float = 0.0
     frequency: float = 0.0
     ref_count: int = 0
+    state: AdapterState = AdapterState.READY
 
     @property
     def size_tokens(self) -> int:
@@ -161,6 +179,27 @@ class AdapterCache:
     def resident_tokens(self) -> int:
         return sum(e.size_tokens for e in self.entries.values())
 
+    # -- async load state machine ------------------------------------------
+    def mark_loading(self, adapter_id: int) -> None:
+        """Entry's device bytes are in flight (engine ``on_load`` hooks
+        that dispatch the H2D write without blocking call this)."""
+        self.entries[adapter_id].state = AdapterState.LOADING
+
+    def mark_ready(self, adapter_id: int) -> None:
+        """Transfer completed; the adapter may now be placed in batches."""
+        entry = self.entries.get(adapter_id)
+        if entry is not None:
+            entry.state = AdapterState.READY
+
+    def is_ready(self, adapter_id: int) -> bool:
+        """Resident *and* usable in a batch (not mid-load)."""
+        entry = self.entries.get(adapter_id)
+        return entry is not None and entry.state is AdapterState.READY
+
+    def loading_ids(self) -> set[int]:
+        return {aid for aid, e in self.entries.items()
+                if e.state is AdapterState.LOADING}
+
     def _decay_all(self) -> None:
         for e in self.entries.values():
             e.frequency *= self.freq_decay
@@ -206,8 +245,10 @@ class AdapterCache:
             return
         entry.ref_count = max(0, entry.ref_count - 1)
         entry.last_used = now
-        if entry.ref_count == 0 and not self.enabled:
-            # S-LoRA baseline: discard immediately once unused.
+        if entry.ref_count == 0 and not self.enabled \
+                and entry.state is AdapterState.READY:
+            # S-LoRA baseline: discard immediately once unused (never a
+            # mid-load entry — its slot write is still in flight).
             self._evict(adapter_id)
 
     # -- prefetch ----------------------------------------------------------
@@ -256,9 +297,17 @@ class AdapterCache:
 
     # -- eviction ----------------------------------------------------------
     def _evictable(self, protect: Iterable[int] = ()) -> list[CacheEntry]:
+        """RC == 0, unprotected, and not mid-load.
+
+        A LOADING entry is never an eviction candidate: its H2D write is
+        in flight and would land in a slot the engine had already handed
+        to someone else. Loads complete within an iteration or two, so
+        the protection is short-lived.
+        """
         protect = set(protect)
         return [e for aid, e in self.entries.items()
-                if e.ref_count == 0 and aid not in protect]
+                if e.ref_count == 0 and aid not in protect
+                and e.state is AdapterState.READY]
 
     def _evictable_tokens(self, protect: Iterable[int] = ()) -> int:
         return sum(e.size_tokens for e in self._evictable(protect))

@@ -34,6 +34,7 @@ class _SingleQueueScheduler(BaseScheduler):
         self.max_batch_requests = max_batch_requests
         self.max_predicted_output = max_predicted_output
         self.reqs: deque[Request] = deque()
+        self.n_deferred = 0   # placements refused while the adapter loads
 
     def submit(self, req: Request, now: float) -> None:
         if req.predicted_output <= 0:
@@ -64,13 +65,27 @@ class _SingleQueueScheduler(BaseScheduler):
             # Paged engine: demand is page-granular (see
             # ChameleonScheduler._admit).
             need = self.pool.pages_for(need) * self.pool.page_size
-        ad = self.adapters[req.adapter_id]
-        extra = 0 if self.cache.resident(req.adapter_id) else ad.size_tokens
-        protect = self.queued_adapter_ids() - {req.adapter_id}
-        if not self.cache.shrink_for_requests(need + extra, now, protect):
+        aid = req.adapter_id
+        protect = self.queued_adapter_ids() - {aid}
+        # Async loads: first attempt pins + starts the load; a LOADING
+        # adapter is never placed (see ChameleonScheduler._admit).
+        if not req.adapter_ref:
+            extra = (0 if self.cache.resident(aid)
+                     else self.adapters[aid].size_tokens)
+            if not self.cache.shrink_for_requests(need + extra, now,
+                                                  protect):
+                return False
+            try:
+                self.cache.acquire(aid, now, queued_protect=protect)
+            except PoolError:
+                return False
+            req.adapter_ref = True
+        elif not self.cache.shrink_for_requests(need, now, protect):
+            return False
+        if not self.cache.is_ready(aid):
+            self.n_deferred += 1
             return False
         try:
-            self.cache.acquire(req.adapter_id, now, queued_protect=protect)
             if self.reserve_from_pool:
                 self.pool.reserve_request(req.req_id, need)
         except PoolError:

@@ -23,13 +23,19 @@ class QueuedRequestPrefetcher:
         self.cache = cache
         self.max_per_round = max_per_round
 
-    def run(self, queued_requests, now: float) -> list[int]:
-        """Prefetch missing adapters of queued requests. Returns ids loaded."""
+    def run(self, queued_requests, now: float,
+            budget: int | None = None) -> list[int]:
+        """Prefetch missing adapters of queued requests. Returns ids
+        loaded. ``budget`` caps this round below ``max_per_round`` —
+        engines pass their free *slot* count so prefetch can never
+        trigger a slot-capacity eviction."""
+        limit = (self.max_per_round if budget is None
+                 else min(self.max_per_round, budget))
         loaded = []
         seen = set()
         queued_ids = {r.adapter_id for r in queued_requests}
         for req in queued_requests:
-            if len(loaded) >= self.max_per_round:
+            if len(loaded) >= limit:
                 break
             aid = req.adapter_id
             if aid in seen or self.cache.resident(aid):
@@ -81,7 +87,12 @@ class HistogramPrefetcher:
         midpoint = (2.0 ** (mode - 1) + 2.0 ** mode) / 2 if mode > -10 else 0.0
         return last + midpoint
 
-    def run(self, now: float) -> list[int]:
+    def run(self, now: float, queued_protect=(),
+            budget: int | None = None) -> list[int]:
+        """``queued_protect`` (adapter ids of queued requests) threads
+        through to the cache so a predictive prefetch never evicts an
+        adapter a queued request is about to need (§4.1 second tier);
+        ``budget`` caps the round (see QueuedRequestPrefetcher.run)."""
         cands = []
         for aid in self._last_arrival:
             if self.cache.resident(aid):
@@ -100,10 +111,14 @@ class HistogramPrefetcher:
             if t is not None and now - self.horizon <= t <= now + self.horizon:
                 cands.append((t, aid))
         cands.sort()
+        limit = (self.max_per_round if budget is None
+                 else min(self.max_per_round, budget))
         loaded = []
-        for _, aid in cands[: self.max_per_round]:
+        protect = set(queued_protect)
+        for _, aid in cands[:limit]:
             info = self.cache.catalog[aid]
             if info.size_tokens <= self.cache.pool.free_tokens:
-                if self.cache.prefetch(aid, now):
+                if self.cache.prefetch(aid, now,
+                                       queued_protect=protect - {aid}):
                     loaded.append(aid)
         return loaded

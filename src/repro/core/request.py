@@ -43,6 +43,11 @@ class Request:
     reserved_tokens: int = 0                      # memory-pool reservation
     bypassed: bool = False                        # admitted via the bypass lane
     squash_count: int = 0
+    # Async adapter loads: True once admission has pinned (and begun
+    # loading) this request's adapter; placement may still be deferred
+    # until the load completes, and the pin survives the deferral so
+    # the mid-flight adapter cannot be evicted out from under it.
+    adapter_ref: bool = False
 
     # Progress.
     state: RequestState = RequestState.QUEUED
@@ -88,6 +93,7 @@ class Request:
         self.charges = []
         self.reserved_tokens = 0
         self.bypassed = False
+        self.adapter_ref = False     # the squash path released the pin
         self.squash_count += 1
         # TTFT is *not* reset: the user saw nothing yet on squash (the
         # first token is only surfaced once prefill re-runs), so keeping

@@ -136,6 +136,7 @@ class ChameleonScheduler(BaseScheduler):
         self._sizes: dict[int, float] = {}                # queue -> EMA tokens
         self.n_bypassed = 0
         self.n_squashed = 0
+        self.n_deferred = 0   # placements refused while the adapter loads
 
     # -- helpers -----------------------------------------------------------
     def _charge_tokens(self, req: Request) -> int:
@@ -317,17 +318,38 @@ class ChameleonScheduler(BaseScheduler):
         would do all the work, wasting prefills) but rounds the demand
         up to whole pages — the engine allocates page-granular, so a
         request that passes here can always get its prompt pages.
+
+        Async loads: the first admission attempt pins the adapter
+        (``req.adapter_ref``) and starts the load; while the entry is
+        LOADING the request is *deferred* — never placed, but the rest
+        of the batch (and the bypass lane) proceeds, and the pin keeps
+        the mid-flight entry from being evicted. Synchronous data
+        planes (the simulator, ``async_load=False`` engines) mark
+        entries READY inside ``on_load``, so the deferral branch never
+        triggers and admission is the old single-shot path.
         """
         need = self._reserve_tokens(req)
         if not self.reserve_from_pool:
             need = self.pool.pages_for(need) * self.pool.page_size
-        ad = self.adapters[req.adapter_id]
-        extra = 0 if self.cache.resident(req.adapter_id) else ad.size_tokens
-        protect = queued_protect - {req.adapter_id}
-        if not self.cache.shrink_for_requests(need + extra, now, protect):
+        aid = req.adapter_id
+        protect = queued_protect - {aid}
+        if not req.adapter_ref:
+            extra = (0 if self.cache.resident(aid)
+                     else self.adapters[aid].size_tokens)
+            if not self.cache.shrink_for_requests(need + extra, now,
+                                                  protect):
+                return False
+            try:
+                self.cache.acquire(aid, now, queued_protect=protect)
+            except PoolError:
+                return False
+            req.adapter_ref = True
+        elif not self.cache.shrink_for_requests(need, now, protect):
+            return False
+        if not self.cache.is_ready(aid):
+            self.n_deferred += 1
             return False
         try:
-            self.cache.acquire(req.adapter_id, now, queued_protect=protect)
             if self.reserve_from_pool:
                 self.pool.reserve_request(req.req_id, need)
         except PoolError:
@@ -419,6 +441,15 @@ class ChameleonScheduler(BaseScheduler):
                          + (0 if resident else ad.size_tokens)
                          ) <= self.pool.free_tokens
             if not (resident or fits_free):
+                continue
+            # A bypasser may *start* a load only into genuinely idle
+            # capacity (a free entry slot + free tokens, both checked
+            # above): with async loads the candidate is deferred, not
+            # placed, so letting up to bypass_window speculative loads
+            # evict useful entries would churn the cache for requests
+            # that may never win their seat.
+            if not resident and self.cache.max_entries is not None \
+                    and len(self.cache.entries) >= self.cache.max_entries:
                 continue
             if min_remaining and req.predicted_output > min_remaining:
                 continue

@@ -1,10 +1,19 @@
-"""jit'd public wrappers for the Pallas kernels.
+"""jit'd public wrappers for the Pallas kernels + the LoRA dispatch layer.
 
 ``use_kernel`` resolution: on TPU backends the Pallas path runs
 natively; elsewhere (this CPU container) it runs in interpret mode when
 ``interpret_ok`` — tests force that; the serving engine on CPU prefers
 the jnp reference path for speed. Wrappers also handle padding to the
 kernels' tile-alignment requirements so callers stay shape-agnostic.
+
+The LoRA *dispatch layer* (``resolve_lora_backend`` /
+``lora_delta_kernel``) is what the model data plane calls
+(models/lora_apply.py): decode steps (S == 1) route per-token LoRA
+through the bgmv kernel, batched prefill (S > 1, one contiguous run of
+S tokens per request) through the sgmv kernel with tile-aligned
+segments, and the pure-jnp einsum stays available as the CPU/oracle
+fallback. Backend choice is a static Python string resolved once per
+engine, so jit caches stay coherent.
 """
 from __future__ import annotations
 
@@ -18,9 +27,27 @@ from .bgmv import bgmv as _bgmv_pallas
 from .paged_attention import paged_attention as _paged_pallas
 from .sgmv import pack_segments, sgmv as _sgmv_pallas
 
+LORA_BACKENDS = ("auto", "einsum", "kernel")
+
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def resolve_lora_backend(backend: str | None) -> str:
+    """Resolve a ``EngineConfig.lora_backend`` knob to a concrete path.
+
+    ``auto`` (or None) picks the Pallas kernels on TPU and the einsum
+    reference elsewhere; ``kernel`` forces the Pallas path (interpret
+    mode off-TPU — what the CI parity jobs run); ``einsum`` forces the
+    reference path.
+    """
+    if backend in (None, "auto"):
+        return "kernel" if on_tpu() else "einsum"
+    if backend not in ("einsum", "kernel"):
+        raise ValueError(
+            f"lora_backend must be one of {LORA_BACKENDS}, got {backend!r}")
+    return backend
 
 
 def _pad_axis(a, axis, mult):
@@ -72,6 +99,58 @@ def lora_sgmv(x, A, B, seq_lens, adapter_slots, *, tile: int = 128,
     valid = perm_j >= 0
     return out.at[jnp.maximum(perm_j, 0)].add(
         jnp.where(valid[:, None], y, 0))
+
+
+def _lora_bgmv_tokens(x, A, B, idx, interpret):
+    """(T, din) tokens, one adapter index per token, via the bgmv kernel."""
+    x, din0 = _pad_axis(x, 1, 128)
+    A, _ = _pad_axis(A, 1, 128)
+    Bp, dout0 = _pad_axis(B, 2, 128)
+    y = _bgmv_pallas(x, A, Bp, idx, out_tile=128, interpret=interpret)
+    return y[:, :dout0]
+
+
+def _lora_sgmv_uniform(x, A, B, idx, tile, interpret):
+    """Prefill LoRA via sgmv for *uniform* segments (jit-traceable).
+
+    x: (Bt, S, din) — request b's tokens are the contiguous run x[b],
+    all runs the same (static) length S, adapter idx[b] per run. This is
+    the batched-prefill layout the engine produces (right-padded (B, S)
+    buckets), so no host-side ``pack_segments`` permutation is needed:
+    S is padded up to a tile multiple and ``tile_slot`` is idx repeated
+    per tile. The ragged path (`lora_sgmv`) keeps pack_segments for
+    host-driven concatenated layouts.
+    """
+    Bt, S, din = x.shape
+    tile = min(tile, -(-S // 8) * 8)          # small-S: shrink the tile
+    S_pad = -(-S // tile) * tile
+    if S_pad != S:
+        x = jnp.pad(x, ((0, 0), (0, S_pad - S), (0, 0)))
+    xt = x.reshape(Bt * S_pad, din)
+    xt, _ = _pad_axis(xt, 1, 128)
+    A, _ = _pad_axis(A, 1, 128)
+    Bp, dout0 = _pad_axis(B, 2, 128)
+    tile_slot = jnp.repeat(idx.astype(jnp.int32), S_pad // tile)
+    y = _sgmv_pallas(xt, A, Bp, tile_slot, tile=tile, out_tile=128,
+                     interpret=interpret)
+    return y.reshape(Bt, S_pad, -1)[:, :S, :dout0]
+
+
+def lora_delta_kernel(x, A, B, idx, *, scale: float = 1.0,
+                      tile: int = 128, interpret: bool | None = None):
+    """Multi-adapter LoRA delta through the Pallas kernels.
+
+    x: (Bt, S, din); A: (n_slots, din, r); B: (n_slots, r, dout);
+    idx: (Bt,). Decode (S == 1) routes through bgmv (one gathered
+    adapter per token); prefill (S > 1) routes each request's
+    contiguous token run through sgmv tiles. Returns (Bt, S, dout).
+    """
+    interpret = (not on_tpu()) if interpret is None else interpret
+    if x.shape[1] == 1:
+        y = _lora_bgmv_tokens(x[:, 0], A, B, idx, interpret)[:, None]
+    else:
+        y = _lora_sgmv_uniform(x, A, B, idx, tile, interpret)
+    return (scale * y).astype(x.dtype)
 
 
 def paged_attention(q, k_pages, v_pages, page_table, lengths, *,

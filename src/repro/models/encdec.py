@@ -146,7 +146,8 @@ def train_loss(cfg, params, tokens, labels, frames, aux_weight=0.0):
 
 
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
-            frames: jax.Array, lora=None, adapter_idx=None):
+            frames: jax.Array, lora=None, adapter_idx=None,
+            lora_backend: str = "einsum"):
     enc_out = encode(cfg, params, frames)
     kx, vx = cross_kv(cfg, params, enc_out)
     x = embed(tokens, params["embed/tok"]) \
@@ -156,7 +157,8 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
-                state, cache_len: jax.Array, lora=None, adapter_idx=None):
+                state, cache_len: jax.Array, lora=None, adapter_idx=None,
+                lora_backend: str = "einsum"):
     """tokens (B,1); state = ((k,v) self caches (L,B,Smax,..), (kx,vx))."""
     kv, (kx, vx) = state
     pos = jnp.reshape(cache_len, (-1, 1))                  # (B, 1)

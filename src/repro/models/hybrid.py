@@ -72,7 +72,8 @@ def _mamba_block(cfg, x, p, decode, ssm_state=None, conv_state=None):
 def _run(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
          ssm_states=None, conv_states=None, kv_caches=None,
          cache_len=None, decode: bool = False, lora=None,
-         adapter_idx=None, need_state: bool = True):
+         adapter_idx=None, need_state: bool = True,
+         lora_backend: str = "einsum"):
     """Period-scanned driver. States are stacked arrays (see module doc).
 
     Returns (x, ssm (L,...), conv (L,...), kv (n_sites,...) or None).
@@ -98,7 +99,7 @@ def _run(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
         lr = ({proj: (a, b) for proj, (a, b) in xs["lora"].items()}
               if lora is not None else None)
         x, kv_new = _attn(cfg, x, shared, cos, sin, kv, cache_len, lr,
-                          adapter_idx)
+                          adapter_idx, lora_backend=lora_backend)
         x = _mlp(cfg, x, shared)
         if not need_state:
             return x, None      # train/forward: no dead state stacks
@@ -186,14 +187,16 @@ def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
-            kv_max_len: int | None = None, lora=None, adapter_idx=None):
+            kv_max_len: int | None = None, lora=None, adapter_idx=None,
+            lora_backend: str = "einsum"):
     """Returns (last logits (B,V), (ssm, conv, kv) serve state)."""
     B, S = tokens.shape
     x = embed(tokens, params["embed/tok"])
     pos = jnp.arange(S)[None, :]
     cos, sin = rope_cos_sin(pos, cfg.head_dim, cfg.rope_theta)
     x, ssm, conv, kv = _run(cfg, params, x, cos, sin, lora=lora,
-                            adapter_idx=adapter_idx)
+                            adapter_idx=adapter_idx,
+                            lora_backend=lora_backend)
     if kv_max_len is not None and kv_max_len > S:
         k, v = kv
         pad = ((0, 0), (0, 0), (0, kv_max_len - S), (0, 0), (0, 0))
@@ -202,7 +205,8 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
-                state, cache_len: jax.Array, lora=None, adapter_idx=None):
+                state, cache_len: jax.Array, lora=None, adapter_idx=None,
+                lora_backend: str = "einsum"):
     """tokens (B,1); state = (ssm, conv, (k,v)); cache_len (B,)."""
     ssm, conv, kv = state
     x = embed(tokens, params["embed/tok"])
@@ -211,5 +215,6 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
     x, ssm, conv, kv = _run(cfg, params, x, cos, sin, ssm_states=ssm,
                             conv_states=conv, kv_caches=kv,
                             cache_len=cache_len, decode=True, lora=lora,
-                            adapter_idx=adapter_idx)
+                            adapter_idx=adapter_idx,
+                            lora_backend=lora_backend)
     return _head(cfg, params, x)[:, 0], (ssm, conv, kv)

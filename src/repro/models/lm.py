@@ -68,7 +68,8 @@ def init_params(cfg: ModelConfig, key: jax.Array,
 
 # ------------------------------------------------------------ attention
 def _qkv_proj(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
-              lora=None, adapter_idx=None, prefix: str = ""):
+              lora=None, adapter_idx=None, prefix: str = "",
+              lora_backend: str = "einsum"):
     """Normed q/k/v projections (+bias, +LoRA, +qk-norm, +RoPE).
 
     Shared by the dense and paged attention blocks so the two data
@@ -84,7 +85,8 @@ def _qkv_proj(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
         if cfg.qkv_bias and prefix + name + "_bias" in p:
             y = y + p[prefix + name + "_bias"]
         if lora is not None and name in lora:
-            y = y + lora_delta(h, lora[name], adapter_idx)
+            y = y + lora_delta(h, lora[name], adapter_idx,
+                               backend=lora_backend)
         return y
 
     q = proj("q").reshape(B, S, cfg.n_heads, cfg.head_dim)
@@ -99,24 +101,27 @@ def _qkv_proj(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
 
 
 def _o_proj(cfg: ModelConfig, x: jax.Array, out: jax.Array, p: dict,
-            lora=None, adapter_idx=None, prefix: str = "") -> jax.Array:
+            lora=None, adapter_idx=None, prefix: str = "",
+            lora_backend: str = "einsum") -> jax.Array:
     """Output projection + LoRA + residual. out: (B, S, q_dim)."""
     o = jnp.einsum("bse,ed->bsd", out, p[prefix + "o"])
     if lora is not None and "o" in lora:
-        o = o + lora_delta(out, lora["o"], adapter_idx)
+        o = o + lora_delta(out, lora["o"], adapter_idx,
+                           backend=lora_backend)
     return x + o
 
 
 def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
           kv_cache=None, cache_len=None, lora=None, adapter_idx=None,
-          prefix: str = ""):
+          prefix: str = "", lora_backend: str = "einsum"):
     """Shared attention block.
 
     Returns (out, new_kv): new_kv is (k, v) for prefill or the updated
     (k_cache, v_cache, ) slices for decode.
     """
     B, S, _ = x.shape
-    _, q, k, v = _qkv_proj(cfg, x, p, cos, sin, lora, adapter_idx, prefix)
+    _, q, k, v = _qkv_proj(cfg, x, p, cos, sin, lora, adapter_idx, prefix,
+                           lora_backend)
 
     if kv_cache is None:
         out = gqa_attention(q, k, v, causal=True)
@@ -133,14 +138,16 @@ def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
         new_kv = (k_cache, v_cache)
 
     out = out.reshape(B, S, cfg.q_dim)
-    return _o_proj(cfg, x, out, p, lora, adapter_idx, prefix), new_kv
+    return _o_proj(cfg, x, out, p, lora, adapter_idx, prefix,
+                   lora_backend), new_kv
 
 
 def _attn_paged(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
                 k_pages: jax.Array, v_pages: jax.Array,
                 page_table: jax.Array, cache_len: jax.Array,
                 page_idx: jax.Array, page_off: jax.Array,
-                lora=None, adapter_idx=None):
+                lora=None, adapter_idx=None,
+                lora_backend: str = "einsum"):
     """Decode attention over paged KV (one layer; S == 1).
 
     k/v_pages: (n_pages, page, Kh, Dh); page_table: (B, P) physical page
@@ -155,7 +162,8 @@ def _attn_paged(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
     from repro.kernels.ops import paged_attention
 
     B, S, _ = x.shape
-    _, q, k, v = _qkv_proj(cfg, x, p, cos, sin, lora, adapter_idx)
+    _, q, k, v = _qkv_proj(cfg, x, p, cos, sin, lora, adapter_idx,
+                           lora_backend=lora_backend)
     k_pages = k_pages.at[page_idx, page_off].set(k[:, 0])
     v_pages = v_pages.at[page_idx, page_off].set(v[:, 0])
     Kh, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
@@ -163,7 +171,8 @@ def _attn_paged(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
     out = paged_attention(qh, k_pages, v_pages, page_table,
                           cache_len + 1)
     out = out.reshape(B, S, cfg.q_dim)
-    return _o_proj(cfg, x, out, p, lora, adapter_idx), (k_pages, v_pages)
+    return _o_proj(cfg, x, out, p, lora, adapter_idx,
+                   lora_backend=lora_backend), (k_pages, v_pages)
 
 
 def _mlp(cfg, x, p, prefix=""):
@@ -230,7 +239,7 @@ def _positions(cfg: ModelConfig, tokens_shape, offset, mrope_pos):
 # ------------------------------------------------------------- backbone
 def _backbone(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
               kv_caches=None, cache_len=None, lora=None, adapter_idx=None,
-              collect_kv=False):
+              collect_kv=False, lora_backend: str = "einsum"):
     """Scan over layers. Returns (hidden, new_kv_stack, aux_loss).
 
     ``collect_kv`` stacks per-layer fresh K/V (prefill). Training leaves
@@ -242,7 +251,8 @@ def _backbone(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
 
     if cfg.family == Family.MOE:
         return _backbone_moe(cfg, params, x, cos, sin, kv_caches,
-                             cache_len, lora, adapter_idx, collect_kv)
+                             cache_len, lora, adapter_idx, collect_kv,
+                             lora_backend)
 
     def body(carry, xs):
         h = constrain_boundary(carry)
@@ -250,7 +260,7 @@ def _backbone(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
         kv = (xs["k"], xs["v"]) if kv_caches is not None else None
         lr = xs.get("lora")
         h, new_kv = _attn(cfg, h, p, cos, sin, kv, cache_len, lr,
-                          adapter_idx)
+                          adapter_idx, lora_backend=lora_backend)
         h = constrain_boundary(_mlp(cfg, h, p))
         if kv_caches is None and not collect_kv:
             new_kv = None
@@ -268,7 +278,8 @@ def _backbone(cfg: ModelConfig, params: dict, x: jax.Array, cos, sin,
 
 
 def _backbone_moe(cfg, params, x, cos, sin, kv_caches, cache_len,
-                  lora, adapter_idx, collect_kv=False):
+                  lora, adapter_idx, collect_kv=False,
+                  lora_backend: str = "einsum"):
     """MoE scan; supersteps of (moe_every) layers, last one MoE."""
     E = cfg.moe_every
     L = cfg.n_layers
@@ -295,7 +306,7 @@ def _backbone_moe(cfg, params, x, cos, sin, kv_caches, cache_len,
                    for proj, ab in xs["lora"].items()}
                   if lora is not None else None)
             h, kv_e = _attn(cfg, h, p_attn, cos, sin, kv, cache_len,
-                            lr, adapter_idx)
+                            lr, adapter_idx, lora_backend=lora_backend)
             new_kv.append(kv_e)
             if e == E - 1:
                 h, a = _moe(cfg, h, xs["moe"])
@@ -378,16 +389,20 @@ def make_paged_kv(cfg: ModelConfig, n_pages: int, page_size: int,
 
 
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
-            mrope_pos=None, lora=None, adapter_idx=None, last_pos=None):
+            mrope_pos=None, lora=None, adapter_idx=None, last_pos=None,
+            lora_backend: str = "einsum"):
     """Returns (last-position logits (B, V), (k_stack, v_stack)).
 
     ``last_pos`` (B,) selects the position whose logits are returned —
     needed for right-padded prefill batches (defaults to S-1).
+    ``lora_backend="kernel"`` routes the LoRA deltas through the Pallas
+    sgmv kernel (each request's row is one contiguous token run).
     """
     x = embed(tokens, params["embed/tok"])
     cos, sin = _positions(cfg, tokens.shape, 0, mrope_pos)
     h, kv, _ = _backbone(cfg, params, x, cos, sin, lora=lora,
-                         adapter_idx=adapter_idx, collect_kv=True)
+                         adapter_idx=adapter_idx, collect_kv=True,
+                         lora_backend=lora_backend)
     if last_pos is None:
         h_last = h[:, -1:]
     else:
@@ -401,11 +416,14 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
                 kv_caches, cache_len: jax.Array, mrope_pos=None,
-                lora=None, adapter_idx=None):
+                lora=None, adapter_idx=None,
+                lora_backend: str = "einsum"):
     """One decode step.
 
     tokens: (B, 1); kv_caches: (k, v) each (L, B, Smax, Kh, Dh);
     cache_len: (B,) valid lengths. Returns (logits (B,V), new caches).
+    ``lora_backend="kernel"`` routes the per-token LoRA deltas through
+    the Pallas bgmv kernel.
     """
     x = embed(tokens, params["embed/tok"])
     if cfg.mrope:
@@ -414,7 +432,8 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
         cos, sin = _positions(cfg, tokens.shape, cache_len, None)
     h, kv, _ = _backbone(cfg, params, x, cos, sin, kv_caches=kv_caches,
                          cache_len=cache_len, lora=lora,
-                         adapter_idx=adapter_idx)
+                         adapter_idx=adapter_idx,
+                         lora_backend=lora_backend)
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
@@ -423,7 +442,8 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
                       kv_pages, page_table: jax.Array,
-                      cache_len: jax.Array, lora=None, adapter_idx=None):
+                      cache_len: jax.Array, lora=None, adapter_idx=None,
+                      lora_backend: str = "einsum"):
     """One decode step over a paged KV pool (dense-family scan).
 
     tokens: (B, 1); kv_pages: (k_pages, v_pages) each (L, n_pages,
@@ -451,7 +471,8 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
         lr = xs.get("lora")
         h, (kp, vp) = _attn_paged(cfg, h, p, cos, sin, xs["kp"],
                                   xs["vp"], page_table, cache_len,
-                                  page_idx, page_off, lr, adapter_idx)
+                                  page_idx, page_off, lr, adapter_idx,
+                                  lora_backend)
         h = constrain_boundary(_mlp(cfg, h, p))
         return h, (kp, vp)
 

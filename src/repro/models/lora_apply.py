@@ -1,4 +1,4 @@
-"""Multi-adapter LoRA application (pure-JAX reference path).
+"""Multi-adapter LoRA application: backend dispatch + reference path.
 
 The serving data plane applies, per request b with adapter index
 idx[b]:
@@ -8,10 +8,16 @@ idx[b]:
 A: (n_slots, d_in, r_max), B: (n_slots, r_max, d_out) — adapter *slots*
 are fixed device buffers managed by the Chameleon cache (weights of
 evicted adapters are overwritten in place; ranks < r_max are
-zero-padded so one static shape serves every rank). On TPU the gather +
-two skinny matmuls are fused by the Pallas bgmv/sgmv kernels
-(repro.kernels); this einsum form is the oracle and the path XLA sees
-in the dry-run.
+zero-padded so one static shape serves every rank).
+
+``lora_delta`` dispatches on ``backend``: ``"kernel"`` routes through
+the fused Pallas bgmv (decode, S == 1) / sgmv (prefill, S > 1) kernels
+in repro.kernels.ops — the gather + two skinny matmuls in one kernel
+invocation, scalar-prefetched adapter indices, no materialised
+(B, din, r) gather; ``"einsum"`` is the pure-jnp oracle both CI parity
+jobs and the CPU engine run. The engine resolves its
+``EngineConfig.lora_backend`` knob once (kernel on TPU, einsum
+elsewhere under ``auto``) so jit caches stay coherent.
 """
 from __future__ import annotations
 
@@ -20,9 +26,13 @@ import jax.numpy as jnp
 
 
 def lora_delta(x: jax.Array, ab: tuple[jax.Array, jax.Array],
-               adapter_idx: jax.Array, scale: float = 1.0) -> jax.Array:
+               adapter_idx: jax.Array, scale: float = 1.0,
+               backend: str = "einsum") -> jax.Array:
     """x: (B, S, d_in); ab = (A (n,din,r), B (n,r,dout)); idx: (B,)."""
     A, Bm = ab
+    if backend == "kernel":
+        from repro.kernels.ops import lora_delta_kernel
+        return lora_delta_kernel(x, A, Bm, adapter_idx, scale=scale)
     A_sel = jnp.take(A, adapter_idx, axis=0)        # (B, din, r)
     B_sel = jnp.take(Bm, adapter_idx, axis=0)       # (B, r, dout)
     t = jnp.einsum("bsd,bdr->bsr", x, A_sel)

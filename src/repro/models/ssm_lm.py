@@ -59,7 +59,7 @@ def init_serve_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
 
 
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
-            lora=None, adapter_idx=None):
+            lora=None, adapter_idx=None, lora_backend: str = "einsum"):
     """Returns (last logits (B,V), (ssm_states, conv_states))."""
     x = embed(tokens, params["embed/tok"])
 
@@ -77,7 +77,8 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
 
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
-                state, cache_len=None, lora=None, adapter_idx=None):
+                state, cache_len=None, lora=None, adapter_idx=None,
+                lora_backend: str = "einsum"):
     """tokens (B,1); state = (ssm (L,B,Di,N), conv (L,B,K-1,Di))."""
     ssm, conv = state
     x = embed(tokens, params["embed/tok"])[:, 0]         # (B,D)

@@ -3,8 +3,22 @@
 This is the *real* data plane (tier 1 in DESIGN §2): a jit'd decode
 step over slot-padded KV caches and LoRA adapter-slot buffers, driven
 by the same ChameleonScheduler / AdapterCache / MemoryPool objects the
-simulator uses. On TPU the LoRA matmuls route to the Pallas bgmv/sgmv
-kernels; on this CPU container the jnp reference path runs (same math).
+simulator uses. LoRA matmuls route through the dispatch layer in
+``repro.kernels.ops`` (``EngineConfig.lora_backend``): under ``auto``,
+TPU backends run the fused Pallas bgmv (decode) / sgmv (prefill)
+kernels and this CPU container runs the jnp einsum reference — the same
+math, asserted token-identical by the CI parity jobs, which force the
+kernel path in interpret mode.
+
+Adapter loading is asynchronous by default (``EngineConfig.async_load``,
+the systems half of paper §4's "minimize adapter loading times"): a
+cache miss *dispatches* the host→device slot write and marks the cache
+entry LOADING; the step loop keeps decoding the current batch while the
+transfer is in flight, the scheduler refuses to place the loading
+request (and only that request — the bypass lane may fill its seat),
+and readiness is polled at the top of each step. Queued-request and
+histogram prefetchers issue the same non-blocking loads ahead of
+demand, so prefetch transfers overlap decode compute too.
 
 Static-shape design (TPU-native):
 - ``max_slots`` request slots; inactive slots run masked garbage that is
@@ -50,8 +64,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (AdapterCache, AdapterInfo, CacheStats,
-                        ChameleonScheduler, MemoryPool,
-                        NoisyOraclePredictor, Request, RequestState)
+                        ChameleonScheduler, HistogramPrefetcher,
+                        MemoryPool, NoisyOraclePredictor, PoolError,
+                        QueuedRequestPrefetcher, Request, RequestState)
+from repro.kernels.ops import resolve_lora_backend
 from repro.models import api
 from repro.models.base import ModelConfig
 from repro.models.lora_apply import (init_lora_slots, random_lora_weights,
@@ -73,6 +89,23 @@ class EngineConfig:
     # families without paged decode support fall back automatically.
     paged: bool = True
     page_size: int = 16
+    # LoRA data-plane backend: "auto" = Pallas bgmv/sgmv on TPU, einsum
+    # elsewhere; "kernel"/"einsum" force a path (kernel runs Pallas
+    # interpret mode off-TPU — the CI parity jobs use this).
+    lora_backend: str = "auto"
+    # Async adapter loading: dispatch the host→device slot write and
+    # keep stepping; placement waits on readiness (paper §4 overlap).
+    # False restores the blocking load (the A/B baseline).
+    async_load: bool = True
+    # Modeled H2D link bandwidth (GB/s) for load-latency experiments;
+    # 0 = unmodeled (readiness is actual device-write completion).
+    # Sync mode stalls the step loop for the modeled transfer time,
+    # async mode only defers the affected adapter's readiness.
+    h2d_gbps: float = 0.0
+    # Prefetchers (paper §4.1): walk the wait queues / per-adapter
+    # arrival histograms and issue non-blocking loads ahead of demand.
+    queued_prefetch: bool = True
+    histogram_prefetch: bool = True
 
 
 class AdapterCatalog:
@@ -139,6 +172,20 @@ class ChameleonEngine:
                                     self.catalog.r_max)
         self.slot_of: dict[int, int] = {}       # adapter_id -> lora slot
         self.free_slots = list(range(e.n_lora_slots))
+        # Double-buffered async loads: slot writes land in the
+        # *staging* chain (``_lora_staging``) while the jit'd steps
+        # keep reading the active ``self.lora`` — no data dependency on
+        # an in-flight transfer, so decode genuinely overlaps the copy.
+        # ``_pending_loads`` maps adapter_id -> (staging snapshot to
+        # swap active to — None once swapped, fresh device arrays to
+        # poll, modeled-ready wall time); `_poll_loads` swaps snapshots
+        # in FIFO order as writes land and READYs entries once the
+        # modeled time also passed.
+        self._lora_staging = self.lora
+        self._pending_loads: dict[
+            int, tuple[Optional[dict], tuple, float]] = {}
+        self.n_async_loads = 0
+        self._lora_backend = resolve_lora_backend(e.lora_backend)
 
         # --- memory pool in token units ---
         infos = self.catalog.infos
@@ -159,6 +206,13 @@ class ChameleonEngine:
             skw["t_refresh"] = 5.0
         self.sched = scheduler_cls(self.pool, self.cache, infos, pred,
                                    **skw)
+        # §4.1 prefetchers: their cache.prefetch calls run through the
+        # same async `_load_adapter`, so prefetch H2D transfers overlap
+        # decode compute instead of stalling the loop.
+        self.q_prefetch = (QueuedRequestPrefetcher(self.cache)
+                           if e.queued_prefetch else None)
+        self.h_prefetch = (HistogramPrefetcher(self.cache)
+                           if e.histogram_prefetch else None)
         # Paged mode: the engine holds exactly its allocated pages in
         # the pool (per req_id) and grows/frees them itself; the
         # scheduler's worst-case reservation is switched off.
@@ -211,32 +265,113 @@ class ChameleonEngine:
 
     # ----------------------------------------------------- adapter moves
     def _load_adapter(self, info: AdapterInfo) -> None:
+        """Cache ``on_load`` hook: stage the adapter into a device slot.
+
+        Async mode (default) dispatches the host→device write into the
+        *staging* buffer chain and marks the entry LOADING; the jit'd
+        steps keep reading the active ``self.lora``, which has no data
+        dependency on the in-flight transfer, so decode overlaps the
+        copy for real. `_poll_loads` swaps the staging snapshot in once
+        the write lands. Sync mode blocks until the write (plus any
+        modeled H2D time) lands — the S-LoRA baseline the fig10 loading
+        A/B measures against.
+        """
+        if not self.free_slots:
+            raise RuntimeError(
+                "adapter slot accounting drift: no free LoRA slot for "
+                f"adapter {info.adapter_id} "
+                f"(n_lora_slots={self.ecfg.n_lora_slots}, "
+                f"slot_of={dict(sorted(self.slot_of.items()))}, "
+                f"cache_resident={sorted(self.cache.resident_ids())}, "
+                f"cache_loading={sorted(self.cache.loading_ids())})")
         slot = self.free_slots.pop()
         self.slot_of[info.adapter_id] = slot
-        self.lora = write_adapter_to_slot(
-            self.lora, self.host_adapters[info.adapter_id], slot)
+        self._lora_staging = write_adapter_to_slot(
+            self._lora_staging, self.host_adapters[info.adapter_id], slot)
+        e = self.ecfg
+        delay = (info.size_bytes / (e.h2d_gbps * 1e9)
+                 if e.h2d_gbps > 0 else 0.0)
+        if e.async_load:
+            self.cache.mark_loading(info.adapter_id)
+            self._pending_loads[info.adapter_id] = (
+                self._lora_staging,
+                jax.tree_util.tree_leaves(self._lora_staging),
+                self.now() + delay)
+            self.n_async_loads += 1
+        else:
+            jax.block_until_ready(self._lora_staging)
+            self.lora = self._lora_staging
+            if delay:
+                time.sleep(delay)   # modeled H2D stall blocks the loop
+
+    def _poll_loads(self) -> None:
+        """Retire in-flight loads; runs every step, never blocks.
+
+        Two decoupled transitions so snapshots die fast: (1) once a
+        load's device write completes, its staging snapshot is swapped
+        into the active buffer and *dropped* — snapshots live only for
+        the actual write (ms), not the modeled transfer window, so at
+        most a couple of extra slot-buffer copies exist transiently
+        during a load burst; (2) the cache entry flips READY only after
+        the modeled ``h2d_gbps`` time also elapsed. Swaps are FIFO:
+        each snapshot was built on the previous one, so activating the
+        first *unswapped* head is monotone and never exposes a later
+        in-flight write.
+        """
+        now = self.now()
+        for aid in list(self._pending_loads):
+            staged, leaves, t_ready = self._pending_loads[aid]
+            if staged is not None:
+                if not all(x.is_ready() for x in leaves):
+                    break           # FIFO: later writes chain on this one
+                self.lora = staged
+                self._pending_loads[aid] = (None, (), t_ready)
+            if now >= t_ready:
+                del self._pending_loads[aid]
+                self.cache.mark_ready(aid)
+
+    def flush_loads(self) -> None:
+        """Barrier: block until every in-flight load lands (warmup /
+        stats resets — a rebased clock must not strand a modeled
+        ready-time in the old epoch)."""
+        if not self._pending_loads:
+            return
+        jax.block_until_ready(self._lora_staging)
+        self.lora = self._lora_staging
+        for aid in list(self._pending_loads):
+            del self._pending_loads[aid]
+            self.cache.mark_ready(aid)
 
     def _evict_adapter(self, info: AdapterInfo) -> None:
         slot = self.slot_of.pop(info.adapter_id)
         self.free_slots.append(slot)
+        # LOADING entries are never eviction candidates, so a pending
+        # load here is unreachable; drop it anyway to stay consistent.
+        self._pending_loads.pop(info.adapter_id, None)
 
     # ------------------------------------------------------- jit'd steps
+    # ``self._lora_backend`` is a resolved Python constant captured by
+    # these jit'd closures, so one engine = one backend = one coherent
+    # jit cache (no per-call retraces on the backend choice).
     def _decode_fn(self, params, lora, tokens, kv, cache_len,
                    adapter_slot):
         return api.decode_step(self.cfg, params, tokens, kv, cache_len,
-                               lora=lora, adapter_idx=adapter_slot)
+                               lora=lora, adapter_idx=adapter_slot,
+                               lora_backend=self._lora_backend)
 
     def _decode_paged_fn(self, params, lora, tokens, kv_pages,
                          page_table, cache_len, adapter_slot):
         return api.decode_step_paged(self.cfg, params, tokens, kv_pages,
                                      page_table, cache_len, lora=lora,
-                                     adapter_idx=adapter_slot)
+                                     adapter_idx=adapter_slot,
+                                     lora_backend=self._lora_backend)
 
     def _prefill_fn(self, params, lora, tokens, adapter_slot, last_pos,
                     S):
         del S
         return api.prefill(self.cfg, params, tokens, lora=lora,
-                           adapter_idx=adapter_slot, last_pos=last_pos)
+                           adapter_idx=adapter_slot, last_pos=last_pos,
+                           lora_backend=self._lora_backend)
 
     # ------------------------------------------------------- page moves
     def _alloc_page(self, req_id: int, now: float) -> Optional[int]:
@@ -303,7 +438,10 @@ class ChameleonEngine:
     # ---------------------------------------------------------- lifecycle
     def submit(self, req: Request) -> None:
         """Non-blocking: enqueue with the scheduler; no device work."""
-        self.sched.submit(req, self.now())
+        now = self.now()
+        self.sched.submit(req, now)
+        if self.h_prefetch is not None:
+            self.h_prefetch.observe_arrival(req.adapter_id, now)
 
     def _place_batch(self, reqs: list[Request]) -> None:
         """Batched prefill admission: one jit'd prefill over a (B, S)
@@ -425,15 +563,41 @@ class ChameleonEngine:
             if short > 0 and not self._grow_slot(int(slot), short, now):
                 self._preempt(int(slot))
 
+    def _run_prefetchers(self, now: float) -> None:
+        """Ahead-of-demand loads (paper §4.1). Dispatched async, they
+        overlap the decode compute this same step launches; admission
+        ran first, so prefetch never steals memory from the batch."""
+        # Prefetch only fills *idle* slots: with every slot occupied it
+        # would have to evict, fighting the cost-aware policy (§4.1:
+        # prefetching must never evict useful entries). The budget is
+        # the live free-slot count, re-read between prefetchers, so a
+        # round can never load past the last idle slot. The simulator
+        # has no slot cap, so this gate lives here, not in the
+        # prefetchers.
+        if not self.free_slots:
+            return
+        queued = self.sched.queued_requests_in_order()
+        if self.q_prefetch is not None and queued:
+            self.q_prefetch.run(queued, now, budget=len(self.free_slots))
+        if self.h_prefetch is not None and self.free_slots:
+            self.h_prefetch.run(
+                now, queued_protect={r.adapter_id for r in queued},
+                budget=len(self.free_slots))
+
     def step(self) -> None:
-        """One engine iteration: admit -> batched prefill -> one decode."""
+        """One engine iteration: retire finished loads -> admit ->
+        prefetch -> batched prefill -> one decode."""
+        self._poll_loads()
         now = self.now()
         running = [r for r in self.slot_req if r is not None]
         admitted = self.sched.schedule(now, running)
+        self._run_prefetchers(now)
         self._place_batch(admitted)
         if self.paged:
             self._ensure_decode_pages()
         if not self.active.any():
+            if self._pending_loads:
+                time.sleep(2e-4)   # idle: let in-flight loads land
             return
         self.batch_occupancy.append(int(self.active.sum()))
         if self.paged:
@@ -493,6 +657,7 @@ class ChameleonEngine:
         adapter loads) so reported metrics cover only the measured run.
         Device state and cache residency are kept — replicas start warm
         but identically so across routing policies."""
+        self.flush_loads()
         self.completed = []
         self.records = []
         self.outputs = {}
@@ -500,11 +665,11 @@ class ChameleonEngine:
         self._last_tok = {}
         self.batch_occupancy = []
         self.n_preempted = 0
+        self.n_async_loads = 0
         self.cache.stats = CacheStats()
-        if hasattr(self.sched, "n_bypassed"):
-            self.sched.n_bypassed = 0
-        if hasattr(self.sched, "n_squashed"):
-            self.sched.n_squashed = 0
+        for counter in ("n_bypassed", "n_squashed", "n_deferred"):
+            if hasattr(self.sched, counter):
+                setattr(self.sched, counter, 0)
 
     # ---------------------------------------------------------- reporting
     def queue_pressure(self) -> float:
@@ -527,6 +692,9 @@ class ChameleonEngine:
             "cache": self.cache.stats.__dict__.copy(),
             "bypassed": getattr(self.sched, "n_bypassed", 0),
             "squashed": getattr(self.sched, "n_squashed", 0),
+            "deferred": getattr(self.sched, "n_deferred", 0),
+            "async_loads": self.n_async_loads,
+            "pending_loads": len(self._pending_loads),
             "resident_adapters": sorted(self.cache.resident_ids()),
             "pool": self.pool.snapshot(),
             **self.kv_page_stats(),
@@ -550,6 +718,8 @@ class ChameleonEngine:
         m.sched_stats = {
             "bypassed": getattr(self.sched, "n_bypassed", 0),
             "squashed": getattr(self.sched, "n_squashed", 0),
+            "deferred": getattr(self.sched, "n_deferred", 0),
+            "async_loads": self.n_async_loads,
             "pressure": round(self.queue_pressure(), 3),
             "batch_occupancy_mean": round(
                 float(np.mean(self.batch_occupancy))

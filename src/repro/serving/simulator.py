@@ -151,7 +151,11 @@ class NodeSimulator:
                 self.q_prefetch.run(self.sched.queued_requests_in_order(),
                                     self.now)
             if self.h_prefetch:
-                self.h_prefetch.run(self.now)
+                # §4.1 second tier: a predictive prefetch must not
+                # evict an adapter a queued request is about to need.
+                self.h_prefetch.run(
+                    self.now,
+                    queued_protect=self.sched.queued_adapter_ids())
 
             # 4. Promote loads that completed.
             still = []

@@ -1,0 +1,287 @@
+"""LoRA kernel-dispatch parity + async adapter-load state machine.
+
+Parity contract: with ``lora_backend="kernel"`` (Pallas bgmv/sgmv in
+interpret mode on CPU) the full ``prefill`` / ``decode_step`` /
+``decode_step_paged`` outputs must be float-close — and the decoded
+*tokens* identical — to the einsum reference at mixed adapter ranks.
+These are the tests the kernels-interpret CI job runs, so the engine
+docstring's "LoRA matmuls route to the Pallas kernels" claim can never
+silently rot again.
+
+State machine contract: a LOADING adapter is never placed into a batch
+(the request defers, everything else proceeds), and the engine's async
+loads eventually complete every request.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AdapterCache, AdapterInfo, AdapterState,
+                        ChameleonScheduler, MemoryPool,
+                        NoisyOraclePredictor, Request)
+from repro.models import api
+from repro.models.lm import decode_step, decode_step_paged, prefill
+from repro.models.lora_apply import (init_lora_slots, lora_delta,
+                                     random_lora_weights,
+                                     write_adapter_to_slot)
+
+KEY = jax.random.PRNGKey(11)
+R_MAX = 32
+MIXED_RANKS = (8, 16, 32)           # zero-padded into one static r_max
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def lora_slots(small_model):
+    """Slot buffers holding adapters of mixed ranks (paper Fig. 2)."""
+    cfg, _ = small_model
+    slots = init_lora_slots(KEY, len(MIXED_RANKS), cfg.n_layers,
+                            cfg.d_model, cfg.q_dim, cfg.kv_dim, R_MAX,
+                            dtype=jnp.float32)
+    for i, rank in enumerate(MIXED_RANKS):
+        w = random_lora_weights(jax.random.PRNGKey(100 + i), rank, R_MAX,
+                                cfg.n_layers, cfg.d_model, cfg.q_dim,
+                                cfg.kv_dim, dtype=jnp.float32)
+        slots = write_adapter_to_slot(slots, w, i)
+    return slots
+
+
+def assert_close(a, b, what):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=2e-4, atol=2e-4, err_msg=what)
+
+
+class TestDispatchParity:
+    """ops-level: einsum oracle vs the bgmv/sgmv kernel routes."""
+
+    @pytest.mark.parametrize("Bt,S", [(4, 1), (1, 1), (3, 12), (2, 16),
+                                      (1, 7)])
+    def test_lora_delta_backends_match(self, Bt, S):
+        ks = jax.random.split(KEY, 4)
+        n, din, r, dout = 5, 128, 32, 192
+        A = (jax.random.normal(ks[0], (n, din, r)) * 0.05).astype(
+            jnp.float32)
+        B = (jax.random.normal(ks[1], (n, r, dout)) * 0.05).astype(
+            jnp.float32)
+        x = jax.random.normal(ks[2], (Bt, S, din), jnp.float32)
+        idx = jax.random.randint(ks[3], (Bt,), 0, n)
+        y_e = lora_delta(x, (A, B), idx, backend="einsum")
+        y_k = lora_delta(x, (A, B), idx, backend="kernel")
+        assert_close(y_e, y_k, f"lora_delta Bt={Bt} S={S}")
+
+    def test_rank_padding_zero_rows_are_inert(self):
+        """Rank-8 content zero-padded to r_max must equal a pure rank-8
+        computation on both backends."""
+        ks = jax.random.split(KEY, 3)
+        din, dout, r = 128, 128, 8
+        A8 = jax.random.normal(ks[0], (2, din, r)) * 0.1
+        B8 = jax.random.normal(ks[1], (2, r, dout)) * 0.1
+        A = jnp.zeros((2, din, R_MAX)).at[:, :, :r].set(A8)
+        B = jnp.zeros((2, R_MAX, dout)).at[:, :r, :].set(B8)
+        x = jax.random.normal(ks[2], (2, 4, din))
+        idx = jnp.array([0, 1])
+        want = lora_delta(x, (A8, B8), idx, backend="einsum")
+        got = lora_delta(x, (A, B), idx, backend="kernel")
+        assert_close(want, got, "rank padding")
+
+
+class TestEndToEndParity:
+    """Full model entry points, token-identical across backends."""
+
+    def _prefill_io(self, small_model):
+        cfg, _ = small_model
+        B, S = 3, 12
+        tokens = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                                    cfg.vocab_size)
+        idx = jnp.array([0, 2, 1])   # mixed ranks in one batch
+        last_pos = jnp.array([S - 1, 5, 9])
+        return tokens, idx, last_pos
+
+    def test_prefill_parity(self, small_model, lora_slots):
+        cfg, params = small_model
+        tokens, idx, last_pos = self._prefill_io(small_model)
+        outs = {}
+        for be in ("einsum", "kernel"):
+            logits, (k, v) = prefill(cfg, params, tokens, lora=lora_slots,
+                                     adapter_idx=idx, last_pos=last_pos,
+                                     lora_backend=be)
+            outs[be] = (logits, k, v)
+        assert_close(outs["einsum"][0], outs["kernel"][0], "prefill logits")
+        assert_close(outs["einsum"][1], outs["kernel"][1], "prefill k")
+        assert_close(outs["einsum"][2], outs["kernel"][2], "prefill v")
+        assert (jnp.argmax(outs["einsum"][0], -1)
+                == jnp.argmax(outs["kernel"][0], -1)).all(), (
+            "first decoded token must be identical across backends")
+
+    def test_decode_step_parity(self, small_model, lora_slots):
+        cfg, params = small_model
+        B, Smax = 3, 32
+        kv = api.init_serve_state(cfg, B, Smax, jnp.float32)
+        tokens = jax.random.randint(jax.random.PRNGKey(6), (B, 1), 0,
+                                    cfg.vocab_size)
+        cache_len = jnp.array([4, 9, 0])
+        idx = jnp.array([1, 0, 2])
+        outs = {}
+        for be in ("einsum", "kernel"):
+            logits, new_kv = decode_step(cfg, params, tokens, kv,
+                                         cache_len, lora=lora_slots,
+                                         adapter_idx=idx, lora_backend=be)
+            outs[be] = (logits, new_kv)
+        assert_close(outs["einsum"][0], outs["kernel"][0], "decode logits")
+        assert_close(outs["einsum"][1][0], outs["kernel"][1][0], "decode k")
+        assert (jnp.argmax(outs["einsum"][0], -1)
+                == jnp.argmax(outs["kernel"][0], -1)).all()
+
+    def test_decode_step_paged_parity(self, small_model, lora_slots):
+        cfg, params = small_model
+        B, page, P = 3, 8, 4
+        n_pages = 1 + B * P          # page 0 is the trash page
+        kv_pages = api.init_paged_serve_state(cfg, n_pages, page,
+                                              jnp.float32)
+        # Fill with noise so parity covers reads of pre-existing KV too.
+        kv_pages = tuple(
+            jax.random.normal(jax.random.PRNGKey(7 + i), kp.shape,
+                              kp.dtype) * 0.1
+            for i, kp in enumerate(kv_pages))
+        page_table = jnp.arange(1, 1 + B * P).reshape(B, P)
+        tokens = jax.random.randint(jax.random.PRNGKey(8), (B, 1), 0,
+                                    cfg.vocab_size)
+        cache_len = jnp.array([3, 11, 17])
+        idx = jnp.array([2, 1, 0])
+        outs = {}
+        for be in ("einsum", "kernel"):
+            logits, new_kv = decode_step_paged(
+                cfg, params, tokens, kv_pages, page_table, cache_len,
+                lora=lora_slots, adapter_idx=idx, lora_backend=be)
+            outs[be] = (logits, new_kv)
+        assert_close(outs["einsum"][0], outs["kernel"][0],
+                     "paged decode logits")
+        assert_close(outs["einsum"][1][0], outs["kernel"][1][0],
+                     "paged decode k_pages")
+        assert (jnp.argmax(outs["einsum"][0], -1)
+                == jnp.argmax(outs["kernel"][0], -1)).all()
+
+    def test_engine_tokens_identical_across_backends(self, small_model):
+        """Whole-engine A/B: same trace, einsum vs kernel data plane,
+        token-for-token identical outputs (sync loads keep the two
+        schedules deterministic)."""
+        from repro.serving.engine import ChameleonEngine, EngineConfig
+        cfg, params = small_model
+        outs = {}
+        for be in ("einsum", "kernel"):
+            eng = ChameleonEngine(cfg, params, EngineConfig(
+                max_slots=4, max_len=64, n_lora_slots=4, n_adapters=4,
+                seed=0, lora_backend=be, async_load=False))
+            rng = np.random.default_rng(2)
+            reqs = [Request(input_len=int(rng.integers(4, 20)),
+                            output_len=int(rng.integers(2, 8)),
+                            adapter_id=int(rng.integers(0, 4)))
+                    for _ in range(6)]
+            for r in reqs:
+                eng.submit(r)
+            eng.run_until_drained()
+            outs[be] = [eng.outputs[r.req_id] for r in reqs]
+        assert outs["einsum"] == outs["kernel"]
+
+
+class TestLoadingStateMachine:
+    def _control_plane(self, on_load=None):
+        infos = {i: AdapterInfo(adapter_id=i, rank=8, size_bytes=1 << 20,
+                                size_tokens=8) for i in range(4)}
+        pool = MemoryPool(capacity_tokens=4096)
+        cache = AdapterCache(pool, infos, on_load=on_load, max_entries=4)
+        sched = ChameleonScheduler(pool, cache, infos,
+                                   NoisyOraclePredictor(accuracy=1.0),
+                                   max_batch_requests=4)
+        return pool, cache, sched
+
+    def test_loading_adapter_never_placed(self):
+        """The core async-load invariant: while an entry is LOADING the
+        scheduler defers the request instead of placing (or stalling
+        anything else); once READY it places normally."""
+        loading = []
+        cache_box = []
+
+        def on_load(info):
+            cache_box[0].mark_loading(info.adapter_id)
+            loading.append(info.adapter_id)
+
+        pool, cache, sched = self._control_plane(on_load)
+        cache_box.append(cache)
+        req = Request(input_len=8, output_len=4, adapter_id=1)
+        sched.submit(req, 0.0)
+        for t in range(3):                     # stays deferred while LOADING
+            assert sched.schedule(float(t), []) == []
+        assert loading == [1], "exactly one load dispatched"
+        assert cache.entries[1].state is AdapterState.LOADING
+        assert req.adapter_ref, "pin held across the deferral"
+        assert cache.entries[1].ref_count == 1
+        # ≥1 per tick (Algorithm 1 may retry the head in both phases).
+        assert sched.n_deferred >= 3
+        cache.mark_ready(1)
+        batch = sched.schedule(3.0, [])
+        assert batch == [req]
+        assert cache.stats.misses == 1 and cache.stats.hits == 0, (
+            "a deferred load is one miss, not a miss plus fake hits")
+
+    def test_loading_entry_not_evictable(self):
+        pool, cache, sched = self._control_plane()
+        cache.prefetch(0, 0.0)
+        cache.mark_loading(0)
+        assert cache._evictable() == []
+        cache.mark_ready(0)
+        assert len(cache._evictable()) == 1
+
+    def test_other_requests_proceed_while_loading(self):
+        """A mid-load head must not stall resident-adapter requests:
+        the bypass lane fills the batch."""
+        loading = []
+        cache_box = []
+
+        def on_load(info):
+            # Only adapter 1 loads slowly; the rest are instant.
+            if info.adapter_id == 1:
+                cache_box[0].mark_loading(info.adapter_id)
+                loading.append(info.adapter_id)
+
+        pool, cache, sched = self._control_plane(on_load)
+        cache_box.append(cache)
+        slow = Request(input_len=8, output_len=4, adapter_id=1)
+        fast = Request(input_len=8, output_len=4, adapter_id=2)
+        sched.submit(slow, 0.0)
+        sched.submit(fast, 0.0)
+        batch = sched.schedule(0.0, [])
+        assert fast in batch and slow not in batch
+        cache.mark_ready(1)
+        assert slow in sched.schedule(1.0, batch)
+
+    def test_engine_async_loads_complete(self, small_model):
+        """Engine-level: modeled H2D latency defers placements but every
+        request still completes and every load retires."""
+        from repro.serving.engine import ChameleonEngine, EngineConfig
+        cfg, params = small_model
+        eng = ChameleonEngine(cfg, params, EngineConfig(
+            max_slots=4, max_len=64, n_lora_slots=4, n_adapters=8,
+            seed=0, async_load=True, h2d_gbps=0.5))
+        rng = np.random.default_rng(3)
+        reqs = [Request(input_len=int(rng.integers(4, 20)),
+                        output_len=int(rng.integers(2, 8)),
+                        adapter_id=int(rng.integers(0, 8)))
+                for _ in range(8)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_until_drained()
+        st = eng.stats()
+        assert st["completed"] == 8
+        assert st["async_loads"] > 0
+        assert st["pending_loads"] == 0
+        assert not eng.cache.loading_ids()

@@ -36,6 +36,19 @@ def fixed_trace(n=12, seed=3, adapters=8):
              int(rng.integers(0, adapters))) for _ in range(n)]
 
 
+def step_until(eng, cond, timeout_s=30.0):
+    """Step until ``cond()`` — placement waits on the async adapter
+    load, whose device write completes on its own wall-clock schedule,
+    so the bound is time, not a step count."""
+    import time
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        eng.step()
+        if cond():
+            return True
+    return False
+
+
 def run_checked(eng, reqs, max_steps=10_000):
     """Drain with pool invariants checked after every engine step."""
     for r in reqs:
@@ -106,7 +119,7 @@ class TestPagedAccounting:
         eng = make_engine(small_model, paged=True)
         r = Request(input_len=20, output_len=60, adapter_id=0)
         eng.submit(r)
-        eng.step()      # prefill + first decode
+        assert step_until(eng, lambda: r.req_id in eng.pool._request_holds)
         ps = eng.pool.page_size
         held = eng.pool._request_holds[r.req_id]
         assert held <= eng.pool.pages_for(20 + 2) * ps, (
@@ -123,8 +136,9 @@ class TestPreemption:
         eng = make_engine(small_model, paged=True)
         r = Request(input_len=8, output_len=60, adapter_id=0)
         eng.submit(r)
-        eng.step()                       # placed: 1 page covers 8+8 toks
-        assert eng.active.any()
+        # Placed once the async adapter load lands: 1 page covers
+        # 8+8 toks.
+        assert step_until(eng, lambda: eng.active.any())
         stolen, eng.free_pages = eng.free_pages, []
         for _ in range(20):              # decode crosses the page bound
             eng.step()
@@ -148,8 +162,8 @@ class TestPreemption:
         eng = make_engine(small_model, paged=True)
         r = Request(input_len=17, output_len=4, adapter_id=0)
         eng.submit(r)
-        eng.step()
-        assert eng.active.any(), "prompt pages must follow admission"
+        assert step_until(eng, lambda: eng.active.any()), (
+            "prompt pages must follow admission")
         assert eng.n_preempted == 0
         eng.drain()
         assert eng.stats()["completed"] == 1
