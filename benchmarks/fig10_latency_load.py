@@ -49,6 +49,7 @@ def run_paged_ab(n_requests: int = 32, seed: int = 0,
               int(rng.integers(0, 16))) for _ in range(n_requests)]
 
     rows = []
+    tokens_by_mode = {}
     for paged in (False, True):
         # One variable per A/B: the KV layout. Async loading and the
         # prefetchers (their own A/B lives in run_loading_ab) are
@@ -57,15 +58,22 @@ def run_paged_ab(n_requests: int = 32, seed: int = 0,
             max_slots=4, max_len=256, n_lora_slots=16, n_adapters=16,
             seed=seed, paged=paged, async_load=False,
             queued_prefetch=False, histogram_prefetch=False))
-        reqs = [Request(input_len=i, output_len=o, adapter_id=a)
-                for i, o, a in specs]
-        for r in reqs:
-            eng.submit(r)
+        # Unified surface: handles stream the tokens; the A/B asserts
+        # the streamed tokens equal the engine's internal record and
+        # (below) are identical across KV layouts — greedy sampling is
+        # the pre-SamplingParams argmax, bit for bit.
+        handles = [eng.submit(Request(input_len=i, output_len=o,
+                                      adapter_id=a))
+                   for i, o, a in specs]
         steps = 0
         while eng.busy() and steps < 50_000:
             eng.step()
             eng.pool.check_invariants()
             steps += 1
+        streamed = [h.tokens for h in handles]
+        assert streamed == [eng.outputs[h.req_id] for h in handles], \
+            "handle streams diverged from the engine output record"
+        tokens_by_mode["paged" if paged else "dense"] = streamed
         m = eng.metrics()
         # Uniform row keys across modes (the CI schema check requires
         # it): dense reports zeroed page stats.
@@ -82,6 +90,8 @@ def run_paged_ab(n_requests: int = 32, seed: int = 0,
             "batch_occupancy_mean":
                 m.sched_stats["batch_occupancy_mean"],
             "steps": steps,
+            "tokens_identical_to_dense":
+                tokens_by_mode.get("dense") == streamed,
             **page_stats,
         })
     return rows
@@ -95,6 +105,9 @@ def validate_paged(rows) -> dict:
         "all_completed":
             dense["completed"] == dense["submitted"]
             and paged["completed"] == paged["submitted"],
+        # Greedy SamplingParams must reproduce the pre-redesign tokens
+        # exactly: paged and dense decode the identical stream.
+        "tokens_identical": bool(paged["tokens_identical_to_dense"]),
         "hit_rate_dense": round(dense["hit_rate"], 4),
         "hit_rate_paged": round(paged["hit_rate"], 4),
         "occupancy_dense": dense["batch_occupancy_mean"],

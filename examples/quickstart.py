@@ -1,51 +1,83 @@
 """Quickstart: serve a small LLM with many LoRA adapters via Chameleon.
 
-Runs the *real* JAX engine (continuous batching + Chameleon adapter
-cache + WRS multi-queue scheduler) over a reduced Llama-style model on
-whatever device this host has. ~1 minute on CPU.
+Drives the *real* JAX engine (continuous batching + Chameleon adapter
+cache + WRS multi-queue scheduler) through the unified serving surface
+(DESIGN §3): ``build_system`` assembles the tier, ``submit`` returns a
+``RequestHandle`` that streams tokens, carries the lifecycle state
+machine, and supports ``cancel()`` and per-request ``SamplingParams``.
+~1 minute on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The same four verbs drive every tier — swap ``tier="engine"`` for
+``"sim"`` (paper-scale DES) or ``"cluster"`` (N replicas, one router).
+Exits non-zero unless at least one token streamed and one cancellation
+completed cleanly (the CI api-smoke contract).
 """
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.configs import get_config
-from repro.core import Request
-from repro.models import api
-from repro.serving.engine import ChameleonEngine, EngineConfig
+from repro.core import Request, RequestState, SamplingParams
+from repro.serving import build_system
+from repro.serving.engine import EngineConfig
 
 
 def main() -> None:
-    cfg = get_config("chameleon-llama-7b").reduced()
-    print(f"model: {cfg.name} (reduced: {cfg.n_layers}L d{cfg.d_model})")
-    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    system = build_system(
+        "chameleon", tier="engine",
+        ecfg=EngineConfig(max_slots=4, max_len=128, n_lora_slots=4,
+                          n_adapters=8))
+    print(f"system: {type(system).__name__} (unified serving surface)")
 
-    eng = ChameleonEngine(cfg, params, EngineConfig(
-        max_slots=4, max_len=128, n_lora_slots=4, n_adapters=8))
+    # --- streaming: iterate a handle; the engine is pumped for you ---
+    streamed = []
+    handle = system.submit(
+        Request(input_len=12, output_len=8, adapter_id=0,
+                prompt=list(range(100, 112))),
+        on_token=streamed.append)
+    print("streaming req", handle.req_id, "tokens:", end=" ", flush=True)
+    for tok in handle:
+        print(tok, end=" ", flush=True)
+    print(f"  [{handle.state.value}]")
+    assert len(streamed) == 8, "expected 8 streamed tokens"
 
+    # --- sampling: per-request temperature/top-k with a seed ---------
+    sampled = system.submit(
+        Request(input_len=12, output_len=8, adapter_id=1),
+        sampling=SamplingParams(temperature=0.8, top_k=20, seed=7),
+    ).result()
+    print(f"sampled  req tokens={sampled.tokens} "
+          f"(T=0.8 top_k=20 seed=7)")
+
+    # --- a small batch + one cancellation ----------------------------
     rng = np.random.default_rng(0)
-    reqs = [Request(input_len=int(rng.integers(4, 30)),
-                    output_len=int(rng.integers(4, 24)),
-                    adapter_id=int(rng.integers(0, 8)))
-            for _ in range(16)]
-    for r in reqs:
-        eng.submit(r)
-    eng.run_until_drained()
+    handles = [system.submit(Request(
+        input_len=int(rng.integers(4, 30)),
+        output_len=int(rng.integers(4, 24)),
+        adapter_id=int(rng.integers(0, 8)))) for _ in range(14)]
+    victim = handles[len(handles) // 2]
+    assert victim.cancel(), "cancel must succeed on a live request"
+    system.drain()
+    assert victim.state is RequestState.CANCELLED, victim.state
+    done = [h for h in handles if h.state is RequestState.FINISHED]
+    print(f"\ncompleted {len(done)}/{len(handles)} "
+          f"(1 cancelled cleanly)")
 
-    print(f"\ncompleted {len(eng.completed)} requests")
-    for r in eng.completed[:6]:
-        toks = eng.outputs.get(r.req_id, [])
-        print(f"  req {r.req_id:3d} adapter={r.adapter_id} "
-              f"in={r.input_len:3d} out={r.generated:3d} "
-              f"ttft={r.ttft():.3f}s tokens={toks[:8]}...")
-    st = eng.stats()
+    for h in done[:5]:
+        res = h.result()
+        print(f"  req {res.req_id:3d} adapter={res.adapter_id} "
+              f"n={res.n_tokens:3d} queue={res.queue_wait:.3f}s "
+              f"load={res.adapter_load_wait:.3f}s "
+              f"ttft={res.ttft:.3f}s e2e={res.e2e:.3f}s")
+
+    st = system.stats()
     c = st["cache"]
     print(f"\nadapter cache: {c['hits']} hits / {c['misses']} misses "
-          f"/ {c['evictions']} evictions "
-          f"(hit rate {c['hits'] / max(c['hits'] + c['misses'], 1):.2f})")
-    print(f"resident adapters at drain: {st['resident_adapters']}")
-    print(f"scheduler: bypassed={st['bypassed']} squashed={st['squashed']}")
+          f"/ {c['evictions']} evictions")
+    print(f"scheduler: bypassed={st['bypassed']} "
+          f"squashed={st['squashed']} cancelled={st['cancelled']} "
+          f"expired={st['expired']}")
+    print("resident adapters at drain:", st["resident_adapters"])
+    print("api-smoke ok: streamed tokens + clean cancellation")
 
 
 if __name__ == "__main__":

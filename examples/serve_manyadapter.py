@@ -43,46 +43,45 @@ def run_sim(rps: float) -> None:
 
 
 def run_engine() -> None:
-    import jax
-    import jax.numpy as jnp
-    from repro.configs import get_config
-    from repro.core import Request
-    from repro.models import api
-    from repro.serving.engine import ChameleonEngine, EngineConfig
+    from repro.core import Request, RequestState
+    from repro.serving import build_system
+    from repro.serving.engine import EngineConfig
 
-    print("=== real JAX engine (reduced model) ===")
-    cfg = get_config("chameleon-llama-7b").reduced()
-    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    eng = ChameleonEngine(cfg, params, EngineConfig(
+    print("=== real JAX engine (reduced model, unified surface) ===")
+    eng = build_system("chameleon", tier="engine", ecfg=EngineConfig(
         max_slots=6, max_len=128, n_lora_slots=4, n_adapters=12))
     rng = np.random.default_rng(1)
-    for _ in range(24):
-        eng.submit(Request(input_len=int(rng.integers(4, 40)),
-                           output_len=int(rng.integers(4, 30)),
-                           adapter_id=int(rng.integers(0, 12))))
-    eng.run_until_drained()
-    ttfts = sorted(r.ttft() for r in eng.completed)
-    print(f"completed {len(eng.completed)}; "
+    handles = [eng.submit(Request(input_len=int(rng.integers(4, 40)),
+                                  output_len=int(rng.integers(4, 30)),
+                                  adapter_id=int(rng.integers(0, 12))))
+               for _ in range(24)]
+    # Stream one request live; cancel another mid-queue (the api-smoke
+    # contract: at least one streamed token, one clean cancellation).
+    first_tok = next(iter(handles[0]))
+    victim = handles[-1]
+    assert victim.cancel()
+    eng.drain()
+    assert victim.state is RequestState.CANCELLED
+    done = [h.result() for h in handles
+            if h.state is RequestState.FINISHED]
+    assert len(done) == 23 and first_tok == handles[0].tokens[0]
+    ttfts = sorted(r.ttft for r in done)
+    print(f"completed {len(done)} (+1 cancelled); "
           f"p50 TTFT {ttfts[len(ttfts)//2]:.3f}s  "
           f"p99 TTFT {ttfts[-1]:.3f}s")
     print("cache:", eng.stats()["cache"])
+    print("api-smoke ok: streamed tokens + clean cancellation")
 
 
 def run_engine_cluster(n_engines: int) -> None:
-    import jax
-    import jax.numpy as jnp
-    from repro.configs import get_config
     from repro.core.lora import build_adapter_pool
-    from repro.models import api
-    from repro.serving.cluster import EngineCluster, EngineClusterConfig
+    from repro.serving import build_system
     from repro.serving.engine import EngineConfig
     from repro.serving.trace import (TraceConfig, downscale_for_engine,
                                      synthesize)
 
     print(f"=== real-engine cluster ({n_engines} replicas, "
           f"adapter-affinity routing) ===")
-    cfg = get_config("chameleon-llama-7b").reduced()
-    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
     ecfg = EngineConfig(max_slots=4, max_len=128, n_lora_slots=3,
                         n_adapters=12)
     base = synthesize(TraceConfig(rps=12.0, duration_s=4.0,
@@ -90,8 +89,8 @@ def run_engine_cluster(n_engines: int) -> None:
                       build_adapter_pool(ecfg.n_adapters, 64, 4, 64))
     trace = downscale_for_engine(base, ecfg.n_adapters,
                                  max_input=48, max_output=16)
-    cluster = EngineCluster(cfg, params, ecfg, EngineClusterConfig(
-        n_engines=n_engines, policy="adapter_affinity"))
+    cluster = build_system("chameleon", tier="cluster", ecfg=ecfg,
+                           n_nodes=n_engines, policy="adapter_affinity")
     cluster.warmup()
     merged, per_node = cluster.run(trace.requests)
     print(f"completed {merged.completed()}/{merged.n_submitted}  "

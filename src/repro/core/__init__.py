@@ -15,7 +15,8 @@ from .predictor import (HistogramPredictor, NoisyOraclePredictor, bucket_of,
                         bucket_repr, measure_accuracy)
 from .prefetcher import HistogramPrefetcher, QueuedRequestPrefetcher
 from .quotas import QueueStats, assign_quotas, tok_min
-from .request import Request, RequestState
+from .request import Request, RequestState, TERMINAL_STATES
+from .sampling import GREEDY, SamplingParams
 from .scheduler import BaseScheduler, ChameleonScheduler
 from .wrs import OutputOnlyCalculator, WRSCalculator, WRSWeights
 
@@ -32,7 +33,8 @@ __all__ = [
     "bucket_repr", "measure_accuracy",
     "HistogramPrefetcher", "QueuedRequestPrefetcher",
     "QueueStats", "assign_quotas", "tok_min",
-    "Request", "RequestState",
+    "Request", "RequestState", "TERMINAL_STATES",
+    "GREEDY", "SamplingParams",
     "BaseScheduler", "ChameleonScheduler",
     "OutputOnlyCalculator", "WRSCalculator", "WRSWeights",
 ]

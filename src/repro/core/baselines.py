@@ -56,6 +56,21 @@ class _SingleQueueScheduler(BaseScheduler):
     def queued_requests_in_order(self) -> list[Request]:
         return list(self.reqs)
 
+    def cancel(self, req: Request, now: float) -> bool:
+        if req in self.reqs:
+            self.reqs.remove(req)
+            self._release_unplaced(req, now)
+            return True
+        return False
+
+    def reap_expired(self, now: float) -> list[Request]:
+        expired = [r for r in self.reqs
+                   if r.deadline is not None and r.deadline <= now]
+        for r in expired:
+            self.reqs.remove(r)
+            self._release_unplaced(r, now)
+        return expired
+
     def _order(self, now: float) -> None:
         """Hook: reorder self.reqs before admission."""
 
@@ -82,8 +97,7 @@ class _SingleQueueScheduler(BaseScheduler):
             req.adapter_ref = True
         elif not self.cache.shrink_for_requests(need, now, protect):
             return False
-        if not self.cache.is_ready(aid):
-            self.n_deferred += 1
+        if not self._gate_adapter_ready(req, now):
             return False
         try:
             if self.reserve_from_pool:

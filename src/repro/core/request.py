@@ -1,10 +1,25 @@
 """Request lifecycle for many-adapter LLM serving.
 
-A request arrives with a known input length, an (unknown at admission)
-true output length, and the id of the LoRA adapter it targets. The
-scheduler sees only the *predicted* output length. All timestamps are
-floats in seconds on an externally-supplied clock so that the same code
-drives both the real engine and the discrete-event simulator.
+A request arrives with a known input length (or real prompt tokens), an
+(unknown at admission) true output length, and the id of the LoRA
+adapter it targets. The scheduler sees only the *predicted* output
+length. All timestamps are floats in seconds on an externally-supplied
+clock so that the same code drives both the real engine and the
+discrete-event simulator.
+
+Lifecycle (DESIGN §3):
+
+    QUEUED --> LOADING --> RUNNING --> FINISHED
+       |          |           |
+       |          |           +-----> EXPIRED   (deadline passed)
+       +----------+----------------> CANCELLED  (handle.cancel())
+
+LOADING is the async-adapter deferral: admission pinned the adapter and
+its host->device transfer is in flight, so the request cannot be placed
+yet (the rest of the batch proceeds). RUNNING requests may bounce back
+to QUEUED via the squash path (bypass misprediction / page preemption);
+``preserved_tokens`` keeps the already-streamed prefix across that
+requeue so the user-visible stream never rewinds.
 """
 from __future__ import annotations
 
@@ -13,14 +28,26 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Optional
 
+from .sampling import SamplingParams
+
 _req_counter = itertools.count()
+
+#: Terminal lifecycle states: once reached, a request never leaves.
+TERMINAL_STATES: frozenset = None  # filled below (needs RequestState)
 
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
+    LOADING = "loading"       # admission pinned the adapter; H2D in flight
     RUNNING = "running"       # in the continuous batch (prefill or decode)
     FINISHED = "finished"
+    CANCELLED = "cancelled"   # handle.cancel() before completion
+    EXPIRED = "expired"       # deadline/TTL passed before completion
     SQUASHED = "squashed"     # bypasser that exceeded its predicted length
+
+
+TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
+                             RequestState.EXPIRED})
 
 
 @dataclass
@@ -32,6 +59,19 @@ class Request:
     adapter_id: int
     arrival_time: float = 0.0
     req_id: int = field(default_factory=lambda: next(_req_counter))
+
+    # Real prompt token ids (length == input_len). None keeps the
+    # synthetic arange prompt the engine historically fabricated, so
+    # trace-driven workloads need no token material.
+    prompt: Optional[list] = None
+
+    # How to turn logits into tokens (engine tier). None = greedy.
+    sampling: Optional[SamplingParams] = None
+
+    # Absolute deadline on the serving system's clock; the scheduler
+    # reaps queued requests past it and the engine step loop expires
+    # running ones. None = no deadline.
+    deadline: Optional[float] = None
 
     # Filled by the predictor at admission.
     predicted_output: int = 0
@@ -48,16 +88,40 @@ class Request:
     # until the load completes, and the pin survives the deferral so
     # the mid-flight adapter cannot be evicted out from under it.
     adapter_ref: bool = False
+    # Cooperative cancellation: set by RequestHandle.cancel() on a
+    # RUNNING request; the engine finalises the slot at the next step
+    # boundary (a jit'd decode cannot be interrupted mid-call).
+    cancel_requested: bool = False
 
     # Progress.
     state: RequestState = RequestState.QUEUED
     generated: int = 0              # decode tokens emitted so far
+
+    # Squash/requeue continuity: tokens already surfaced to the handle
+    # (and their TBT records) survive the requeue; re-execution
+    # regenerates the same prefix (greedy / position-seeded sampling is
+    # deterministic) without re-streaming or re-counting it.
+    preserved_tokens: list = field(default_factory=list)
+    preserved_tbts: list = field(default_factory=list)
+    # Engine clock time of the last token actually streamed to the
+    # handle; survives requeue so the first *new* token after a squash
+    # gets an honest TBT (measured from what the user last saw, not
+    # from the silent re-execution of the prefix).
+    last_stream_time: Optional[float] = None
 
     # Timestamps (seconds).
     first_scheduled_time: Optional[float] = None
     first_token_time: Optional[float] = None      # TTFT reference point
     finish_time: Optional[float] = None
     adapter_load_wait: float = 0.0  # time spent stalled on adapter loading
+    load_wait_start: Optional[float] = None       # deferral began (transient)
+
+    def __post_init__(self):
+        if self.prompt is not None:
+            self.prompt = list(self.prompt)
+            if len(self.prompt) != self.input_len:
+                # The prompt is authoritative when both are given.
+                self.input_len = len(self.prompt)
 
     # ------------------------------------------------------------------
     @property
@@ -68,8 +132,20 @@ class Request:
         return self.input_len + self.predicted_output
 
     @property
+    def max_output_tokens(self) -> int:
+        """Decode budget: the workload truth capped by SamplingParams."""
+        if self.sampling is not None \
+                and self.sampling.max_new_tokens is not None:
+            return min(self.output_len, self.sampling.max_new_tokens)
+        return self.output_len
+
+    @property
     def done(self) -> bool:
-        return self.generated >= self.output_len
+        return self.generated >= self.max_output_tokens
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
 
     def exceeded_prediction(self) -> bool:
         """True when the request ran past its predicted decode length."""
@@ -86,6 +162,27 @@ class Request:
             return None
         return self.finish_time - self.arrival_time
 
+    def queue_wait(self) -> Optional[float]:
+        """Arrival -> first admission into the batch."""
+        if self.first_scheduled_time is None:
+            return None
+        return self.first_scheduled_time - self.arrival_time
+
+    def stash_progress(self, tokens: Optional[list],
+                       tbts: Optional[list],
+                       last_stream_time: Optional[float]) -> None:
+        """Squash/preemption: keep the already-streamed tokens, their
+        TBT records and the last stream timestamp on the request so
+        the requeue (and the eventual re-execution) preserves them.
+        One implementation shared by every serving tier — the engine
+        and the DES pop their per-request records into this."""
+        if tokens is not None:
+            self.preserved_tokens = tokens
+        if tbts is not None:
+            self.preserved_tbts = tbts
+        if last_stream_time is not None:
+            self.last_stream_time = last_stream_time
+
     def reset_for_requeue(self) -> None:
         """Squash: roll progress back so the request re-executes fully."""
         self.generated = 0
@@ -94,9 +191,12 @@ class Request:
         self.reserved_tokens = 0
         self.bypassed = False
         self.adapter_ref = False     # the squash path released the pin
+        self.load_wait_start = None
         self.squash_count += 1
-        # TTFT is *not* reset: the user saw nothing yet on squash (the
-        # first token is only surfaced once prefill re-runs), so keeping
-        # the worst-case timestamps is the honest accounting. We clear
-        # first_token_time because the original token was discarded.
-        self.first_token_time = None
+        # TTFT is *not* reset when tokens were already streamed: the
+        # user saw the preserved prefix, so the original first-token
+        # timestamp is the honest one. Without streamed tokens (legacy
+        # paths that never populated preserved_tokens) the first token
+        # is only surfaced once prefill re-runs, so it is cleared.
+        if not self.preserved_tokens:
+            self.first_token_time = None

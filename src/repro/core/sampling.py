@@ -1,0 +1,69 @@
+"""Per-request sampling parameters for the serving surface.
+
+Pure-Python control-plane object (no jax import): requests carry a
+``SamplingParams`` through every tier; only the real engine turns it
+into device work via the batched sampler in ``repro.models.lm``
+(``sample_tokens``). The default is greedy decoding, which reproduces
+the pre-SamplingParams engine token-for-token (argmax over logits).
+
+Seeding: sampling randomness is keyed per *(seed, token position)* —
+never per batch slot or step — so a request decodes the same tokens
+regardless of batch composition, KV layout (dense/paged), LoRA backend
+(einsum/kernel), or a squash/requeue that re-executes its prefix.
+``seed=None`` with ``temperature > 0`` derives the seed from the
+request id, which keeps runs reproducible without forcing callers to
+thread seeds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """How to turn logits into the next token, per request.
+
+    temperature  <= 0 means greedy (argmax); > 0 scales logits.
+    top_k        0 disables; else sample only among the k best logits.
+    top_p        1.0 disables; else nucleus sampling (smallest prefix of
+                 the sorted distribution with cumulative prob >= top_p;
+                 the best token is always kept).
+    seed         per-request RNG seed; None derives it from the req_id.
+    max_new_tokens  caps decode length below the workload's output_len
+                 (None = no cap).
+    stop_token_ids  generation finishes early when one is sampled (the
+                 stop token itself is kept, vLLM-style).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int | None = None
+    max_new_tokens: int | None = None
+    stop_token_ids: tuple[int, ...] = field(default_factory=tuple)
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+        if self.max_new_tokens is not None and self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        # Normalise for hashing/equality (callers pass lists too).
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(self.stop_token_ids))
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def seed_for(self, req_id: int) -> int:
+        """The effective RNG seed for a request (masked to uint32)."""
+        s = self.seed if self.seed is not None else req_id
+        return int(s) & 0xFFFFFFFF
+
+
+GREEDY = SamplingParams()

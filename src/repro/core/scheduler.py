@@ -36,6 +36,9 @@ class BaseScheduler:
 
     name = "base"
 
+    # Subclasses are expected to expose ``self.cache`` (AdapterCache);
+    # the unplaced-release helper below uses it to drop async-load pins.
+
     # Dense engines let the scheduler reserve the predicted worst case
     # (input + predicted output) in the MemoryPool at admission. The
     # paged engine flips this off: it holds exactly its allocated KV
@@ -74,6 +77,50 @@ class BaseScheduler:
 
     def queued_adapter_ids(self) -> set[int]:
         return set()
+
+    # -- lifecycle: cancellation and deadlines ---------------------------
+    def _release_unplaced(self, req: Request, now: float) -> None:
+        """Drop everything an *unplaced* request can hold: queued
+        requests carry no pool reservation or quota charges, so the
+        only resource is the async-load adapter pin (``adapter_ref``).
+        The in-flight H2D transfer, if any, completes harmlessly — the
+        entry is merely unpinned and becomes evictable."""
+        if req.adapter_ref:
+            self.cache.release(req.adapter_id, now)
+            req.adapter_ref = False
+        req.load_wait_start = None
+
+    def cancel(self, req: Request, now: float) -> bool:
+        """Remove a queued (or LOADING-deferred) request from the wait
+        queues, releasing its adapter pin. Returns False when the
+        request is not queued here (already placed or finished) — the
+        engine then cancels it at the next step boundary."""
+        return False
+
+    def reap_expired(self, now: float) -> list[Request]:
+        """Remove and return queued requests whose deadline passed.
+        Called from the engine/simulator step loop; the caller marks
+        the returned requests EXPIRED and notifies their handles."""
+        return []
+
+    def _gate_adapter_ready(self, req: Request, now: float) -> bool:
+        """Async-load admission gate shared by every scheduler: while
+        the pinned adapter's H2D transfer is in flight the request is
+        *deferred* — surfaced as LOADING, its load-wait window opened
+        for the latency breakdown, never placed. Returns True once the
+        adapter is usable (closing the window and restoring QUEUED so
+        the caller's admission can proceed)."""
+        if not self.cache.is_ready(req.adapter_id):
+            self.n_deferred += 1
+            if req.load_wait_start is None:
+                req.load_wait_start = now
+            req.state = RequestState.LOADING
+            return False
+        if req.load_wait_start is not None:
+            req.adapter_load_wait += now - req.load_wait_start
+            req.load_wait_start = None
+            req.state = RequestState.QUEUED
+        return True
 
 
 @dataclass
@@ -170,6 +217,25 @@ class ChameleonScheduler(BaseScheduler):
         charge = sum(self._charge_tokens(r)
                      for r in self.queued_requests_in_order())
         return self.pending_count() + charge / max(1, self.pool.capacity_tokens)
+
+    def cancel(self, req: Request, now: float) -> bool:
+        for q in self.queues:
+            if req in q.reqs:
+                q.reqs.remove(req)
+                self._release_unplaced(req, now)
+                return True
+        return False
+
+    def reap_expired(self, now: float) -> list[Request]:
+        expired: list[Request] = []
+        for q in self.queues:
+            overdue = [r for r in q.reqs
+                       if r.deadline is not None and r.deadline <= now]
+            for r in overdue:
+                q.reqs.remove(r)
+                self._release_unplaced(r, now)
+                expired.append(r)
+        return expired
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request, now: float) -> None:
@@ -346,8 +412,7 @@ class ChameleonScheduler(BaseScheduler):
             req.adapter_ref = True
         elif not self.cache.shrink_for_requests(need, now, protect):
             return False
-        if not self.cache.is_ready(aid):
-            self.n_deferred += 1
+        if not self._gate_adapter_ready(req, now):
             return False
         try:
             if self.reserve_from_pool:

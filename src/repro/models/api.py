@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import encdec, hybrid, lm, ssm_lm
 from .base import Family, ModelConfig
 from .lm import init_params  # shared: param_shapes covers every family
+from .lm import sample_tokens  # family-agnostic: operates on logits
 
 
 def _mod(cfg: ModelConfig):

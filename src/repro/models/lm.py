@@ -388,6 +388,47 @@ def make_paged_kv(cfg: ModelConfig, n_pages: int, page_size: int,
     return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
 
 
+# ------------------------------------------------------------- sampling
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array, seeds: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    """Batched next-token sampler, one row per batch slot (jit-safe).
+
+    logits (B, V) float; temperature/top_p (B,) float; top_k (B,) int
+    (0 = disabled); seeds (B,) uint32-ish int; positions (B,) int token
+    index being sampled. Rows with ``temperature <= 0`` are greedy
+    argmax — bit-identical to the pre-SamplingParams engine. Stochastic
+    rows draw Gumbel noise from ``fold_in(PRNGKey(seed), position)``,
+    so a token's randomness depends only on (seed, position): the same
+    request resamples identically across batch compositions, dense vs
+    paged KV, einsum vs kernel LoRA backends, and squash re-execution.
+
+    top-k keeps the k best logits; top-p keeps the smallest sorted
+    prefix whose cumulative probability reaches top_p (the best token
+    always survives both masks).
+    """
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+    # Rank every vocab entry within its row (0 = best).
+    order = jnp.argsort(scaled, axis=-1)[:, ::-1]
+    ranks = jnp.argsort(order, axis=-1)
+    keep_k = ranks < jnp.where(top_k > 0, top_k, V)[:, None]
+    # Nucleus: keep entries whose *preceding* cumulative mass < top_p.
+    probs = jax.nn.softmax(scaled, axis=-1)
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    keep_p_sorted = (cum - sorted_p) < top_p[:, None]
+    keep_p = jnp.take_along_axis(keep_p_sorted, ranks, axis=-1)
+    masked = jnp.where(keep_k & keep_p, scaled, -jnp.inf)
+    keys = jax.vmap(lambda s, p: jax.random.fold_in(
+        jax.random.PRNGKey(s), p))(seeds.astype(jnp.uint32),
+                                   positions.astype(jnp.uint32))
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (V,)))(keys)
+    sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
             mrope_pos=None, lora=None, adapter_idx=None, last_pos=None,
             lora_backend: str = "einsum"):

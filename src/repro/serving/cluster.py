@@ -150,6 +150,54 @@ class Cluster:
                              cfg.affinity_overload_factor,
                              seed=cfg.node.seed)
         self._outstanding = np.zeros(cfg.n_nodes, int)
+        self.n_submitted = 0
+
+    # ----------------------------------------------- serving surface
+    # The DES cluster serves the same ServingSystem protocol as
+    # EngineCluster: submit routes on live queue pressure + residency
+    # and returns a handle; step advances every node's virtual time.
+    def submit(self, req, *, sampling=None, on_token=None, ttl=None):
+        loads = [sim.queue_pressure() for sim in self.nodes]
+        resident = [sim.cache.resident(req.adapter_id)
+                    for sim in self.nodes]
+        node = self.router.route(req.adapter_id, loads, resident)
+        handle = self.nodes[node].submit(
+            req, sampling=sampling, on_token=on_token, ttl=ttl)
+        handle.node = node
+        handle._system = self
+        self.n_submitted += 1
+        return handle
+
+    def cancel(self, handle) -> bool:
+        if handle.node is None:
+            return False
+        return self.nodes[handle.node].cancel(handle)
+
+    def step(self) -> None:
+        for sim in self.nodes:
+            if sim.busy():
+                sim.step()
+
+    def busy(self) -> bool:
+        return any(sim.busy() for sim in self.nodes)
+
+    def drain(self, max_steps: int = 2_000_000) -> None:
+        for _ in range(max_steps):
+            if not self.busy():
+                break
+            self.step()
+
+    def queue_pressure(self) -> float:
+        return float(sum(sim.queue_pressure() for sim in self.nodes))
+
+    def stats(self) -> dict:
+        return {"per_node": [sim.stats() for sim in self.nodes]}
+
+    def metrics(self) -> tuple[RunMetrics, list[RunMetrics]]:
+        per_node = [sim.metrics() for sim in self.nodes]
+        merged = merge_metrics(per_node,
+                               n_submitted=self.n_submitted or None)
+        return merged, per_node
 
     # ------------------------------------------------------------- run
     def run(self, trace: Trace) -> tuple[RunMetrics, list[RunMetrics]]:
@@ -270,16 +318,30 @@ class EngineCluster:
         self._clock.reset()
 
     # ------------------------------------------------------------ serve
-    def submit(self, req) -> int:
-        """Route and enqueue; returns the chosen node index."""
+    def submit(self, req, *, sampling=None, on_token=None,
+               ttl=None):
+        """Route and enqueue; returns the request's ``RequestHandle``
+        with ``handle.node`` set to the chosen replica (the handle
+        subsumes the bare node index the old surface returned —
+        cluster-level cancellation routes through it)."""
         loads = [e.queue_pressure() for e in self.engines]
         resident = [e.cache.resident(req.adapter_id)
                     for e in self.engines]
         node = self.router.route(req.adapter_id, loads, resident)
-        self.engines[node].submit(req)
+        handle = self.engines[node].submit(
+            req, sampling=sampling, on_token=on_token, ttl=ttl)
+        handle.node = node
+        handle._system = self      # stream() pumps the whole cluster
         self.routed[node] += 1
         self.n_submitted += 1
-        return node
+        return handle
+
+    def cancel(self, handle) -> bool:
+        """Cluster-level cancel: route to the replica that owns the
+        request (``handle.node``)."""
+        if handle.node is None:
+            return False
+        return self.engines[handle.node].cancel(handle)
 
     def step(self) -> None:
         for e in self.engines:
@@ -287,6 +349,12 @@ class EngineCluster:
 
     def busy(self) -> bool:
         return any(e.busy() for e in self.engines)
+
+    def queue_pressure(self) -> float:
+        """Cluster backlog: summed replica pressure (routing inside the
+        cluster uses the per-replica signals; this export is for
+        stacking clusters behind a higher-level balancer)."""
+        return float(sum(e.queue_pressure() for e in self.engines))
 
     def drain(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):

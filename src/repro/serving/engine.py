@@ -42,12 +42,20 @@ Static-shape design (TPU-native):
   it. Residency decisions stay 100 % in repro.core — this file only
   moves bytes.
 
-Engine surface (DESIGN §3): ``submit`` is non-blocking (enqueue only),
-``step`` runs one iteration — *batched* prefill admission followed by
-one decode — and ``drain`` runs the queue dry. Prefills admitted in the
-same iteration share one jit'd call over a (B, S) bucket instead of one
-compile-and-launch per request, so TTFT under burst load reflects batch
-admission, not serial prefill launches.
+Engine surface (DESIGN §3): the engine implements the unified
+``ServingSystem`` protocol — ``submit`` is non-blocking and returns a
+``RequestHandle`` (streaming tokens, lifecycle state machine,
+``cancel()``, per-request ``SamplingParams`` and deadlines), ``step``
+runs one iteration — lifecycle sweep, *batched* prefill admission,
+one decode, one jit'd batched sampling call — and ``drain`` runs the
+queue dry. Prefills admitted in the same iteration share one jit'd
+call over a (B, S) bucket instead of one compile-and-launch per
+request, so TTFT under burst load reflects batch admission, not serial
+prefill launches. Real prompt token ids (``Request.prompt``) feed the
+prefill; trace-driven workloads without token material fall back to a
+deterministic synthetic prompt. Squash/preemption preserves the
+streamed prefix and its latency records across the requeue (the handle
+never re-streams a position).
 
 Multi-replica serving shares one ``AdapterCatalog`` (host-side adapter
 weights + size metadata) across engines: replicas differ only in device
@@ -66,12 +74,14 @@ import numpy as np
 from repro.core import (AdapterCache, AdapterInfo, CacheStats,
                         ChameleonScheduler, HistogramPrefetcher,
                         MemoryPool, NoisyOraclePredictor, PoolError,
-                        QueuedRequestPrefetcher, Request, RequestState)
+                        QueuedRequestPrefetcher, Request, RequestState,
+                        SamplingParams)
 from repro.kernels.ops import resolve_lora_backend
 from repro.models import api
 from repro.models.base import ModelConfig
 from repro.models.lora_apply import (init_lora_slots, random_lora_weights,
                                      write_adapter_to_slot)
+from repro.serving.handles import RequestHandle, prepare_request
 from repro.serving.metrics import RequestRecord, RunMetrics
 
 
@@ -249,13 +259,21 @@ class ChameleonEngine:
         self.outputs: dict[int, list[int]] = {}
         self._tbts: dict[int, list[float]] = {}
         self._last_tok: dict[int, float] = {}
+        self.handles: dict[int, RequestHandle] = {}
         self.batch_occupancy: list[int] = []   # active slots per step
         self.n_preempted = 0                   # paged: out-of-page squashes
+        self.n_cancelled = 0
+        self.n_expired = 0
+        # Lifecycle fast path: deadline/cancel sweeps run only once a
+        # request armed them (keeps the hot step loop scan-free).
+        self._deadlines_armed = False
+        self._cancel_races: list[Request] = []
 
         self._decode_jit = jax.jit(self._decode_fn)
         self._decode_paged_jit = jax.jit(self._decode_paged_fn)
         self._prefill_jit = jax.jit(self._prefill_fn,
                                     static_argnames=("S",))
+        self._sample_jit = jax.jit(api.sample_tokens)
 
     # ------------------------------------------------------------- clock
     def now(self) -> float:
@@ -422,26 +440,101 @@ class ChameleonEngine:
         self.page_table[slot, :] = 0
         self.pool.release_request(req_id)
 
+    def _stash_progress(self, req: Request) -> None:
+        """Squash/preemption: move the request's already-streamed tokens
+        and TBT records onto the request itself so the requeue keeps
+        them (re-execution regenerates the same prefix deterministically
+        and never re-streams it — the handle dedups by position)."""
+        rid = req.req_id
+        req.stash_progress(self.outputs.pop(rid, None),
+                           self._tbts.pop(rid, None),
+                           self._last_tok.pop(rid, None))
+
     def _preempt(self, slot: int) -> None:
         """Out of pages mid-flight: free the slot and requeue (squash
-        path — the request re-executes from scratch)."""
+        path — the request re-executes, keeping its streamed prefix)."""
         req = self.slot_req[slot]
         self.active[slot] = False
         self.slot_req[slot] = None
-        self.outputs.pop(req.req_id, None)
-        self._tbts.pop(req.req_id, None)
-        self._last_tok.pop(req.req_id, None)
+        self._stash_progress(req)
         self._free_slot_pages(slot, req.req_id)
         self.n_preempted += 1
         self.sched.on_squash(req, self.now())
 
     # ---------------------------------------------------------- lifecycle
-    def submit(self, req: Request) -> None:
-        """Non-blocking: enqueue with the scheduler; no device work."""
+    def submit(self, req: Request, *,
+               sampling: Optional[SamplingParams] = None,
+               on_token=None, ttl: Optional[float] = None,
+               ) -> RequestHandle:
+        """Non-blocking: enqueue with the scheduler; no device work.
+        Returns the request's handle (DESIGN §3 serving surface)."""
         now = self.now()
+        handle = prepare_request(req, self, now, sampling, on_token, ttl)
+        self.handles[req.req_id] = handle
+        if req.deadline is not None:
+            self._deadlines_armed = True
         self.sched.submit(req, now)
         if self.h_prefetch is not None:
             self.h_prefetch.observe_arrival(req.adapter_id, now)
+        return handle
+
+    def cancel(self, handle) -> bool:
+        """Cancel a request. Queued / LOADING-deferred requests release
+        their adapter pin and terminate immediately; RUNNING requests
+        are finalised at the next step boundary (the in-flight jit'd
+        decode cannot be interrupted). False once already terminal."""
+        req = handle.req if isinstance(handle, RequestHandle) else handle
+        if req.terminal:
+            return False
+        now = self.now()
+        if any(r is req for r in self.slot_req):
+            req.cancel_requested = True    # step() sweeps it
+            return True
+        if self.sched.cancel(req, now):
+            self._finalize_unplaced(req, RequestState.CANCELLED, now)
+            return True
+        # Mid-transition race (e.g. cancelled from an on_token callback
+        # while being placed): mark it; the step sweep resolves it.
+        req.cancel_requested = True
+        self._cancel_races.append(req)
+        return True
+
+    def _finalize_unplaced(self, req: Request, state: RequestState,
+                           now: float) -> None:
+        """Terminal transition for a request that never held a slot
+        (queued cancel / queue-side deadline expiry). The scheduler
+        already released the adapter pin; queued requests hold no pool
+        reservation or quota charges."""
+        req.state = state
+        req.finish_time = now
+        if state is RequestState.CANCELLED:
+            self.n_cancelled += 1
+        else:
+            self.n_expired += 1
+
+    # ------------------------------------------------------ token delivery
+    def _record_token(self, req: Request, pos: int, tok: int,
+                      now: float) -> None:
+        """Record (and stream) the token at output position ``pos``.
+
+        Re-executed positions after a squash overwrite in place and are
+        *not* re-streamed or re-timed: the TBT of the first genuinely
+        new token is measured from the last token the user actually saw
+        (``last_stream_time`` survives the requeue)."""
+        rid = req.req_id
+        out = self.outputs[rid]
+        if pos < len(out):
+            out[pos] = tok         # deterministic regeneration of prefix
+            return
+        out.append(tok)
+        if pos >= 1:
+            tbts = self._tbts[rid]
+            if len(tbts) < pos:
+                tbts.append(now - self._last_tok[rid])
+        self._last_tok[rid] = now
+        handle = self.handles.get(rid)
+        if handle is not None:
+            handle._push(pos, tok)
 
     def _place_batch(self, reqs: list[Request]) -> None:
         """Batched prefill admission: one jit'd prefill over a (B, S)
@@ -480,14 +573,25 @@ class ChameleonEngine:
         last_pos = np.zeros((B,), np.int32)
         lslots = np.zeros((B,), np.int32)
         for i, req in enumerate(reqs):
-            toks[i, :req.input_len] = (np.arange(req.input_len)
-                                       % self.cfg.vocab_size)
+            if req.prompt is not None:
+                toks[i, :req.input_len] = np.asarray(req.prompt, np.int32) \
+                    % self.cfg.vocab_size
+            else:
+                # Trace-driven workloads carry lengths, not token
+                # material: fabricate a deterministic prompt.
+                toks[i, :req.input_len] = (np.arange(req.input_len)
+                                           % self.cfg.vocab_size)
             last_pos[i] = req.input_len - 1
             lslots[i] = self.slot_of[req.adapter_id]
         logits, (k_new, v_new) = self._prefill_jit(
             self.params, self.lora, jnp.asarray(toks),
             jnp.asarray(lslots), jnp.asarray(last_pos), S)
-        first_toks = np.asarray(jnp.argmax(logits, axis=-1))
+        if self._all_greedy(reqs):
+            first_toks = np.asarray(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        else:
+            first_toks = np.asarray(self._sample_jit(
+                logits, *self._sampling_arrays(reqs, B, first=True)))
         if self.paged:
             kp, vp = self.kv_pages
         else:
@@ -515,30 +619,101 @@ class ChameleonEngine:
             self.adapter_slot = self.adapter_slot.at[slot].set(
                 int(lslots[i]))
             req.generated = 1
-            req.first_token_time = now
-            self.outputs[req.req_id] = [first]
-            self._tbts[req.req_id] = []
-            self._last_tok[req.req_id] = now
+            rid = req.req_id
+            if req.preserved_tokens:
+                # Squash survivor: restore the streamed prefix and its
+                # latency records; re-execution regenerates (and the
+                # handle ignores) positions the user already has.
+                self.outputs[rid] = list(req.preserved_tokens)
+                self._tbts[rid] = list(req.preserved_tbts)
+                if req.last_stream_time is not None:
+                    self._last_tok[rid] = req.last_stream_time
+            else:
+                self.outputs[rid] = []
+                self._tbts[rid] = []
+                req.first_token_time = now
+            self._record_token(req, 0, first, now)
         if self.paged:
             self.kv_pages = (kp, vp)
         else:
             self.kv = (k, v)
         for i, req in enumerate(reqs):
-            if req.done:
+            if req.done or self._hit_stop(req):
                 self._finish(free[i])
 
+    def _hit_stop(self, req: Request) -> bool:
+        """Did the latest recorded token hit a SamplingParams stop id?"""
+        sp = req.sampling
+        if sp is None or not sp.stop_token_ids:
+            return False
+        return self.outputs[req.req_id][req.generated - 1] \
+            in sp.stop_token_ids
+
+    @staticmethod
+    def _all_greedy(reqs) -> bool:
+        """Host-side fast-path test: with no stochastic row in the
+        batch, sampling is plain argmax — skip building the sampler
+        inputs and the full sorted/softmax/Gumbel sampler call (the
+        default path, and the one every greedy benchmark measures)."""
+        return all(r is None or r.sampling is None or r.sampling.greedy
+                   for r in reqs)
+
+    def _sampling_arrays(self, reqs, B: int, first: bool = False):
+        """Per-row sampler inputs for a prefill batch (``reqs`` list,
+        ``first=True`` → all positions 0) or the decode batch
+        (``reqs = slot_req``; inactive slots run greedy garbage)."""
+        temp = np.zeros(B, np.float32)
+        topk = np.zeros(B, np.int32)
+        topp = np.ones(B, np.float32)
+        seeds = np.zeros(B, np.uint32)
+        pos = np.zeros(B, np.int32)
+        for i, req in enumerate(reqs):
+            if req is None:
+                continue
+            sp = req.sampling
+            if sp is not None and not sp.greedy:
+                temp[i] = sp.temperature
+                topk[i] = sp.top_k
+                topp[i] = sp.top_p
+                seeds[i] = sp.seed_for(req.req_id)
+            if not first:
+                pos[i] = req.generated
+        return (jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(topp),
+                jnp.asarray(seeds), jnp.asarray(pos))
+
     def _finish(self, slot: int) -> None:
+        # A cancel that raced the final token (e.g. issued from the
+        # on_token callback that delivered it) still honours the
+        # cancel() contract: the request terminates as CANCELLED.
         req = self.slot_req[slot]
-        req.state = RequestState.FINISHED
+        self._finalize_slot(slot, RequestState.CANCELLED
+                            if req.cancel_requested
+                            else RequestState.FINISHED)
+
+    def _finalize_slot(self, slot: int, state: RequestState) -> None:
+        """Terminal transition for the request occupying ``slot``:
+        FINISHED, CANCELLED (handle.cancel on a running request) or
+        EXPIRED (deadline passed mid-decode). All three release the
+        slot, its KV pages and the scheduler/pool/cache holds; only
+        FINISHED contributes a RequestRecord to the run metrics."""
+        req = self.slot_req[slot]
+        req.state = state
         now = self.now()
         req.finish_time = now
         self.sched.on_finish(req, now)
         self._free_slot_pages(slot, req.req_id)
-        self.completed.append(req)
         self.active[slot] = False
         self.slot_req[slot] = None
         tbts = self._tbts.pop(req.req_id, [])
+        req.preserved_tbts = tbts    # handle.result() reads these
         self._last_tok.pop(req.req_id, None)
+        if state is RequestState.CANCELLED:
+            self.n_cancelled += 1
+            return
+        if state is RequestState.EXPIRED:
+            self.n_expired += 1
+            return
+        self.completed.append(req)
         self.records.append(RequestRecord(
             req_id=req.req_id, adapter_id=req.adapter_id,
             rank=self.catalog.rank_of(req.adapter_id),
@@ -548,7 +723,9 @@ class ChameleonEngine:
             tbt_mean=float(np.mean(tbts)) if tbts else 0.0,
             tbt_p99=float(np.percentile(tbts, 99)) if tbts else 0.0,
             slowdown=1.0,   # no isolated-run oracle on the real engine
-            squashes=req.squash_count, bypassed=req.bypassed))
+            squashes=req.squash_count, bypassed=req.bypassed,
+            queue_wait=req.queue_wait() or 0.0,
+            load_wait=req.adapter_load_wait))
 
     def _ensure_decode_pages(self) -> None:
         """Grow each active slot to cover its next decode write; slots
@@ -584,11 +761,34 @@ class ChameleonEngine:
                 now, queued_protect={r.adapter_id for r in queued},
                 budget=len(self.free_slots))
 
+    def _sweep_lifecycle(self, now: float) -> None:
+        """Lifecycle enforcement at the step boundary: reap queued
+        requests past their deadline, then finalise active slots whose
+        request was cancelled (``handle.cancel()``) or expired."""
+        if self._deadlines_armed:
+            for req in self.sched.reap_expired(now):
+                self._finalize_unplaced(req, RequestState.EXPIRED, now)
+        for slot in np.where(self.active)[0]:
+            req = self.slot_req[slot]
+            if req.cancel_requested:
+                self._finalize_slot(int(slot), RequestState.CANCELLED)
+            elif req.deadline is not None and now >= req.deadline:
+                self._finalize_slot(int(slot), RequestState.EXPIRED)
+        # A cancel that raced placement (neither queued nor in a slot
+        # at cancel() time) is caught here once it settles somewhere.
+        if self._cancel_races:
+            races, self._cancel_races = self._cancel_races, []
+            for req in races:
+                if not req.terminal:
+                    self.cancel(req)
+
     def step(self) -> None:
-        """One engine iteration: retire finished loads -> admit ->
-        prefetch -> batched prefill -> one decode."""
+        """One engine iteration: retire finished loads -> enforce
+        deadlines/cancellations -> admit -> prefetch -> batched prefill
+        -> one decode + sample."""
         self._poll_loads()
         now = self.now()
+        self._sweep_lifecycle(now)
         running = [r for r in self.slot_req if r is not None]
         admitted = self.sched.schedule(now, running)
         self._run_prefetchers(now)
@@ -597,7 +797,13 @@ class ChameleonEngine:
             self._ensure_decode_pages()
         if not self.active.any():
             if self._pending_loads:
-                time.sleep(2e-4)   # idle: let in-flight loads land
+                # Idle with loads in flight: wait until the earliest
+                # in-flight load's modeled readiness instead of spinning
+                # a fixed busy-wait; already-due loads (waiting only on
+                # the actual device write) poll at a tight interval.
+                t_next = min(t for _, _, t in self._pending_loads.values())
+                wait = t_next - self.now()
+                time.sleep(min(max(wait, 1e-4), 0.05))
             return
         self.batch_occupancy.append(int(self.active.sum()))
         if self.paged:
@@ -609,20 +815,25 @@ class ChameleonEngine:
             logits, self.kv = self._decode_jit(
                 self.params, self.lora, self.tokens, self.kv,
                 self.cache_len, self.adapter_slot)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if self._all_greedy(self.slot_req):
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = self._sample_jit(
+                logits, *self._sampling_arrays(self.slot_req,
+                                               self.ecfg.max_slots))
         self.tokens = nxt[:, None]
         self.cache_len = self.cache_len + jnp.asarray(self.active,
                                                       jnp.int32)
         now = self.now()
+        nxt_host = np.asarray(nxt)
         to_finish, to_squash = [], []
         for slot in np.where(self.active)[0]:
             req = self.slot_req[slot]
+            pos = req.generated
             req.generated += 1
-            self.outputs[req.req_id].append(int(nxt[slot]))
-            self._tbts[req.req_id].append(
-                now - self._last_tok[req.req_id])
-            self._last_tok[req.req_id] = now
-            if req.done or req.generated + req.input_len \
+            self._record_token(req, pos, int(nxt_host[slot]), now)
+            if req.done or self._hit_stop(req) \
+                    or req.generated + req.input_len \
                     >= self.ecfg.max_len - 1:
                 to_finish.append(slot)
             elif req.bypassed and req.exceeded_prediction():
@@ -633,9 +844,7 @@ class ChameleonEngine:
             req = self.slot_req[slot]
             self.active[slot] = False
             self.slot_req[slot] = None
-            self.outputs.pop(req.req_id, None)
-            self._tbts.pop(req.req_id, None)
-            self._last_tok.pop(req.req_id, None)
+            self._stash_progress(req)
             self._free_slot_pages(slot, req.req_id)
             self.sched.on_squash(req, self.now())
 
@@ -663,8 +872,11 @@ class ChameleonEngine:
         self.outputs = {}
         self._tbts = {}
         self._last_tok = {}
+        self.handles = {}
         self.batch_occupancy = []
         self.n_preempted = 0
+        self.n_cancelled = 0
+        self.n_expired = 0
         self.n_async_loads = 0
         self.cache.stats = CacheStats()
         for counter in ("n_bypassed", "n_squashed", "n_deferred"):
@@ -693,6 +905,8 @@ class ChameleonEngine:
             "bypassed": getattr(self.sched, "n_bypassed", 0),
             "squashed": getattr(self.sched, "n_squashed", 0),
             "deferred": getattr(self.sched, "n_deferred", 0),
+            "cancelled": self.n_cancelled,
+            "expired": self.n_expired,
             "async_loads": self.n_async_loads,
             "pending_loads": len(self._pending_loads),
             "resident_adapters": sorted(self.cache.resident_ids()),
@@ -719,6 +933,8 @@ class ChameleonEngine:
             "bypassed": getattr(self.sched, "n_bypassed", 0),
             "squashed": getattr(self.sched, "n_squashed", 0),
             "deferred": getattr(self.sched, "n_deferred", 0),
+            "cancelled": self.n_cancelled,
+            "expired": self.n_expired,
             "async_loads": self.n_async_loads,
             "pressure": round(self.queue_pressure(), 3),
             "batch_occupancy_mean": round(

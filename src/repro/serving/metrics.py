@@ -28,6 +28,9 @@ class RequestRecord:
     slowdown: float
     squashes: int = 0
     bypassed: bool = False
+    # Latency breakdown (TTFT = queue_wait + load_wait + prefill time).
+    queue_wait: float = 0.0        # arrival -> first admission
+    load_wait: float = 0.0         # stalled on the adapter H2D transfer
 
 
 @dataclass

@@ -133,3 +133,64 @@ def build_engine(system: str, cfg, params, ecfg=None, catalog=None,
     return ChameleonEngine(cfg, params, ecfg, scheduler_cls=sched_cls,
                            cache_enabled=cache_enabled, catalog=catalog,
                            clock=clock)
+
+
+# ------------------------------------------------------------------
+# The single serving factory (DESIGN §3): one system matrix, three
+# execution tiers, one ServingSystem surface.
+# ------------------------------------------------------------------
+TIERS = ("sim", "engine", "cluster", "sim-cluster")
+
+
+def _default_model():
+    """Reduced Llama-style model for the real-engine tiers (the same
+    default the examples and tests use)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import api
+
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def build_system(system: str = "chameleon", tier: str = "engine", *,
+                 node: NodeConfig | None = None,
+                 model_cfg=None, params=None, ecfg=None,
+                 n_nodes: int = 2, policy: str = "adapter_affinity",
+                 seed: int = 0):
+    """Build a ``ServingSystem`` (see ``serving.handles``): one factory
+    over the full system × tier matrix.
+
+    tier="sim"          one DES node (``NodeSimulator``): paper-scale
+                        traffic in seconds of CPU time;
+    tier="engine"       one real JAX engine (``ChameleonEngine``);
+    tier="cluster"      N real engines behind a router
+                        (``EngineCluster``, shared AdapterCatalog);
+    tier="sim-cluster"  N DES nodes behind the same router
+                        (``Cluster``).
+
+    Every tier serves the same surface: ``submit() -> RequestHandle``,
+    ``step``, ``busy``, ``drain``, ``cancel``, ``queue_pressure``,
+    ``stats``, ``metrics``. The engine tiers build a reduced model
+    when ``model_cfg``/``params`` are not supplied.
+    """
+    if tier not in TIERS:
+        raise ValueError(f"unknown tier {tier!r}; one of {TIERS}")
+    if tier == "sim":
+        sim, _, _ = build_node(system, node or NodeConfig(seed=seed))
+        return sim
+    if tier == "sim-cluster":
+        from .cluster import Cluster, ClusterConfig
+        return Cluster(ClusterConfig(
+            n_nodes=n_nodes, system=system, policy=policy,
+            node=node or NodeConfig(seed=seed)))
+    if model_cfg is None or params is None:
+        model_cfg, params = _default_model()
+    if tier == "engine":
+        return build_engine(system, model_cfg, params, ecfg)
+    from .cluster import EngineCluster, EngineClusterConfig
+    return EngineCluster(model_cfg, params, ecfg, EngineClusterConfig(
+        n_engines=n_nodes, system=system, policy=policy, seed=seed))

@@ -144,13 +144,13 @@ class TestEngineCluster:
                                     n_engines=2,
                                     policy="adapter_affinity"))
         first = cluster.submit(Request(input_len=8, output_len=2,
-                                       adapter_id=0))
+                                       adapter_id=0)).node
         cluster.drain()
         assert cluster.engines[first].cache.resident(0)
         for _ in range(3):
-            node = cluster.submit(Request(input_len=8, output_len=2,
-                                          adapter_id=0))
-            assert node == first
+            handle = cluster.submit(Request(input_len=8, output_len=2,
+                                            adapter_id=0))
+            assert handle.node == first
             cluster.drain()
 
     def test_run_replays_arrivals_and_reports(self, small_model):

@@ -1,0 +1,370 @@
+"""The unified serving surface (DESIGN §3): ServingSystem conformance
+across all three tiers, handle lifecycle, cancellation, deadlines,
+sampling determinism, and squash continuity.
+
+The conformance section runs the *same* assertions against the DES
+node, the real JAX engine and the real-engine cluster: submit returns a
+RequestHandle, the streamed tokens equal the system's internal output
+record, cancellation is clean, and the latency breakdown is coherent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request, RequestState, SamplingParams
+from repro.models import api
+from repro.serving import build_system
+from repro.serving.engine import ChameleonEngine, EngineConfig
+from repro.serving.handles import (RequestHandle, RequestResult,
+                                   ServingSystem)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+ECFG = dict(max_slots=4, max_len=128, n_lora_slots=4, n_adapters=8)
+
+TIERS = ("sim", "engine", "cluster")
+
+
+def make_system(tier, small_model, **ekw):
+    cfg, params = small_model
+    if tier == "sim":
+        return build_system("chameleon", tier="sim")
+    e = EngineConfig(**{**ECFG, **ekw})
+    return build_system("chameleon", tier=tier, model_cfg=cfg,
+                        params=params, ecfg=e)
+
+
+def output_record(system, req_id):
+    """The system's internal token record for one request."""
+    if hasattr(system, "engines"):            # EngineCluster
+        for e in system.engines:
+            if req_id in e.outputs:
+                return e.outputs[req_id]
+        return None
+    return system.outputs.get(req_id)
+
+
+# ------------------------------------------------------------------
+# Conformance: identical assertions against every tier
+# ------------------------------------------------------------------
+@pytest.mark.parametrize("tier", TIERS)
+class TestServingSystemConformance:
+    def test_protocol_and_handle(self, tier, small_model):
+        sys_ = make_system(tier, small_model)
+        assert isinstance(sys_, ServingSystem)
+        h = sys_.submit(Request(input_len=8, output_len=4, adapter_id=0))
+        assert isinstance(h, RequestHandle)
+        assert h.state in (RequestState.QUEUED, RequestState.LOADING)
+        assert sys_.busy()
+        sys_.drain()
+        assert not sys_.busy()
+        assert h.state is RequestState.FINISHED
+
+    def test_stream_equals_internal_record(self, tier, small_model):
+        sys_ = make_system(tier, small_model)
+        seen = []
+        h = sys_.submit(Request(input_len=10, output_len=6, adapter_id=1),
+                        on_token=seen.append)
+        streamed = list(h.stream())
+        assert len(streamed) == 6
+        assert streamed == seen == h.tokens
+        assert streamed == output_record(sys_, h.req_id)
+
+    def test_cancel_queued_is_clean(self, tier, small_model):
+        sys_ = make_system(tier, small_model)
+        keep = sys_.submit(Request(input_len=8, output_len=4,
+                                   adapter_id=2))
+        doomed = sys_.submit(Request(input_len=8, output_len=50,
+                                     adapter_id=3))
+        assert doomed.cancel()
+        assert not doomed.cancel()      # already terminal
+        sys_.drain()
+        assert doomed.state is RequestState.CANCELLED
+        assert doomed.tokens == [] or doomed.state is RequestState.CANCELLED
+        assert keep.state is RequestState.FINISHED
+
+    def test_result_latency_breakdown(self, tier, small_model):
+        sys_ = make_system(tier, small_model)
+        h = sys_.submit(Request(input_len=8, output_len=5, adapter_id=4))
+        res = h.result()
+        assert isinstance(res, RequestResult)
+        assert res.finished and res.n_tokens == 5
+        assert res.queue_wait is not None and res.queue_wait >= 0
+        assert res.adapter_load_wait >= 0
+        assert res.ttft is not None and res.ttft >= res.queue_wait
+        assert res.e2e is not None and res.e2e >= res.ttft
+
+    def test_queue_pressure_and_stats(self, tier, small_model):
+        sys_ = make_system(tier, small_model)
+        assert sys_.queue_pressure() == 0.0
+        sys_.submit(Request(input_len=8, output_len=4, adapter_id=5))
+        assert sys_.queue_pressure() > 0.0
+        assert isinstance(sys_.stats(), dict)
+        sys_.drain()
+        assert sys_.metrics() is not None
+
+
+# ------------------------------------------------------------------
+# Engine-tier lifecycle details
+# ------------------------------------------------------------------
+class TestHandleLifecycle:
+    def test_states_move_forward_only(self, small_model):
+        eng = make_system("engine", small_model)
+        h = eng.submit(Request(input_len=8, output_len=6, adapter_id=0))
+        order = [RequestState.QUEUED, RequestState.LOADING,
+                 RequestState.RUNNING, RequestState.FINISHED]
+        seen = [h.state]
+        while eng.busy():
+            eng.step()
+            if h.state is not seen[-1]:
+                seen.append(h.state)
+        assert seen[-1] is RequestState.FINISHED
+        ranks = [order.index(s) for s in seen]
+        assert ranks == sorted(ranks), seen
+
+    def test_cancel_running(self, small_model):
+        eng = make_system("engine", small_model)
+        h = eng.submit(Request(input_len=8, output_len=60, adapter_id=0))
+        first = next(h.stream())        # pump until it streams
+        assert h.state is RequestState.RUNNING
+        assert h.cancel()
+        eng.drain()
+        assert h.state is RequestState.CANCELLED
+        assert h.tokens[0] == first and len(h.tokens) < 60
+        eng.pool.check_invariants()
+        assert eng.pool.used_requests == 0
+        assert eng.stats()["cancelled"] == 1
+
+    def test_cancel_on_final_token_honours_contract(self, small_model):
+        """cancel() returning True promises CANCELLED — even when the
+        cancel is issued by the on_token callback that delivered the
+        request's final token."""
+        eng = make_system("engine", small_model)
+        holder = {}
+
+        def cancel_self(_tok):
+            if len(holder["h"].tokens) + 1 >= 4:   # the final token
+                assert holder["h"].cancel()
+        holder["h"] = eng.submit(
+            Request(input_len=8, output_len=4, adapter_id=0),
+            on_token=cancel_self)
+        eng.drain()
+        assert holder["h"].state is RequestState.CANCELLED
+        assert eng.stats()["cancelled"] == 1
+        eng.pool.check_invariants()
+        assert eng.pool.used_requests == 0
+
+    def test_sim_cancel_from_callback_mid_batch(self, small_model):
+        """A cancel issued from inside an on_token callback against a
+        co-batched request must not corrupt the DES iteration."""
+        sim = make_system("sim", small_model)
+        handles = []
+
+        def chain_cancel(_tok):
+            for h in handles[1:]:
+                h.cancel()
+        handles.append(sim.submit(
+            Request(input_len=50, output_len=8, adapter_id=0),
+            on_token=chain_cancel))
+        handles.extend(sim.submit(
+            Request(input_len=50, output_len=8, adapter_id=i))
+            for i in range(1, 4))
+        sim.drain()
+        assert handles[0].state is RequestState.FINISHED
+        assert all(h.state is RequestState.CANCELLED
+                   for h in handles[1:])
+        sim.pool.check_invariants()
+        assert sim.pool.used_requests == 0
+
+    def test_cancel_loading_deferred(self, small_model):
+        """Cancel while the adapter's H2D transfer is in flight: the
+        pin is released, the entry stays consistent, and the engine
+        keeps serving other requests."""
+        eng = make_system("engine", small_model, h2d_gbps=1e-4)
+        h = eng.submit(Request(input_len=8, output_len=6, adapter_id=7))
+        for _ in range(200):
+            eng.step()
+            if h.state is RequestState.LOADING:
+                break
+        assert h.state is RequestState.LOADING
+        assert h.cancel()
+        assert h.state is RequestState.CANCELLED
+        entry = eng.cache.entries.get(7)
+        assert entry is not None and entry.ref_count == 0
+        other = eng.submit(Request(input_len=8, output_len=4,
+                                   adapter_id=0))
+        eng.flush_loads()
+        eng.drain()
+        assert other.state is RequestState.FINISHED
+        eng.pool.check_invariants()
+
+    def test_deadline_expiry_under_load(self, small_model):
+        """With the batch saturated, queued requests whose TTL lapses
+        are reaped by the scheduler; running ones finish normally."""
+        eng = make_system("engine", small_model, max_slots=2)
+        heads = [eng.submit(Request(input_len=8, output_len=30,
+                                    adapter_id=i)) for i in range(2)]
+        tails = [eng.submit(Request(input_len=8, output_len=4,
+                                    adapter_id=2 + i), ttl=1e-3)
+                 for i in range(3)]
+        eng.drain()
+        assert all(h.state is RequestState.FINISHED for h in heads)
+        assert all(h.state is RequestState.EXPIRED for h in tails)
+        assert eng.stats()["expired"] == 3
+        eng.pool.check_invariants()
+        assert eng.pool.used_requests == 0
+
+    def test_running_deadline_enforced_in_step_loop(self, small_model):
+        eng = make_system("engine", small_model)
+        h = eng.submit(Request(input_len=8, output_len=500, adapter_id=0),
+                       ttl=0.3)
+        eng.drain()
+        assert h.state is RequestState.EXPIRED
+        assert 0 < len(h.tokens) < 500
+        eng.pool.check_invariants()
+
+    def test_stop_tokens_finish_early(self, small_model):
+        eng = make_system("engine", small_model)
+        ref = eng.submit(Request(input_len=8, output_len=20,
+                                 adapter_id=1)).result().tokens
+        stop = ref[4]
+        r = Request(input_len=8, output_len=20, adapter_id=1)
+        res = eng.submit(r, sampling=SamplingParams(
+            stop_token_ids=(stop,))).result()
+        assert res.finished
+        assert res.tokens == ref[:5]    # stop token kept, then done
+
+    def test_max_new_tokens_caps_decode(self, small_model):
+        eng = make_system("engine", small_model)
+        res = eng.submit(Request(input_len=8, output_len=30, adapter_id=2),
+                         sampling=SamplingParams(max_new_tokens=7)
+                         ).result()
+        assert res.finished and res.n_tokens == 7
+
+    def test_real_prompt_tokens_change_output(self, small_model):
+        """The engine consumes real prompt ids: different prompts of
+        the same length through the same adapter decode differently."""
+        eng = make_system("engine", small_model)
+        a = eng.submit(Request(input_len=8, output_len=6, adapter_id=0,
+                               prompt=[1, 2, 3, 4, 5, 6, 7, 8])).result()
+        b = eng.submit(Request(input_len=8, output_len=6, adapter_id=0,
+                               prompt=[9, 10, 11, 12, 13, 14, 15, 16])
+                       ).result()
+        assert a.tokens != b.tokens
+
+
+# ------------------------------------------------------------------
+# Sampling: seeded determinism across data planes and backends
+# ------------------------------------------------------------------
+class TestSamplingDeterminism:
+    SP = SamplingParams(temperature=0.8, top_k=20, top_p=0.95, seed=123)
+
+    def _decode(self, small_model, **ekw):
+        eng = make_system("engine", small_model, **ekw)
+        reqs = [Request(input_len=8 + i, output_len=6, adapter_id=i,
+                        sampling=self.SP) for i in range(3)]
+        outs = [eng.submit(r).result().tokens for r in reqs]
+        return outs
+
+    def test_same_seed_same_tokens_across_runs(self, small_model):
+        assert self._decode(small_model) == self._decode(small_model)
+
+    def test_seed_determinism_across_paged_and_dense(self, small_model):
+        paged = self._decode(small_model, paged=True)
+        dense = self._decode(small_model, paged=False)
+        assert paged == dense
+
+    def test_seed_determinism_across_lora_backends(self, small_model):
+        einsum = self._decode(small_model, lora_backend="einsum")
+        kernel = self._decode(small_model, lora_backend="kernel")
+        assert einsum == kernel
+
+    def test_different_seeds_differ(self, small_model):
+        eng = make_system("engine", small_model)
+        t1 = eng.submit(Request(input_len=8, output_len=8, adapter_id=0),
+                        sampling=SamplingParams(temperature=1.0, seed=1)
+                        ).result().tokens
+        t2 = eng.submit(Request(input_len=8, output_len=8, adapter_id=0),
+                        sampling=SamplingParams(temperature=1.0, seed=2)
+                        ).result().tokens
+        assert t1 != t2
+
+    def test_greedy_default_matches_explicit_greedy(self, small_model):
+        """SamplingParams() is greedy argmax — the pre-redesign engine
+        behaviour, token for token."""
+        eng = make_system("engine", small_model)
+        a = eng.submit(Request(input_len=10, output_len=8, adapter_id=3)
+                       ).result().tokens
+        b = eng.submit(Request(input_len=10, output_len=8, adapter_id=3),
+                       sampling=SamplingParams()).result().tokens
+        assert a == b
+
+    def test_invalid_params_rejected(self, small_model):
+        with pytest.raises(ValueError):
+            SamplingParams(temperature=-1.0)
+        with pytest.raises(ValueError):
+            SamplingParams(top_p=0.0)
+        with pytest.raises(ValueError):
+            SamplingParams(top_k=-2)
+
+
+# ------------------------------------------------------------------
+# Squash continuity: streamed prefix survives preemption/requeue
+# ------------------------------------------------------------------
+class TestSquashContinuity:
+    def test_preemption_preserves_stream(self, small_model):
+        """Force an out-of-pages preemption mid-decode: the handle's
+        stream must keep its prefix (no rewind, no duplicates) and the
+        final tokens must equal an unpreempted run."""
+        cfg, params = small_model
+        ref_eng = ChameleonEngine(cfg, params, EngineConfig(**ECFG))
+        spec = dict(input_len=8, output_len=24, adapter_id=0)
+        ref = ref_eng.submit(Request(**spec)).result().tokens
+
+        eng = ChameleonEngine(cfg, params, EngineConfig(**ECFG))
+        seen = []
+        h = eng.submit(Request(**spec), on_token=seen.append)
+        it = h.stream()
+        for _ in range(4):              # stream a prefix...
+            next(it)
+        prefix = list(h.tokens)
+        stolen, eng.free_pages = eng.free_pages, []   # ...then preempt
+        for _ in range(20):
+            eng.step()
+            if eng.n_preempted:
+                break
+        assert eng.n_preempted >= 1
+        at_squash = list(h.tokens)
+        assert at_squash[:len(prefix)] == prefix, \
+            "stream must not rewind on squash"
+        eng.free_pages = stolen
+        eng.drain()
+        assert h.state is RequestState.FINISHED
+        assert h.tokens[:len(at_squash)] == at_squash
+        assert h.tokens == seen == ref
+        assert h.req.squash_count >= 1
+        res = h.result()
+        assert res.ttft is not None     # TTFT kept from the first pass
+
+    def test_requeue_keeps_first_token_time(self, small_model):
+        cfg, params = small_model
+        eng = ChameleonEngine(cfg, params, EngineConfig(**ECFG))
+        h = eng.submit(Request(input_len=8, output_len=30, adapter_id=0))
+        next(h.stream())
+        t_first = h.req.first_token_time
+        stolen, eng.free_pages = eng.free_pages, []
+        for _ in range(20):
+            eng.step()
+            if eng.n_preempted:
+                break
+        eng.free_pages = stolen
+        eng.drain()
+        assert h.req.first_token_time == t_first

@@ -74,9 +74,16 @@ class TestPaperDirectionality:
     """The paper's qualitative claims, as regression guards."""
 
     def test_chameleon_beats_slora_tail_at_high_load(self):
+        # Margin calibrated to streaming-honest TTFT: a squashed
+        # request keeps the timestamp of the first token it actually
+        # streamed (core/request.reset_for_requeue), so re-execution no
+        # longer inflates either system's tail — the requeue stall now
+        # shows up in TBT, not TTFT. That accounting change shrinks the
+        # headline gap (slora's old tail was dominated by re-measured
+        # squash TTFTs) without changing a single scheduling decision.
         m_s, _, _ = run("slora", rps=12.0, duration=120.0)
         m_c, _, _ = run("chameleon", rps=12.0, duration=120.0)
-        assert m_c.p99_ttft() < 0.5 * m_s.p99_ttft(), (
+        assert m_c.p99_ttft() < 0.75 * m_s.p99_ttft(), (
             m_c.p99_ttft(), m_s.p99_ttft())
 
     def test_chameleon_beats_slora_median_at_high_load(self):
