@@ -16,6 +16,22 @@ import sys
 
 SCALARS = (str, int, float, bool, type(None))
 
+# Benchmarks whose ``validated`` dict the CI jobs consume by key: a
+# missing key here means an entrypoint silently dropped an acceptance
+# claim, which must fail the schema check, not the consumer.
+REQUIRED_VALIDATED = {
+    "decode_hotloop": {
+        "tokens_identical", "speedup_tokens_per_sec", "speedup_ge_2x",
+        "dispatch_ratio", "dispatch_ratio_ge_2x", "kv_donated",
+        "host_sync_fraction_seed", "host_sync_fraction_fused",
+    },
+    "fig10_latency_load_paged_ab": {"all_completed", "tokens_identical"},
+    "fig10_latency_load_loading_ab": {
+        "all_completed", "overlap_beats_sync_p99_ttft"},
+    "fig10_latency_load_hotloop_ab": {"all_completed",
+                                      "tokens_identical"},
+}
+
 
 def _flat(d: dict, what: str) -> list[str]:
     errs = []
@@ -56,6 +72,11 @@ def check_doc(doc, path: str) -> list[str]:
                         f"differ from rows[0] keys {sorted(keys0)}")
         errs.extend(_flat(row, f"{path}: rows[{i}]"))
     errs.extend(_flat(doc["validated"], f"{path}: validated"))
+    required = REQUIRED_VALIDATED.get(doc["name"], set())
+    missing = required - set(doc["validated"])
+    if missing:
+        errs.append(f"{path}: validated missing required keys "
+                    f"{sorted(missing)}")
     return errs
 
 

@@ -1,0 +1,292 @@
+"""Decode hot-loop microbenchmark: fused device-resident loop vs seed.
+
+A/Bs `ChameleonEngine`'s decode path (DESIGN §2) with the only
+variable being ``EngineConfig.fused_hotloop``:
+
+  seed  — one decode jit dispatch, (B, V) logits round-trip to a
+          second sampling dispatch, per-step host re-uploads of the
+          page table / active mask / sampling arrays, and a blocking
+          token sync before any bookkeeping;
+  fused — one donated-buffer jit dispatch per adaptive K-step horizon
+          that fuses decode + sampling + cache_len advance with an
+          on-device done-mask, device-resident batch state rebuilt only
+          at batch epochs, and pipelined readback.
+
+Reported per cell ({dense, paged} x {greedy, sampled} x {seed, fused},
+plus a paged squash-continuation pair): hot-loop tokens/sec, decode
+steps/sec, jit dispatches per token (``kernels.ops.DISPATCH_METER``),
+the host-sync fraction of wall time, P50/P99 TBT, whether the streamed
+tokens are identical to the seed loop's, and the donation memory probe
+(the pre-step KV buffer must be *consumed* by the fused dispatch — no
+double-buffered KV; the seed loop keeps it alive).
+
+Emits the CI-checked BENCH JSON schema via ``--json`` (see
+``benchmarks/check_json.py``); ``--quick`` shrinks the workload for
+the bench-smoke job.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+NAME = "decode_hotloop"
+PAPER_REF = "Chameleon hot path; S-LoRA (arXiv 2311.03285) unified memory"
+
+
+def _engine(cfg, params, *, fused, paged, seed=0, max_slots=4,
+            max_len=384):
+    from repro.serving.engine import ChameleonEngine, EngineConfig
+
+    # Async loading and the prefetchers are pinned off so both loops
+    # place requests on identical steps (their own A/B is fig10
+    # --loading); the A/B's one variable is the hot loop.
+    return ChameleonEngine(cfg, params, EngineConfig(
+        max_slots=max_slots, max_len=max_len, n_lora_slots=4,
+        n_adapters=4, seed=seed, paged=paged, fused_hotloop=fused,
+        async_load=False, queued_prefetch=False,
+        histogram_prefetch=False))
+
+
+def _drain(eng, max_steps=200_000):
+    steps = 0
+    while eng.busy() and steps < max_steps:
+        eng.step()
+        steps += 1
+    assert not eng.busy(), "engine failed to drain"
+    return steps
+
+
+def _probe_donation(eng):
+    """Dispatch one decode step and check whether it *consumed* the KV
+    buffer (jit donation → in-place update, no second KV allocation).
+    The fused loop donates; the seed loop's un-donated dispatch keeps
+    the input alive alongside its output — the double buffering this
+    PR removes."""
+    kv_before = eng.kv_pages[0] if eng.paged else eng.kv[0]
+    eng.step()
+    return bool(kv_before.is_deleted())
+
+
+def run_cell(cfg, params, *, paged, sampled, fused, output_len,
+             seed=0):
+    """One measured drain of a full batch of long decodes (queue kept
+    empty so the fused loop's micro-horizon engages — the hot loop this
+    benchmark isolates). Returns the row dict + the streamed tokens."""
+    from repro.core import Request, SamplingParams
+    from repro.kernels.ops import DISPATCH_METER
+
+    eng = _engine(cfg, params, fused=fused, paged=paged, seed=seed)
+    sp = (SamplingParams(temperature=0.8, top_k=16, top_p=0.95,
+                         seed=seed + 1) if sampled else None)
+    B = eng.ecfg.max_slots
+
+    # Warmup: compile prefill + every decode/horizon jit variant the
+    # measured phase uses, then reset accounting.
+    warm = [eng.submit(Request(input_len=16, output_len=3 * 8,
+                               adapter_id=i), sampling=sp)
+            for i in range(B)]
+    _drain(eng)
+    assert all(len(h.tokens) == 3 * 8 for h in warm)
+
+    # Best-of-2 measured drains (identical token streams, asserted):
+    # one full batch of long decodes each; the min wall damps shared-
+    # runner noise without changing what is measured.
+    tokens = wall = steps = tbts = n_disp = sync_s = None
+    for _ in range(2):
+        eng.reset_stats()
+        handles = [eng.submit(Request(input_len=16,
+                                      output_len=output_len,
+                                      adapter_id=i), sampling=sp)
+                   for i in range(B)]
+        DISPATCH_METER.reset()
+        t0 = time.perf_counter()
+        n_steps = _drain(eng)
+        w = time.perf_counter() - t0
+        toks = [h.tokens for h in handles]
+        assert tokens is None or toks == tokens, "non-deterministic run"
+        if wall is None or w < wall:
+            tokens, wall, steps = toks, w, n_steps
+            n_disp = DISPATCH_METER.dispatches
+            sync_s = DISPATCH_METER.sync_seconds
+            tbts = [tbt for h in handles for tbt in h.result().tbts]
+    n_tok = sum(len(t) for t in tokens)
+    assert n_tok == B * output_len, "truncated run"
+
+    # Donation probe on a fresh single-request batch (the measured
+    # engine is drained; probing mid-run would skew timings).
+    probe = eng.submit(Request(input_len=16, output_len=16,
+                               adapter_id=0), sampling=sp)
+    while not eng.active.any():
+        eng.step()
+    donated = _probe_donation(eng)
+    eng.drain()
+    assert probe.done
+
+    row = {
+        "mode": ("fused" if fused else "seed"),
+        "kv": ("paged" if paged else "dense"),
+        "sampling": ("sampled" if sampled else "greedy"),
+        "tokens": n_tok,
+        "wall_s": round(wall, 4),
+        "tokens_per_sec": round(n_tok / wall, 2),
+        "decode_steps_per_sec": round(n_tok / eng.ecfg.max_slots / wall,
+                                      2),
+        "engine_steps": steps,
+        "dispatches_per_token": round(n_disp / n_tok, 4),
+        "host_sync_fraction": round(min(sync_s / wall, 1.0), 4),
+        "p50_tbt_ms": round(1e3 * float(np.percentile(tbts, 50)), 3),
+        "p99_tbt_ms": round(1e3 * float(np.percentile(tbts, 99)), 3),
+        "kv_donated": donated,
+    }
+    return row, tokens
+
+
+def run_squash_cell(cfg, params, *, fused, output_len, seed=0):
+    """Squash continuation: steal the page pool mid-decode to force a
+    preemption, restore it, and check the re-executed stream. The
+    final tokens must be loop-independent (and the fused run must
+    still preempt — its horizon clamps to allocated pages instead of
+    allocating ahead)."""
+    from repro.core import Request
+
+    eng = _engine(cfg, params, fused=fused, paged=True, seed=seed)
+    h = eng.submit(Request(input_len=16, output_len=output_len,
+                           adapter_id=0))
+    it = h.stream()
+    for _ in range(4):
+        next(it)
+    stolen, eng.free_pages = eng.free_pages, []
+    for _ in range(60):
+        eng.step()
+        if eng.n_preempted:
+            break
+    preempted = eng.n_preempted
+    eng.free_pages = stolen
+    eng.drain()
+    row = {
+        "mode": ("fused" if fused else "seed"),
+        "kv": "paged",
+        "sampling": "greedy-squash",
+        "tokens": len(h.tokens),
+        "preempted": preempted,
+        "squashes": h.req.squash_count,
+    }
+    return row, [h.tokens]
+
+
+def run(quick: bool = False, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import api as model_api
+
+    # A deliberately dispatch-bound config: this benchmark isolates
+    # the hot loop's *host overhead* (dispatches, logits round-trips,
+    # re-uploads, blocking syncs), which is what the fused loop
+    # removes — per-token model compute is identical across both loops
+    # by construction (and asserted by the token-identity A/B; the
+    # parity suite covers the standard reduced config).
+    cfg = get_config("chameleon-llama-7b").reduced(
+        n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        vocab_size=128)
+    params = model_api.init_params(cfg, jax.random.PRNGKey(seed),
+                                   jnp.float32)
+    output_len = 128 if quick else 256
+
+    rows = []
+    identical = True
+    for paged in (False, True):
+        for sampled in (False, True):
+            pair = {}
+            for fused in (False, True):
+                row, toks = run_cell(cfg, params, paged=paged,
+                                     sampled=sampled, fused=fused,
+                                     output_len=output_len, seed=seed)
+                pair[fused] = (row, toks)
+            same = pair[True][1] == pair[False][1]
+            identical &= same
+            for fused in (False, True):
+                pair[fused][0]["tokens_identical_to_seed"] = same
+                pair[fused][0]["preempted"] = 0
+                pair[fused][0]["squashes"] = 0
+                rows.append(pair[fused][0])
+    # Squash-continuation pair (paged, greedy).
+    sq = {}
+    for fused in (False, True):
+        row, toks = run_squash_cell(cfg, params, fused=fused,
+                                    output_len=3 * 64, seed=seed)
+        sq[fused] = (row, toks)
+    same = sq[True][1] == sq[False][1]
+    identical &= same
+    for fused in (False, True):
+        r = sq[fused][0]
+        r.update({
+            "wall_s": 0.0, "tokens_per_sec": 0.0,
+            "decode_steps_per_sec": 0.0, "engine_steps": 0,
+            "dispatches_per_token": 0.0, "host_sync_fraction": 0.0,
+            "p50_tbt_ms": 0.0, "p99_tbt_ms": 0.0, "kv_donated": fused,
+            "tokens_identical_to_seed": same,
+        })
+        rows.append(r)
+    return rows, identical
+
+
+def validate(rows, identical) -> dict:
+    def mean_over(mode, field, pred=lambda r: True):
+        xs = [r[field] for r in rows
+              if r["mode"] == mode and r["tokens_per_sec"] > 0
+              and pred(r)]
+        return float(np.mean(xs))
+
+    speedup = (mean_over("fused", "tokens_per_sec")
+               / mean_over("seed", "tokens_per_sec"))
+    d_seed = mean_over("seed", "dispatches_per_token")
+    d_fused = mean_over("fused", "dispatches_per_token")
+    fused_rows = [r for r in rows if r["mode"] == "fused"
+                  and r["tokens_per_sec"] > 0]
+    squash = [r for r in rows if r["sampling"] == "greedy-squash"]
+    return {
+        # The acceptance gates (ISSUE 5): token identity everywhere,
+        # >=2x hot-loop throughput, >=2x fewer dispatches per token,
+        # and no double-buffered KV (donation verified by the probe).
+        "tokens_identical": bool(identical),
+        "speedup_tokens_per_sec": round(speedup, 2),
+        "speedup_ge_2x": bool(speedup >= 2.0),
+        "dispatches_per_token_seed": round(d_seed, 3),
+        "dispatches_per_token_fused": round(d_fused, 3),
+        "dispatch_ratio": round(d_seed / d_fused, 2),
+        "dispatch_ratio_ge_2x": bool(d_seed / d_fused >= 2.0),
+        "kv_donated": all(r["kv_donated"] for r in fused_rows),
+        "host_sync_fraction_seed": round(
+            mean_over("seed", "host_sync_fraction"), 4),
+        "host_sync_fraction_fused": round(
+            mean_over("fused", "host_sync_fraction"), 4),
+        "squash_preempted_both": all(r["preempted"] >= 1
+                                     for r in squash),
+    }
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import emit_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write {name, paper_ref, rows, validated} "
+                         "(CI schema)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    rows, identical = run(quick=args.quick, seed=args.seed)
+    validated = validate(rows, identical)
+    for r in rows:
+        print(r)
+    print(validated)
+    if args.json:
+        print("wrote", emit_json(args.json, NAME, PAPER_REF, rows,
+                                 validated))
+    assert validated["tokens_identical"], (
+        "fused hot loop changed decoded tokens")

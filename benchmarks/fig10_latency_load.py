@@ -217,6 +217,99 @@ def validate_loading(rows) -> dict:
     }
 
 
+def run_hotloop_ab(n_requests: int = 32, seed: int = 0,
+                   quick: bool = False) -> list[dict]:
+    """A/B the *real* engine: seed two-dispatch loop vs the fused
+    device-resident hot loop, at identical load through the existing
+    paper-figure pipeline (end-to-end TTFT/TBT impact, not just the
+    ``decode_hotloop.py`` microbenchmark). Same model, same requests,
+    same control plane — the only variable is
+    ``EngineConfig.fused_hotloop``. Under queue backlog the fused loop
+    runs K=1 (admission latency untouched), so the win here is the
+    fused dispatch + device-resident state, with horizons opening as
+    the queue drains."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import Request
+    from repro.models import api as model_api
+    from repro.serving.engine import ChameleonEngine, EngineConfig
+
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = model_api.init_params(cfg, jax.random.PRNGKey(seed),
+                                   jnp.float32)
+    if quick:
+        n_requests = min(n_requests, 16)
+    rng = np.random.default_rng(seed)
+    specs = [(int(rng.integers(16, 48)), int(rng.integers(32, 128)),
+              int(rng.integers(0, 16))) for _ in range(n_requests)]
+
+    rows = []
+    tokens_by_mode = {}
+    for fused in (False, True):
+        eng = ChameleonEngine(cfg, params, EngineConfig(
+            max_slots=4, max_len=256, n_lora_slots=16, n_adapters=16,
+            seed=seed, fused_hotloop=fused, async_load=False,
+            queued_prefetch=False, histogram_prefetch=False))
+        # Warmup one short request (jit compiles), then measure.
+        eng.submit(Request(input_len=16, output_len=4, adapter_id=15))
+        eng.run_until_drained()
+        eng.reset_stats()
+        reqs = []
+        for i, o, a in specs:
+            r = Request(input_len=i, output_len=o, adapter_id=a)
+            r.arrival_time = eng.now()
+            reqs.append(r)
+        handles = [eng.submit(r) for r in reqs]
+        steps = 0
+        while eng.busy() and steps < 200_000:
+            eng.step()
+            steps += 1
+        m = eng.metrics()
+        mode = "fused" if fused else "seed"
+        tokens_by_mode[mode] = [h.tokens for h in handles]
+        rows.append({
+            "mode": mode,
+            "submitted": n_requests,
+            "completed": len(eng.completed),
+            "p50_ttft": m.p50_ttft(),
+            "p99_ttft": m.p99_ttft(),
+            "p99_tbt": m.p99_tbt(),
+            "steps": steps,
+            "batch_epoch": eng.stats()["batch_epoch"],
+            "tokens_identical_to_seed":
+                tokens_by_mode.get("seed") == tokens_by_mode[mode],
+        })
+    return rows
+
+
+def validate_hotloop(rows) -> dict:
+    seed = next(r for r in rows if r["mode"] == "seed")
+    fused = next(r for r in rows if r["mode"] == "fused")
+    return {
+        "all_completed":
+            seed["completed"] == seed["submitted"]
+            and fused["completed"] == fused["submitted"],
+        # The microbenchmark's bar, held end-to-end: identical tokens.
+        "tokens_identical": bool(fused["tokens_identical_to_seed"]),
+        "p99_ttft_seed": round(seed["p99_ttft"], 4),
+        "p99_ttft_fused": round(fused["p99_ttft"], 4),
+        "p99_tbt_seed": round(seed["p99_tbt"], 4),
+        "p99_tbt_fused": round(fused["p99_tbt"], 4),
+        "e2e_steps_seed": seed["steps"],
+        "e2e_steps_fused": fused["steps"],
+        # Directional (not asserted in CI — wall-clock percentiles on
+        # a shared runner): the fused loop must not regress TTFT tails
+        # (K=1 under backlog keeps admission latency untouched). P99
+        # TBT is *expected* to rise at idle-queue horizons — K tokens
+        # arrive per sync, the documented burst-delivery trade-off
+        # (DESIGN §6) — so it is reported above, not flagged.
+        "fused_not_worse_p99_ttft":
+            fused["p99_ttft"] <= seed["p99_ttft"] * 1.05,
+    }
+
+
 def run(quick: bool = False):
     rps_grid = (8.0, 10.0, 11.0, 12.0, 13.0) if quick else \
         (6.0, 8.0, 9.0, 10.0, 10.5, 11.0, 11.5, 12.0, 13.0, 14.0)
@@ -273,6 +366,9 @@ if __name__ == "__main__":
     ap.add_argument("--loading", action="store_true",
                     help="A/B the real engine sync vs overlapped "
                          "adapter loading")
+    ap.add_argument("--hotloop", action="store_true",
+                    help="A/B the real engine seed vs fused decode "
+                         "hot loop at identical load")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write {name, paper_ref, rows, validated} "
                          "to PATH (CI schema)")
@@ -286,6 +382,10 @@ if __name__ == "__main__":
         rows = run_loading_ab(quick=args.quick)
         validated = validate_loading(rows)
         variant = f"{NAME}_loading_ab"
+    elif args.hotloop:
+        rows = run_hotloop_ab(quick=args.quick)
+        validated = validate_hotloop(rows)
+        variant = f"{NAME}_hotloop_ab"
     else:
         rows = run(quick=True)
         validated = validate(rows)

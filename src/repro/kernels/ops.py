@@ -17,7 +17,9 @@ engine, so jit caches stay coherent.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +32,49 @@ from .sgmv import pack_segments, sgmv as _sgmv_pallas
 LORA_BACKENDS = ("auto", "einsum", "kernel")
 
 
+@functools.lru_cache(maxsize=1)
 def on_tpu() -> bool:
+    # Memoised: the serving hot loop asks per dispatch and the backend
+    # cannot change after the first device op anyway.
     return jax.default_backend() == "tpu"
+
+
+class DispatchMeter:
+    """Hot-loop observability: jit dispatches and host-sync wall time.
+
+    The serving engine ticks the meter once per device dispatch it
+    launches on the decode path and wraps its device→host token reads
+    in ``sync()``. ``benchmarks/decode_hotloop.py`` reads the meter to
+    report dispatches/token and the host-sync fraction — the two
+    numbers the fused device-resident loop exists to shrink. A plain
+    counter + accumulator: the per-step cost is one int add, so the
+    meter stays on in production paths.
+    """
+
+    def __init__(self) -> None:
+        self.dispatches = 0
+        self.sync_seconds = 0.0
+
+    def reset(self) -> None:
+        self.dispatches = 0
+        self.sync_seconds = 0.0
+
+    def tick(self, n: int = 1) -> None:
+        self.dispatches += n
+
+    @contextlib.contextmanager
+    def sync(self):
+        """Time a blocking device→host readback (e.g. ``np.asarray`` on
+        a decode result)."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.sync_seconds += time.perf_counter() - t0
+
+
+#: Process-wide meter the engine step loops tick (reset by benchmarks).
+DISPATCH_METER = DispatchMeter()
 
 
 def resolve_lora_backend(backend: str | None) -> str:

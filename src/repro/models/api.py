@@ -49,6 +49,45 @@ def decode_step(cfg, params, tokens, state, cache_len=None, **kw):
     return m.decode_step(cfg, params, tokens, state, cache_len, **kw)
 
 
+# ---------------------------------------------- fused decode hot loop
+def supports_fused(cfg: ModelConfig) -> bool:
+    """Families servable by the fused decode+sample horizon loop.
+
+    Anything whose ``decode_step`` is the (tokens, kv, cache_len)
+    dense-KV shape: dense decoder LMs and MoE (same KV path, superstep
+    scan). VLM needs per-step M-RoPE positions the engine does not
+    thread; SSM/hybrid/enc-dec carry non-KV state shapes. Engines fall
+    back to the two-dispatch step loop for unsupported families.
+    """
+    return cfg.family in (Family.DENSE, Family.MOE)
+
+
+def decode_fused(cfg, params, tokens, kv_caches, cache_len, active,
+                 positions, budget, stop_ids, temperature, top_k, top_p,
+                 seeds, **kw):
+    """K fused decode+sample steps over dense KV in one dispatch
+    (``lm.decode_fused``); see ``_fused_decode_scan`` for semantics."""
+    if not supports_fused(cfg):
+        raise NotImplementedError(
+            f"fused decode unsupported for family {cfg.family}")
+    return lm.decode_fused(cfg, params, tokens, kv_caches, cache_len,
+                           active, positions, budget, stop_ids,
+                           temperature, top_k, top_p, seeds, **kw)
+
+
+def decode_fused_paged(cfg, params, tokens, kv_pages, page_table,
+                       cache_len, active, positions, budget, stop_ids,
+                       temperature, top_k, top_p, seeds, **kw):
+    """K fused decode+sample steps over paged KV in one dispatch."""
+    if not (supports_fused(cfg) and supports_paged(cfg)):
+        raise NotImplementedError(
+            f"fused paged decode unsupported for family {cfg.family}")
+    return lm.decode_fused_paged(cfg, params, tokens, kv_pages,
+                                 page_table, cache_len, active,
+                                 positions, budget, stop_ids,
+                                 temperature, top_k, top_p, seeds, **kw)
+
+
 # ------------------------------------------------------- paged serving
 def supports_paged(cfg: ModelConfig) -> bool:
     """Families whose decode can run over a paged KV pool.

@@ -429,6 +429,111 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
     return jnp.where(temperature > 0.0, sampled, greedy)
 
 
+# ------------------------------------------------- fused decode hot loop
+def _fused_decode_scan(decode_one, tokens, cache_len, active, positions,
+                       kv, budget, stop_ids, temperature, top_k, top_p,
+                       seeds, max_ctx: int, n_steps: int,
+                       all_greedy: bool):
+    """Run ``n_steps`` decode+sample+advance iterations on device.
+
+    One ``lax.scan`` whose body is: decode one token for every batch
+    slot, pick the next token (argmax when the whole batch is greedy —
+    bit-identical to the two-dispatch engine loop — else the seeded
+    batched sampler), advance ``cache_len``/``positions`` for active
+    rows, and fold the per-row finish conditions into an on-device
+    done-mask so a row that hits its budget / a stop token / the
+    context bound stops emitting *inside* the horizon. The host syncs
+    one ``(n_steps, B)`` token block + emit-mask instead of one (B, V)
+    logits round-trip per token.
+
+    Semantics mirror the single-step engine loop exactly (the parity
+    suite asserts token-identity): ``tokens`` is overwritten for every
+    row including inactive ones, ``cache_len`` advances by the *pre*-
+    done-check active mask, and rows past their end keep decoding
+    masked garbage whose emissions are dropped via the emit mask.
+
+    decode_one: (tokens (B,1), kv, cache_len) -> (logits (B,V), kv').
+    Returns ((tokens', kv', cache_len', active', positions'),
+             toks (n_steps, B) int32, emits (n_steps, B) bool).
+    """
+
+    def body(carry, _):
+        tokens, kv, cache_len, active, positions = carry
+        logits, kv = decode_one(tokens, kv, cache_len)
+        if all_greedy:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = sample_tokens(logits, temperature, top_k, top_p,
+                                seeds, positions)
+        emit = active
+        step = active.astype(jnp.int32)
+        new_len = cache_len + step
+        new_pos = positions + step
+        # Finish conditions, verbatim from the engine bookkeeping:
+        # budget exhausted (req.done), a SamplingParams stop id, or the
+        # context bound generated + input_len >= max_len - 1 — with
+        # cache_len == input_len + generated - 1, that is new_len + 1.
+        hit_stop = (nxt[:, None] == stop_ids).any(axis=-1)
+        done_now = emit & ((new_pos >= budget) | hit_stop
+                           | (new_len + 1 >= max_ctx - 1))
+        carry = (nxt[:, None], kv, new_len, emit & ~done_now, new_pos)
+        return carry, (nxt, emit)
+
+    init = (tokens, kv, cache_len, active, positions)
+    carry, (toks, emits) = jax.lax.scan(body, init, None, length=n_steps)
+    return carry, toks, emits
+
+
+def decode_fused(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 kv_caches, cache_len: jax.Array, active: jax.Array,
+                 positions: jax.Array, budget: jax.Array,
+                 stop_ids: jax.Array, temperature: jax.Array,
+                 top_k: jax.Array, top_p: jax.Array, seeds: jax.Array,
+                 *, n_steps: int, all_greedy: bool, max_ctx: int,
+                 lora=None, adapter_idx=None,
+                 lora_backend: str = "einsum"):
+    """Fused multi-step decode over the dense KV slab (see
+    ``_fused_decode_scan``). active (B,) bool; positions (B,) the
+    output index each row samples next; budget (B,) max output tokens;
+    stop_ids (B, n_stop) int32 padded with -1 (n_stop may be 0)."""
+
+    def decode_one(tok, kv, clen):
+        return decode_step(cfg, params, tok, kv, clen, lora=lora,
+                           adapter_idx=adapter_idx,
+                           lora_backend=lora_backend)
+
+    return _fused_decode_scan(decode_one, tokens, cache_len, active,
+                              positions, kv_caches, budget, stop_ids,
+                              temperature, top_k, top_p, seeds, max_ctx,
+                              n_steps, all_greedy)
+
+
+def decode_fused_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                       kv_pages, page_table: jax.Array,
+                       cache_len: jax.Array, active: jax.Array,
+                       positions: jax.Array, budget: jax.Array,
+                       stop_ids: jax.Array, temperature: jax.Array,
+                       top_k: jax.Array, top_p: jax.Array,
+                       seeds: jax.Array, *, n_steps: int,
+                       all_greedy: bool, max_ctx: int, lora=None,
+                       adapter_idx=None, lora_backend: str = "einsum"):
+    """Fused multi-step decode over the paged KV pool. The page table
+    is read-only across the horizon: the engine pre-allocates pages
+    covering every write the scan can make, so ``cache_len // page``
+    always lands on a mapped page (done rows keep overwriting the slot
+    one past their final token, which attention masks by length)."""
+
+    def decode_one(tok, kv, clen):
+        return decode_step_paged(cfg, params, tok, kv, page_table, clen,
+                                 lora=lora, adapter_idx=adapter_idx,
+                                 lora_backend=lora_backend)
+
+    return _fused_decode_scan(decode_one, tokens, cache_len, active,
+                              positions, kv_pages, budget, stop_ids,
+                              temperature, top_k, top_p, seeds, max_ctx,
+                              n_steps, all_greedy)
+
+
 def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
             mrope_pos=None, lora=None, adapter_idx=None, last_pos=None,
             lora_backend: str = "einsum"):

@@ -42,16 +42,32 @@ Static-shape design (TPU-native):
   it. Residency decisions stay 100 % in repro.core — this file only
   moves bytes.
 
+The decode hot loop is **device-resident** by default
+(``EngineConfig.fused_hotloop``, DESIGN §2): one donated-buffer jit
+dispatch fuses decode + sampling + ``cache_len`` advance (logits never
+leave the device, KV updates in place — no double buffering), batch
+state (active mask, sample positions, per-row sampling params, decode
+budgets, stop tokens, page table) stays on device with rebuilds only
+at batch epochs (place/finish/squash), and when no admissions are due
+and no deadline/cancel sweep is armed an adaptive K-step micro-horizon
+runs in one ``lax.scan`` with an on-device done-mask, syncing K tokens
+per host round-trip with the next horizon dispatched before the
+previous one's readback (pipelined). Under backlog K=1, so TTFT and
+admission latency match the seed loop, which stays selectable
+(``fused_hotloop=False``) as the ``benchmarks/decode_hotloop.py``
+baseline — both loops are token-identical by construction and by the
+``tests/test_hotloop_parity.py`` whole-engine A/B.
+
 Engine surface (DESIGN §3): the engine implements the unified
 ``ServingSystem`` protocol — ``submit`` is non-blocking and returns a
 ``RequestHandle`` (streaming tokens, lifecycle state machine,
 ``cancel()``, per-request ``SamplingParams`` and deadlines), ``step``
 runs one iteration — lifecycle sweep, *batched* prefill admission,
-one decode, one jit'd batched sampling call — and ``drain`` runs the
-queue dry. Prefills admitted in the same iteration share one jit'd
-call over a (B, S) bucket instead of one compile-and-launch per
-request, so TTFT under burst load reflects batch admission, not serial
-prefill launches. Real prompt token ids (``Request.prompt``) feed the
+one fused decode horizon (or the seed decode + sampling pair) — and
+``drain`` runs the queue dry. Prefills admitted in the same iteration
+share one jit'd call over a (B, S) bucket instead of one
+compile-and-launch per request, so TTFT under burst load reflects
+batch admission, not serial prefill launches. Real prompt token ids (``Request.prompt``) feed the
 prefill; trace-driven workloads without token material fall back to a
 deterministic synthetic prompt. Squash/preemption preserves the
 streamed prefix and its latency records across the requeue (the handle
@@ -76,7 +92,7 @@ from repro.core import (AdapterCache, AdapterInfo, CacheStats,
                         MemoryPool, NoisyOraclePredictor, PoolError,
                         QueuedRequestPrefetcher, Request, RequestState,
                         SamplingParams)
-from repro.kernels.ops import resolve_lora_backend
+from repro.kernels.ops import DISPATCH_METER, resolve_lora_backend
 from repro.models import api
 from repro.models.base import ModelConfig
 from repro.models.lora_apply import (init_lora_slots, random_lora_weights,
@@ -116,6 +132,27 @@ class EngineConfig:
     # arrival histograms and issue non-blocking loads ahead of demand.
     queued_prefetch: bool = True
     histogram_prefetch: bool = True
+    # Device-resident fused decode hot loop (DESIGN §2): one jit
+    # dispatch fuses decode + sampling + cache_len advance (logits
+    # never leave the device), the KV/token/length buffers are donated
+    # into it (in-place update — no double-buffered KV), and batch
+    # state (active mask, positions, sampling params, page table) stays
+    # device-resident with updates only at place/finish/squash
+    # boundaries. False restores the seed two-dispatch loop — the
+    # baseline `benchmarks/decode_hotloop.py` A/Bs against.
+    fused_hotloop: bool = True
+    # Adaptive micro-horizon: up to this many decode steps run in one
+    # on-device lax.scan (with an on-device done-mask) when no
+    # admissions are due and no deadline/cancel sweep is armed, so the
+    # host syncs K tokens at a time. Under backlog the horizon drops to
+    # 1 so TTFT and admission latency are untouched. Keep below
+    # page_size: horizon page pre-growth stays within one page of the
+    # seed loop's per-boundary allocation.
+    max_horizon: int = 8
+    # Pipelined readback: dispatch horizon N+1 from the carried device
+    # state before syncing horizon N's tokens (host bookkeeping runs
+    # one horizon behind the device while the batch is stable).
+    pipeline_readback: bool = True
 
 
 class AdapterCatalog:
@@ -267,10 +304,43 @@ class ChameleonEngine:
         # Lifecycle fast path: deadline/cancel sweeps run only once a
         # request armed them (keeps the hot step loop scan-free).
         self._deadlines_armed = False
+        self._cancel_armed = False
         self._cancel_races: list[Request] = []
+
+        # --- device-resident hot loop state (DESIGN §2) ---
+        # ``batch_epoch`` counts batch-composition changes (place /
+        # finish / squash); the device-side batch state — active mask,
+        # sample positions, per-row sampling params, decode budgets,
+        # stop-token matrix — is rebuilt from the Python requests only
+        # when the epoch moved, and otherwise carried on device across
+        # fused steps. Same for the paged page table: ``self.page_table``
+        # (host numpy) is uploaded only when a page was allocated or
+        # freed, not per step.
+        self.fused = bool(e.fused_hotloop) and api.supports_fused(cfg)
+        self.batch_epoch = 0
+        self._dev: Optional[dict] = None
+        self._dev_epoch = -1
+        self._page_table_dev = None
+        self._page_table_dirty = True
+        # One dispatched-but-unsynced horizon: (toks (K, B) on device,
+        # emits (K, B) on device, K). Host bookkeeping for it runs at
+        # the next step boundary — after the *next* horizon was
+        # dispatched, when the batch is stable (pipelined readback).
+        self._inflight: Optional[tuple] = None
 
         self._decode_jit = jax.jit(self._decode_fn)
         self._decode_paged_jit = jax.jit(self._decode_paged_fn)
+        # Fused decode+sample horizon: tokens/KV/cache_len/active/
+        # positions are *donated* — XLA updates the KV slab (the big
+        # buffer) in place instead of allocating a second copy per
+        # step. K and the all-greedy fast path are static (bounded
+        # variants: K is bucketed to powers of two).
+        self._fused_jit = jax.jit(
+            self._fused_fn, static_argnames=("K", "all_greedy"),
+            donate_argnums=(2, 3, 4, 5, 6))
+        self._fused_paged_jit = jax.jit(
+            self._fused_paged_fn, static_argnames=("K", "all_greedy"),
+            donate_argnums=(2, 3, 5, 6, 7))
         self._prefill_jit = jax.jit(self._prefill_fn,
                                     static_argnames=("S",))
         self._sample_jit = jax.jit(api.sample_tokens)
@@ -384,6 +454,26 @@ class ChameleonEngine:
                                      adapter_idx=adapter_slot,
                                      lora_backend=self._lora_backend)
 
+    def _fused_fn(self, params, lora, tokens, kv, cache_len, active,
+                  positions, adapter_slot, budget, stop, temp, topk,
+                  topp, seeds, *, K, all_greedy):
+        return api.decode_fused(
+            self.cfg, params, tokens, kv, cache_len, active, positions,
+            budget, stop, temp, topk, topp, seeds, n_steps=K,
+            all_greedy=all_greedy, max_ctx=self.ecfg.max_len, lora=lora,
+            adapter_idx=adapter_slot, lora_backend=self._lora_backend)
+
+    def _fused_paged_fn(self, params, lora, tokens, kv_pages, page_table,
+                        cache_len, active, positions, adapter_slot,
+                        budget, stop, temp, topk, topp, seeds, *, K,
+                        all_greedy):
+        return api.decode_fused_paged(
+            self.cfg, params, tokens, kv_pages, page_table, cache_len,
+            active, positions, budget, stop, temp, topk, topp, seeds,
+            n_steps=K, all_greedy=all_greedy, max_ctx=self.ecfg.max_len,
+            lora=lora, adapter_idx=adapter_slot,
+            lora_backend=self._lora_backend)
+
     def _prefill_fn(self, params, lora, tokens, adapter_slot, last_pos,
                     S):
         del S
@@ -430,6 +520,7 @@ class ChameleonEngine:
         base = len(self.slot_pages[slot])
         self.slot_pages[slot].extend(got)
         self.page_table[slot, base:base + len(got)] = got
+        self._page_table_dirty = True
         return True
 
     def _free_slot_pages(self, slot: int, req_id: int) -> None:
@@ -438,6 +529,7 @@ class ChameleonEngine:
         self.free_pages.extend(self.slot_pages[slot])
         self.slot_pages[slot] = []
         self.page_table[slot, :] = 0
+        self._page_table_dirty = True
         self.pool.release_request(req_id)
 
     def _stash_progress(self, req: Request) -> None:
@@ -450,16 +542,22 @@ class ChameleonEngine:
                            self._tbts.pop(rid, None),
                            self._last_tok.pop(rid, None))
 
-    def _preempt(self, slot: int) -> None:
-        """Out of pages mid-flight: free the slot and requeue (squash
-        path — the request re-executes, keeping its streamed prefix)."""
+    def _squash_slot(self, slot: int) -> None:
+        """Free a slot and requeue its request (squash path: bypass
+        misprediction or page preemption — the request re-executes,
+        keeping its streamed prefix)."""
         req = self.slot_req[slot]
         self.active[slot] = False
         self.slot_req[slot] = None
+        self.batch_epoch += 1
         self._stash_progress(req)
         self._free_slot_pages(slot, req.req_id)
-        self.n_preempted += 1
         self.sched.on_squash(req, self.now())
+
+    def _preempt(self, slot: int) -> None:
+        """Out of pages mid-flight: squash, and count it."""
+        self.n_preempted += 1
+        self._squash_slot(slot)
 
     # ---------------------------------------------------------- lifecycle
     def submit(self, req: Request, *,
@@ -489,6 +587,7 @@ class ChameleonEngine:
         now = self.now()
         if any(r is req for r in self.slot_req):
             req.cancel_requested = True    # step() sweeps it
+            self._cancel_armed = True      # fused loop: force a sweep
             return True
         if self.sched.cancel(req, now):
             self._finalize_unplaced(req, RequestState.CANCELLED, now)
@@ -496,6 +595,7 @@ class ChameleonEngine:
         # Mid-transition race (e.g. cancelled from an on_token callback
         # while being placed): mark it; the step sweep resolves it.
         req.cancel_requested = True
+        self._cancel_armed = True
         self._cancel_races.append(req)
         return True
 
@@ -533,7 +633,12 @@ class ChameleonEngine:
                 tbts.append(now - self._last_tok[rid])
         self._last_tok[rid] = now
         handle = self.handles.get(rid)
-        if handle is not None:
+        if handle is not None and not req.cancel_requested:
+            # A cancelled request's slot is finalised at the next step
+            # boundary, but tokens already in flight (the seed loop's
+            # current step; up to two undrained horizons on the fused
+            # loop) are still recorded internally — they must not reach
+            # the handle after cancel() returned.
             handle._push(pos, tok)
 
     def _place_batch(self, reqs: list[Request]) -> None:
@@ -637,7 +742,8 @@ class ChameleonEngine:
             self.kv_pages = (kp, vp)
         else:
             self.kv = (k, v)
-        for i, req in enumerate(reqs):
+        self.batch_epoch += 1      # admission boundary: device batch
+        for i, req in enumerate(reqs):   # state rebuilds next dispatch
             if req.done or self._hit_stop(req):
                 self._finish(free[i])
 
@@ -704,6 +810,7 @@ class ChameleonEngine:
         self._free_slot_pages(slot, req.req_id)
         self.active[slot] = False
         self.slot_req[slot] = None
+        self.batch_epoch += 1
         tbts = self._tbts.pop(req.req_id, [])
         req.preserved_tbts = tbts    # handle.result() reads these
         self._last_tok.pop(req.req_id, None)
@@ -727,12 +834,16 @@ class ChameleonEngine:
             queue_wait=req.queue_wait() or 0.0,
             load_wait=req.adapter_load_wait))
 
-    def _ensure_decode_pages(self) -> None:
+    def _ensure_decode_pages(self, lens: Optional[np.ndarray] = None
+                             ) -> None:
         """Grow each active slot to cover its next decode write; slots
         that cannot get a page even after shrinking the adapter cache
-        are preempted (freed pages let the remaining slots proceed)."""
+        are preempted (freed pages let the remaining slots proceed).
+        The fused loop passes host-derived lengths so this never forces
+        a device sync on the hot path."""
         now = self.now()
-        lens = np.asarray(self.cache_len)
+        if lens is None:
+            lens = np.asarray(self.cache_len)
         ps = self.pool.page_size
         for slot in np.where(self.active)[0]:
             needed = int(lens[slot]) // ps + 1
@@ -768,6 +879,15 @@ class ChameleonEngine:
         if self._deadlines_armed:
             for req in self.sched.reap_expired(now):
                 self._finalize_unplaced(req, RequestState.EXPIRED, now)
+            # Disarm once no live request carries a deadline, so the
+            # fused loop's micro-horizon re-opens after TTL'd work
+            # drains (submit re-arms).
+            self._deadlines_armed = (
+                any(r is not None and r.deadline is not None
+                    for r in self.slot_req)
+                or any(r.deadline is not None
+                       for r in self.sched.queued_requests_in_order()))
+        self._cancel_armed = False      # re-armed below by racing cancels
         for slot in np.where(self.active)[0]:
             req = self.slot_req[slot]
             if req.cancel_requested:
@@ -782,10 +902,37 @@ class ChameleonEngine:
                 if not req.terminal:
                     self.cancel(req)
 
+    def _idle_wait(self) -> None:
+        """Idle with loads in flight: wait until the earliest in-flight
+        load's modeled readiness instead of spinning a fixed busy-wait;
+        already-due loads (waiting only on the actual device write)
+        poll at a tight interval. Under an *injected* clock the owner
+        of that clock controls time — modeled waits are virtual-time
+        deltas, so sleeping real wall time for them would stall a DES
+        replay; the engine returns immediately and lets the driver
+        advance the clock."""
+        if self._pending_loads and self._clock is None:
+            t_next = min(t for _, _, t in self._pending_loads.values())
+            wait = t_next - self.now()
+            time.sleep(min(max(wait, 1e-4), 0.05))
+
     def step(self) -> None:
         """One engine iteration: retire finished loads -> enforce
         deadlines/cancellations -> admit -> prefetch -> batched prefill
-        -> one decode + sample."""
+        -> decode. With ``fused_hotloop`` the decode half is the
+        device-resident fused loop (one dispatch per K-token horizon);
+        otherwise the seed two-dispatch loop runs."""
+        if self.fused:
+            return self._step_fused()
+        return self._step_seed()
+
+    def _step_seed(self) -> None:
+        """The seed decode loop: one decode dispatch, logits back to a
+        second sampling dispatch, per-step host re-uploads of page
+        table / active mask / sampling arrays, and a blocking token
+        sync before bookkeeping. Kept verbatim (plus the dispatch
+        meter) as the ``decode_hotloop.py`` A/B baseline and the
+        fallback for model families without fused decode support."""
         self._poll_loads()
         now = self.now()
         self._sweep_lifecycle(now)
@@ -796,16 +943,10 @@ class ChameleonEngine:
         if self.paged:
             self._ensure_decode_pages()
         if not self.active.any():
-            if self._pending_loads:
-                # Idle with loads in flight: wait until the earliest
-                # in-flight load's modeled readiness instead of spinning
-                # a fixed busy-wait; already-due loads (waiting only on
-                # the actual device write) poll at a tight interval.
-                t_next = min(t for _, _, t in self._pending_loads.values())
-                wait = t_next - self.now()
-                time.sleep(min(max(wait, 1e-4), 0.05))
+            self._idle_wait()
             return
         self.batch_occupancy.append(int(self.active.sum()))
+        DISPATCH_METER.tick()
         if self.paged:
             logits, self.kv_pages = self._decode_paged_jit(
                 self.params, self.lora, self.tokens, self.kv_pages,
@@ -815,6 +956,7 @@ class ChameleonEngine:
             logits, self.kv = self._decode_jit(
                 self.params, self.lora, self.tokens, self.kv,
                 self.cache_len, self.adapter_slot)
+        DISPATCH_METER.tick()
         if self._all_greedy(self.slot_req):
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         else:
@@ -825,7 +967,8 @@ class ChameleonEngine:
         self.cache_len = self.cache_len + jnp.asarray(self.active,
                                                       jnp.int32)
         now = self.now()
-        nxt_host = np.asarray(nxt)
+        with DISPATCH_METER.sync():
+            nxt_host = np.asarray(nxt)
         to_finish, to_squash = [], []
         for slot in np.where(self.active)[0]:
             req = self.slot_req[slot]
@@ -841,12 +984,284 @@ class ChameleonEngine:
         for slot in to_finish:
             self._finish(slot)
         for slot in to_squash:
-            req = self.slot_req[slot]
-            self.active[slot] = False
-            self.slot_req[slot] = None
-            self._stash_progress(req)
-            self._free_slot_pages(slot, req.req_id)
-            self.sched.on_squash(req, self.now())
+            self._squash_slot(slot)
+
+    # ------------------------------------ fused device-resident hot loop
+    #
+    # Dataflow (DESIGN §2): everything the per-token loop touches lives
+    # on device — KV (donated, updated in place), current tokens,
+    # cache_len, the active mask, sample positions, per-row sampling
+    # params, decode budgets, stop-token matrix, and (paged) the page
+    # table. The host crosses the boundary only at *batch epochs*
+    # (place/finish/squash rebuild the batch state; page alloc/free
+    # re-uploads the table) and once per K-step horizon to sync the
+    # (K, B) token block. Under backlog, armed deadlines, pending
+    # cancels or in-flight adapter loads the horizon collapses to K=1,
+    # so admission latency and lifecycle sweeps behave exactly like the
+    # seed loop.
+
+    def _host_work_pending(self) -> bool:
+        """Anything that needs host-truth bookkeeping before the next
+        dispatch: queued admissions, armed deadline/cancel sweeps, or
+        in-flight adapter loads to poll."""
+        return bool(self._deadlines_armed or self._cancel_armed
+                    or self._cancel_races or self._pending_loads
+                    or self.sched.pending_count() > 0)
+
+    def _refresh_device_state(self) -> None:
+        """(Re)build the device-resident batch state — only when the
+        batch epoch moved (satellite: the seed loop rebuilt
+        ``_all_greedy`` + ``_sampling_arrays`` from Python requests
+        every step even with an unchanged batch)."""
+        if self._dev_epoch == self.batch_epoch and self._dev is not None:
+            return
+        B = self.ecfg.max_slots
+        reqs = self.slot_req
+        # One source of truth with the seed loop: the sampler inputs
+        # (temperature/top_k/top_p/seeds/positions) come from the same
+        # builder its per-step path uses; only the fused-loop extras —
+        # decode budgets, the stop-token matrix, the active mask — are
+        # built here.
+        temp, topk, topp, seeds, pos = self._sampling_arrays(reqs, B)
+        budget = np.zeros(B, np.int32)
+        n_stop = max((len(r.sampling.stop_token_ids) for r in reqs
+                      if r is not None and r.sampling is not None),
+                     default=0)
+        stop = np.full((B, n_stop), -1, np.int32)
+        for i, r in enumerate(reqs):
+            if r is None:
+                continue
+            budget[i] = r.max_output_tokens
+            if r.sampling is not None and r.sampling.stop_token_ids:
+                stop[i, :len(r.sampling.stop_token_ids)] = \
+                    r.sampling.stop_token_ids
+        self._dev = dict(
+            active=jnp.asarray(self.active),
+            positions=pos, budget=jnp.asarray(budget),
+            stop=jnp.asarray(stop), temp=temp, topk=topk, topp=topp,
+            seeds=seeds, all_greedy=self._all_greedy(reqs))
+        self._dev_epoch = self.batch_epoch
+
+    def _host_lens(self) -> np.ndarray:
+        """cache_len derived from host truth (no device sync):
+        ``input_len + generated - 1`` for occupied slots."""
+        lens = np.zeros(self.ecfg.max_slots, np.int64)
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                lens[i] = r.input_len + r.generated - 1
+        return lens
+
+    def _choose_horizon(self) -> int:
+        """Adaptive micro-horizon K: number of decode steps fused into
+        the next dispatch. K=1 whenever the host may need to intervene
+        between tokens — backlog (``queue_pressure`` via the scheduler
+        queue), armed deadlines/cancels, in-flight loads — so TTFT and
+        admission latency are untouched; otherwise up to
+        ``max_horizon``, clamped by the longest surviving row's budget
+        and (for bypassers) the first possible squash point, then
+        bucketed to a power of two so jit variants stay bounded."""
+        e = self.ecfg
+        if e.max_horizon <= 1 or self._host_work_pending():
+            return 1
+        reqs = [r for r in self.slot_req if r is not None]
+        if not reqs:
+            return 1
+        K = min(e.max_horizon,
+                max(r.max_output_tokens - r.generated for r in reqs))
+        # A bypasser squashes on the token that exceeds its predicted
+        # length — that check is host-side, so the horizon must end
+        # exactly there (the seed loop checks it every token).
+        for r in reqs:
+            if r.bypassed:
+                K = min(K, r.predicted_output - r.generated + 1)
+        if K <= 1:
+            return 1
+        return 1 << (K.bit_length() - 1)
+
+    def _page_cover(self) -> int:
+        """Paged mode: tokens writable from *already-allocated* pages,
+        minimised over active slots (host truth — no device sync). The
+        horizon is clamped to this instead of pre-allocating ahead, so
+        page-allocation (and therefore preemption) timing is identical
+        to the seed loop's per-boundary ``_ensure_decode_pages``: the
+        scan cannot allocate mid-flight, and it never needs to."""
+        ps = self.pool.page_size
+        cover = 1 << 30
+        for slot in np.where(self.active)[0]:
+            r = self.slot_req[slot]
+            cover = min(cover, len(self.slot_pages[slot]) * ps
+                        - (r.input_len + r.generated - 1))
+        return cover
+
+    def _dispatch_horizon(self, K: int, refresh: bool = True) -> None:
+        """Launch one fused K-step horizon and re-point the engine's
+        device state at its (asynchronous) outputs. The inputs are
+        donated — after this call the previous buffers are gone, which
+        is exactly the in-place-KV invariant.
+
+        ``refresh=False`` (pipelined dispatch): host truth lags the
+        device by the in-flight horizon, so rebuilding active/positions
+        from the Python requests would *rewind* the device state — the
+        carried device arrays are the only truth until the next full
+        sync. A finish the device discovered mid-horizon is already off
+        the carried active mask; a host-side squash leaves its row
+        decoding masked garbage until the next synced placement rebuild.
+        """
+        if refresh:
+            self._refresh_device_state()
+        d = self._dev
+        DISPATCH_METER.tick()
+        if self.paged:
+            if self._page_table_dirty or self._page_table_dev is None:
+                self._page_table_dev = jnp.asarray(self.page_table)
+                self._page_table_dirty = False
+            carry, toks, emits = self._fused_paged_jit(
+                self.params, self.lora, self.tokens, self.kv_pages,
+                self._page_table_dev, self.cache_len, d["active"],
+                d["positions"], self.adapter_slot, d["budget"],
+                d["stop"], d["temp"], d["topk"], d["topp"], d["seeds"],
+                K=K, all_greedy=d["all_greedy"])
+            (self.tokens, self.kv_pages, self.cache_len,
+             d["active"], d["positions"]) = carry
+        else:
+            carry, toks, emits = self._fused_jit(
+                self.params, self.lora, self.tokens, self.kv,
+                self.cache_len, d["active"], d["positions"],
+                self.adapter_slot, d["budget"], d["stop"], d["temp"],
+                d["topk"], d["topp"], d["seeds"],
+                K=K, all_greedy=d["all_greedy"])
+            (self.tokens, self.kv, self.cache_len,
+             d["active"], d["positions"]) = carry
+        self._inflight = (toks, emits, K)
+
+    def _drain_inflight(self) -> None:
+        """Sync the in-flight horizon's token block and replay the
+        seed loop's per-token bookkeeping from it: record/stream each
+        emitted token, then finish / squash slots in sub-step order
+        (the on-device done-mask already stopped finished rows, so a
+        request that hit EOS inside the horizon emitted nothing past
+        it)."""
+        if self._inflight is None:
+            return
+        toks, emits, _K = self._inflight
+        self._inflight = None
+        with DISPATCH_METER.sync():
+            toks_h = np.asarray(toks)
+            emits_h = np.asarray(emits)
+        now = self.now()
+        for k in range(toks_h.shape[0]):
+            em = emits_h[k]
+            if not em.any():
+                break               # every row finished earlier in the scan
+            self.batch_occupancy.append(int(em.sum()))
+            to_finish, to_squash = [], []
+            for slot in np.where(em)[0]:
+                req = self.slot_req[slot]
+                if req is None:
+                    # Slot squashed at an earlier sub-step of this (or
+                    # the previous, pipelined) horizon: the device kept
+                    # emitting, but the request re-executes from its
+                    # requeue — dropping the tail keeps the stream
+                    # identical to the seed loop's.
+                    continue
+                pos = req.generated
+                req.generated += 1
+                self._record_token(req, pos, int(toks_h[k, slot]), now)
+                if req.done or self._hit_stop(req) \
+                        or req.generated + req.input_len \
+                        >= self.ecfg.max_len - 1:
+                    to_finish.append(int(slot))
+                elif req.bypassed and req.exceeded_prediction():
+                    to_squash.append(int(slot))
+            for slot in to_finish:
+                self._finish(slot)
+            for slot in to_squash:
+                self._squash_slot(slot)
+
+    def _sync_inflight(self) -> None:
+        """Barrier: retire any dispatched-but-unsynced horizon so host
+        records are complete (warmup resets, external state reads)."""
+        self._drain_inflight()
+
+    def _plan_pipelined_horizon(self) -> Optional[int]:
+        """Pipelined readback: decide whether the *next* horizon can be
+        dispatched from the carried device state before the in-flight
+        one is synced. Requires zero host work due, at least one row
+        that is provably still decoding after the in-flight horizon's
+        K steps, and (paged) page coverage for both horizons' writes —
+        host truth lags the device by exactly the in-flight K, so every
+        bound is computed against that worst case. Returns the next K,
+        or None to sync first."""
+        e = self.ecfg
+        if (not e.pipeline_readback or self._inflight is None
+                or self._host_work_pending()):
+            return None
+        _, _, k_in = self._inflight
+        alive = 0
+        for r in self.slot_req:
+            if r is None or (r.sampling is not None
+                             and r.sampling.stop_token_ids):
+                continue        # a stop token could end the row any step
+            rem = r.max_output_tokens - r.generated - k_in
+            rem = min(rem, (e.max_len - 1 - r.input_len
+                            - r.generated - k_in))
+            alive = max(alive, rem)
+        if alive <= 0:
+            return None
+        K = min(e.max_horizon, alive)
+        for r in self.slot_req:
+            # A bypasser's squash point is host-side: the combined
+            # in-flight + next horizon must end exactly on it.
+            if r is not None and r.bypassed:
+                K = min(K, r.predicted_output - r.generated - k_in + 1)
+        if K < 1:
+            return None
+        if self.paged:
+            # Host truth lags the device by the in-flight k_in writes;
+            # existing pages must cover those plus the next horizon.
+            K = min(K, self._page_cover() - k_in)
+            if K < 1:
+                return None     # sync, then allocate at the boundary
+        return 1 << (K.bit_length() - 1)
+
+    def _step_fused(self) -> None:
+        """One fused-loop iteration. Steady state (stable batch, empty
+        queue): dispatch horizon N+1 from the carried device state,
+        *then* sync horizon N's tokens — the host-side bookkeeping of
+        step N overlaps the device compute of step N+1. Any pending
+        host work (admissions, lifecycle, loads) first syncs the
+        in-flight horizon, then runs the same admit/place path as the
+        seed loop."""
+        self._poll_loads()
+        if self._inflight is not None:
+            k_next = self._plan_pipelined_horizon()
+            if k_next is not None:
+                prev, self._inflight = self._inflight, None
+                self._dispatch_horizon(k_next, refresh=False)
+                nxt, self._inflight = self._inflight, prev
+                self._drain_inflight()
+                self._inflight = nxt
+                return
+            self._drain_inflight()
+        now = self.now()
+        self._sweep_lifecycle(now)
+        running = [r for r in self.slot_req if r is not None]
+        admitted = self.sched.schedule(now, running)
+        self._run_prefetchers(now)
+        self._place_batch(admitted)
+        if self.paged:
+            self._ensure_decode_pages(self._host_lens())
+        if not self.active.any():
+            self._idle_wait()
+            return
+        K = self._choose_horizon()
+        if self.paged and K > 1:
+            # Clamp to allocated pages (cover >= 1: the _ensure pass
+            # grew or preempted) — allocation timing stays seed-equal.
+            K = 1 << (max(1, min(K, self._page_cover())).bit_length() - 1)
+        self._dispatch_horizon(K)
+        if not self.ecfg.pipeline_readback:
+            self._drain_inflight()
 
     def busy(self) -> bool:
         """True while any work is in flight or queued."""
@@ -866,6 +1281,7 @@ class ChameleonEngine:
         adapter loads) so reported metrics cover only the measured run.
         Device state and cache residency are kept — replicas start warm
         but identically so across routing policies."""
+        self._sync_inflight()
         self.flush_loads()
         self.completed = []
         self.records = []
@@ -911,6 +1327,10 @@ class ChameleonEngine:
             "pending_loads": len(self._pending_loads),
             "resident_adapters": sorted(self.cache.resident_ids()),
             "pool": self.pool.snapshot(),
+            # Fused hot loop (DESIGN §2): the device batch state is
+            # rebuilt only when this epoch counter moves.
+            "fused_hotloop": self.fused,
+            "batch_epoch": self.batch_epoch,
             **self.kv_page_stats(),
         }
 

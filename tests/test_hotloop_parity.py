@@ -1,0 +1,291 @@
+"""Fused device-resident decode hot loop: whole-engine token parity.
+
+The fused loop (DESIGN §2) changes *how* tokens are produced — one
+donated-buffer jit dispatch fuses decode + sampling + cache_len
+advance, and an adaptive K-step micro-horizon syncs K tokens at a time
+— but must never change *which* tokens are produced. This suite A/Bs
+the fused loop against the seed two-dispatch loop across paged/dense,
+greedy/sampled, mid-stream squash (page preemption) and mid-horizon
+finish, plus the satellite regressions: the virtual-clock idle wait
+and the batch-epoch-cached device state.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request, RequestState, SamplingParams
+from repro.models import api
+from repro.serving.engine import ChameleonEngine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+BASE = dict(max_slots=4, max_len=128, n_lora_slots=4, n_adapters=8,
+            seed=0)
+
+
+def make_engine(small_model, fused, **kw):
+    cfg, params = small_model
+    return ChameleonEngine(cfg, params, EngineConfig(
+        **{**BASE, **kw, "fused_hotloop": fused}))
+
+
+def run_to_completion(eng, specs, sampling=None, max_steps=20_000):
+    reqs = [Request(input_len=i, output_len=o, adapter_id=a)
+            for i, o, a in specs]
+    handles = [eng.submit(r, sampling=sampling) for r in reqs]
+    steps = 0
+    while eng.busy() and steps < max_steps:
+        eng.step()
+        eng.pool.check_invariants()
+        steps += 1
+    assert not eng.busy(), "engine failed to drain"
+    return reqs, handles
+
+
+def fixed_trace(n=10, seed=3, adapters=8):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(4, 30)), int(rng.integers(2, 40)),
+             int(rng.integers(0, adapters))) for _ in range(n)]
+
+
+class TestFusedSeedParity:
+    @pytest.mark.parametrize("paged", (False, True))
+    def test_greedy_token_parity(self, small_model, paged):
+        """Fused == seed, token for token, both KV layouts, and the
+        handle streams match the internal record."""
+        specs = fixed_trace()
+        outs = {}
+        for fused in (False, True):
+            eng = make_engine(small_model, fused, paged=paged)
+            reqs, handles = run_to_completion(eng, specs)
+            assert eng.stats()["completed"] == len(specs)
+            streamed = [h.tokens for h in handles]
+            assert streamed == [eng.outputs[r.req_id] for r in reqs]
+            outs[fused] = streamed
+        assert outs[True] == outs[False], (
+            "fused hot loop changed decoded tokens")
+
+    @pytest.mark.parametrize("paged", (False, True))
+    def test_sampled_token_parity(self, small_model, paged):
+        """Stochastic sampling is keyed on (seed, position), so the
+        fused scan must resample the identical stream."""
+        sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9,
+                            seed=1234)
+        specs = fixed_trace(n=6, seed=5)
+        outs = {}
+        for fused in (False, True):
+            eng = make_engine(small_model, fused, paged=paged)
+            _, handles = run_to_completion(eng, specs, sampling=sp)
+            outs[fused] = [h.tokens for h in handles]
+        assert outs[True] == outs[False], (
+            "fused hot loop changed sampled tokens")
+
+    def test_mid_stream_squash_parity(self, small_model):
+        """Page preemption mid-decode: the fused run must preempt,
+        preserve the streamed prefix, and finish with exactly the
+        seed run's tokens (squash continuation is re-executed
+        deterministically)."""
+        spec = dict(input_len=8, output_len=40, adapter_id=0)
+        ref_eng = make_engine(small_model, fused=False)
+        ref = ref_eng.submit(Request(**spec)).result().tokens
+
+        eng = make_engine(small_model, fused=True)
+        h = eng.submit(Request(**spec))
+        it = h.stream()
+        for _ in range(4):
+            next(it)
+        prefix = list(h.tokens)
+        stolen, eng.free_pages = eng.free_pages, []
+        for _ in range(30):
+            eng.step()
+            if eng.n_preempted:
+                break
+        assert eng.n_preempted >= 1, "steal must force a preemption"
+        assert h.tokens[:len(prefix)] == prefix, "stream rewound"
+        eng.free_pages = stolen
+        eng.drain()
+        assert h.state is RequestState.FINISHED
+        assert h.tokens == ref, "squash continuation diverged from seed"
+        assert h.req.squash_count >= 1
+
+    def test_mid_horizon_finish_no_post_eos_tokens(self, small_model):
+        """A request hitting its end *inside* a K-step scan must not
+        emit tokens past it: the short request's handle gets exactly
+        output_len tokens while a long co-batched request keeps the
+        batch (and its horizons) running."""
+        eng = make_engine(small_model, fused=True)
+        short = eng.submit(Request(input_len=8, output_len=5,
+                                   adapter_id=0))
+        long = eng.submit(Request(input_len=8, output_len=50,
+                                  adapter_id=1))
+        eng.drain()
+        assert short.state is RequestState.FINISHED
+        assert len(short.tokens) == 5, (
+            f"post-EOS tokens leaked from the horizon: {short.tokens}")
+        assert len(long.tokens) == 50
+        # And the same pair on the seed loop decodes identically.
+        ref = make_engine(small_model, fused=False)
+        s2 = ref.submit(Request(input_len=8, output_len=5, adapter_id=0))
+        l2 = ref.submit(Request(input_len=8, output_len=50,
+                                adapter_id=1))
+        ref.drain()
+        assert short.tokens == s2.tokens and long.tokens == l2.tokens
+
+    def test_stop_token_mid_horizon(self, small_model):
+        """A SamplingParams stop id sampled inside a horizon ends the
+        stream on that token (kept, vLLM-style), identically to the
+        seed loop."""
+        ref_eng = make_engine(small_model, fused=False)
+        ref = ref_eng.submit(Request(input_len=8, output_len=30,
+                                     adapter_id=1)).result().tokens
+        # A token whose *first* occurrence is a few steps in, so the
+        # stop lands inside a K-step horizon, not at its boundary.
+        stop, cut = next((t, i) for i, t in enumerate(ref)
+                         if i >= 4 and ref.index(t) == i)
+        outs = {}
+        for fused in (False, True):
+            eng = make_engine(small_model, fused)
+            res = eng.submit(
+                Request(input_len=8, output_len=30, adapter_id=1),
+                sampling=SamplingParams(stop_token_ids=(stop,))
+            ).result()
+            assert res.finished
+            outs[fused] = res.tokens
+        assert outs[True] == outs[False] == ref[:cut + 1]
+
+    def test_seed_loop_still_selectable(self, small_model):
+        eng = make_engine(small_model, fused=False)
+        assert not eng.fused
+        eng2 = make_engine(small_model, fused=True)
+        assert eng2.fused
+
+    def test_moe_family_fused_parity(self):
+        """`api.supports_fused` claims MoE: the fused loop must decode
+        an MoE engine token-identically to the seed loop (dense KV —
+        MoE has no paged decode)."""
+        cfg = get_config("qwen3-moe-235b-a22b").reduced()
+        assert api.supports_fused(cfg) and not api.supports_paged(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(0),
+                                 jnp.float32)
+        outs = {}
+        for fused in (False, True):
+            eng = ChameleonEngine(cfg, params, EngineConfig(
+                max_slots=2, max_len=64, n_lora_slots=2, n_adapters=2,
+                seed=0, fused_hotloop=fused))
+            hs = [eng.submit(Request(input_len=8, output_len=12,
+                                     adapter_id=i)) for i in range(2)]
+            eng.drain()
+            outs[fused] = [h.tokens for h in hs]
+        assert outs[True] == outs[False]
+        assert all(len(t) == 12 for t in outs[True])
+
+
+class TestHotloopSatellites:
+    def test_virtual_clock_idle_wait_does_not_sleep(self, small_model):
+        """Regression (engine.py idle wait): with an injected clock the
+        modeled load-ready time is *virtual*, so the idle step must not
+        ``time.sleep`` real wall time for it. The seed behaviour slept
+        up to 50 ms per step — 100 idle steps took seconds."""
+        cfg, params = small_model
+        vnow = [0.0]
+        eng = ChameleonEngine(
+            cfg, params,
+            EngineConfig(**BASE, h2d_gbps=1e-6),   # ~minutes of modeled load
+            clock=lambda: vnow[0])
+        eng.submit(Request(input_len=8, output_len=4, adapter_id=0))
+        for _ in range(5):      # dispatch the load; request defers
+            eng.step()
+        assert eng._pending_loads, "load should be modeled in flight"
+        t0 = time.monotonic()
+        for _ in range(100):
+            eng.step()          # idle: nothing active, load not ready
+        elapsed = time.monotonic() - t0
+        assert elapsed < 1.0, (
+            f"idle steps slept wall time under a virtual clock "
+            f"({elapsed:.2f}s for 100 steps)")
+        # Advancing the virtual clock retires the load and the request.
+        vnow[0] = 1e9
+        eng.drain()
+        assert eng.stats()["completed"] == 1
+
+    def test_wall_clock_idle_wait_still_sleeps(self, small_model):
+        """Without an injected clock the idle wait must still back off
+        instead of busy-spinning."""
+        eng = make_engine(small_model, fused=True, h2d_gbps=1e-6)
+        eng.submit(Request(input_len=8, output_len=4, adapter_id=0))
+        for _ in range(5):
+            eng.step()
+        assert eng._pending_loads
+        t0 = time.monotonic()
+        for _ in range(3):
+            eng.step()
+        assert time.monotonic() - t0 > 1e-4
+        eng.flush_loads()
+        eng.drain()
+
+    def test_batch_epoch_only_moves_at_boundaries(self, small_model):
+        """Satellite: ``_all_greedy`` + sampling arrays are cached on
+        the batch epoch — pure decode steps must not bump it (the seed
+        loop rebuilt them from Python requests every step)."""
+        eng = make_engine(small_model, fused=True)
+        h = eng.submit(Request(input_len=8, output_len=60, adapter_id=0))
+        while not eng.active.any():
+            eng.step()
+        e0 = eng.stats()["batch_epoch"]
+        assert e0 > 0, "placement must bump the epoch"
+        for _ in range(3):      # decode-only steps: stable batch
+            eng.step()
+        assert eng.stats()["batch_epoch"] == e0, (
+            "pure decode steps must not invalidate device batch state")
+        eng.drain()
+        assert eng.stats()["batch_epoch"] > e0, (
+            "finish must bump the epoch")
+        assert h.state is RequestState.FINISHED
+
+    def test_cancel_during_horizon(self, small_model):
+        """cancel() against a running fused engine lands at the next
+        step boundary even with a dispatched-but-unsynced horizon, and
+        the handle receives no tokens after cancel() returns (tokens
+        already in flight on device are dropped at the handle)."""
+        eng = make_engine(small_model, fused=True)
+        h = eng.submit(Request(input_len=8, output_len=100, adapter_id=0))
+        next(h.stream())
+        n_at_cancel = len(h.tokens)
+        assert h.cancel()
+        eng.drain()
+        assert h.state is RequestState.CANCELLED
+        assert len(h.tokens) == n_at_cancel, (
+            "post-cancel tokens leaked to the handle")
+        eng.pool.check_invariants()
+        assert eng.pool.used_requests == 0
+
+    def test_page_accounting_holds_every_fused_step(self, small_model):
+        """Pool invariants and page/table consistency hold at every
+        step boundary of the fused loop (horizons allocate nothing
+        mid-scan)."""
+        eng = make_engine(small_model, fused=True)
+        reqs = [Request(input_len=i, output_len=o, adapter_id=a)
+                for i, o, a in fixed_trace(8, seed=7)]
+        for r in reqs:
+            eng.submit(r)
+        ps = eng.pool.page_size
+        total = eng.n_pages - 1
+        steps = 0
+        while eng.busy() and steps < 10_000:
+            eng.step()
+            eng.pool.check_invariants()
+            allocated = sum(len(p) for p in eng.slot_pages)
+            assert eng.pool.used_requests == allocated * ps
+            assert len(eng.free_pages) + allocated == total
+            steps += 1
+        assert eng.stats()["completed"] == len(reqs)

@@ -326,7 +326,12 @@ class TestSquashContinuity:
         final tokens must equal an unpreempted run."""
         cfg, params = small_model
         ref_eng = ChameleonEngine(cfg, params, EngineConfig(**ECFG))
-        spec = dict(input_len=8, output_len=24, adapter_id=0)
+        # Sized so a third KV page is still unallocated when the pool
+        # is drained below: the fused loop decodes in multi-token
+        # horizons, so by the time the caller has consumed 4 tokens
+        # the engine may already hold every page a 2-page request
+        # needs (output 24 + input 8 = exactly 2 pages of 16).
+        spec = dict(input_len=8, output_len=40, adapter_id=0)
         ref = ref_eng.submit(Request(**spec)).result().tokens
 
         eng = ChameleonEngine(cfg, params, EngineConfig(**ECFG))
