@@ -30,6 +30,9 @@ REQUIRED_VALIDATED = {
         "all_completed", "overlap_beats_sync_p99_ttft"},
     "fig10_latency_load_hotloop_ab": {"all_completed",
                                       "tokens_identical"},
+    "fig10_latency_load_prefix_ab": {
+        "all_completed", "tokens_identical", "prefix_hit_rate",
+        "prefix_reduces_p99_ttft"},
 }
 
 

@@ -14,6 +14,7 @@ from .memory_pool import MemoryPool, PoolError, kv_token_bytes
 from .predictor import (HistogramPredictor, NoisyOraclePredictor, bucket_of,
                         bucket_repr, measure_accuracy)
 from .prefetcher import HistogramPrefetcher, QueuedRequestPrefetcher
+from .prefix_cache import PrefixCache, PrefixNode
 from .quotas import QueueStats, assign_quotas, tok_min
 from .request import Request, RequestState, TERMINAL_STATES
 from .sampling import GREEDY, SamplingParams
@@ -32,6 +33,7 @@ __all__ = [
     "HistogramPredictor", "NoisyOraclePredictor", "bucket_of",
     "bucket_repr", "measure_accuracy",
     "HistogramPrefetcher", "QueuedRequestPrefetcher",
+    "PrefixCache", "PrefixNode",
     "QueueStats", "assign_quotas", "tok_min",
     "Request", "RequestState", "TERMINAL_STATES",
     "GREEDY", "SamplingParams",

@@ -20,8 +20,16 @@ pre-allocates one pool and accounts *everything* in token units:
 number of pages, enforced by ``check_invariants``. Adapter holds stay
 token-granular — adapters are contiguous slot buffers, not paged.
 
+Shared pages (prefix-cache substrate): a page can be promoted out of a
+request hold into a refcounted shared ledger (``add_shared_page``),
+after which any number of requests — and the prefix radix tree itself —
+hold references (``share_pages``/``release_shared``). Shared pages are
+charged to ``used_shared`` so they count against both request headroom
+and the adapter-cache watermark: cached prefixes are *accounted* idle
+memory, exactly like resident adapters, never invisible occupancy.
+
 The pool is deliberately policy-free: eviction choices live in
-adapter_cache.py, admission choices in scheduler.py.
+adapter_cache.py / prefix_cache.py, admission choices in scheduler.py.
 """
 from __future__ import annotations
 
@@ -38,18 +46,21 @@ class MemoryPool:
     page_size: int = 1                # tokens per KV page (1 = dense mode)
     used_requests: int = 0
     used_adapters: int = 0
+    used_shared: int = 0              # refcounted prefix-cache pages
     _request_holds: dict = field(default_factory=dict)   # req_id -> tokens
     _adapter_holds: dict = field(default_factory=dict)   # adapter_id -> tokens
+    _shared_refs: dict = field(default_factory=dict)     # page_id -> refcount
 
     # ------------------------------------------------------------------
     @property
     def free_tokens(self) -> int:
-        return self.capacity_tokens - self.used_requests - self.used_adapters
+        return (self.capacity_tokens - self.used_requests
+                - self.used_adapters - self.used_shared)
 
     @property
     def cache_tokens(self) -> int:
         """Current adapter-cache capacity = resident adapters + free HBM."""
-        return self.capacity_tokens - self.used_requests
+        return self.capacity_tokens - self.used_requests - self.used_shared
 
     def request_headroom(self) -> int:
         """Tokens available to requests without evicting any adapter."""
@@ -82,6 +93,11 @@ class MemoryPool:
             raise PoolError(
                 f"paged pool: hold of {tokens} tokens is not a multiple "
                 f"of page_size={self.page_size}")
+        if tokens == 0:
+            # A zero-token reserve must not materialise a phantom hold
+            # entry: ``req_id in _request_holds`` is how callers test
+            # "does this request occupy memory".
+            return
         self._request_holds[req_id] = self._request_holds.get(req_id, 0) + tokens
         self.used_requests += tokens
 
@@ -109,6 +125,62 @@ class MemoryPool:
             self._request_holds[req_id] = held - tokens
         self.used_requests -= tokens
 
+    # Shared pages (prefix cache) ---------------------------------------
+    def add_shared_page(self, page_id: int) -> None:
+        """Admit ``page_id`` to the shared ledger with refcount 1 (the
+        prefix cache's own reference). The page's tokens move to
+        ``used_shared``; the caller is responsible for having given up
+        (or never taken) any request hold covering them — adoption of a
+        prompt page is ``shrink_request`` then ``add_shared_page``, a
+        conserving transfer."""
+        if self.page_size <= 1:
+            raise PoolError("shared pages require a paged pool")
+        if page_id in self._shared_refs:
+            raise PoolError(f"page {page_id} already shared")
+        if self.page_size > self.free_tokens:
+            raise PoolError(
+                f"add_shared_page: page_size {self.page_size} exceeds "
+                f"free {self.free_tokens}")
+        self._shared_refs[page_id] = 1
+        self.used_shared += self.page_size
+
+    def share_pages(self, page_ids) -> None:
+        """Take one reference on each page (a request mapping them into
+        its page table). All-or-nothing: unknown ids fail before any
+        refcount moves."""
+        for pid in page_ids:
+            if pid not in self._shared_refs:
+                raise PoolError(f"share_pages: page {pid} is not shared")
+        for pid in page_ids:
+            self._shared_refs[pid] += 1
+
+    def release_shared(self, page_ids) -> list:
+        """Drop one reference per page; pages hitting refcount zero are
+        freed (tokens returned to the pool) and their ids returned so
+        the engine can restore them to its physical free list."""
+        for pid in page_ids:
+            if self._shared_refs.get(pid, 0) < 1:
+                raise PoolError(
+                    f"release_shared: page {pid} has no reference")
+        freed = []
+        for pid in page_ids:
+            self._shared_refs[pid] -= 1
+            if self._shared_refs[pid] == 0:
+                del self._shared_refs[pid]
+                self.used_shared -= self.page_size
+                freed.append(pid)
+        return freed
+
+    def shared_refcount(self, page_id: int) -> int:
+        return self._shared_refs.get(page_id, 0)
+
+    def shared_page_ids(self):
+        return set(self._shared_refs)
+
+    @property
+    def n_shared_pages(self) -> int:
+        return len(self._shared_refs)
+
     # Adapters ----------------------------------------------------------
     def hold_adapter(self, adapter_id: int, tokens: int) -> None:
         if adapter_id in self._adapter_holds:
@@ -128,17 +200,39 @@ class MemoryPool:
         return adapter_id in self._adapter_holds
 
     # Introspection -------------------------------------------------------
-    def check_invariants(self) -> None:
+    def check_invariants(self, free_page_ids=None) -> None:
+        """Exact-accounting invariants; cheap enough to call per step.
+
+        ``free_page_ids``: the engine's physical free list, when the
+        caller has one — asserts no page is simultaneously free and
+        shared-referenced, and that the free list has no duplicates.
+        """
         assert self.used_requests == sum(self._request_holds.values())
         assert self.used_adapters == sum(self._adapter_holds.values())
+        assert self.used_shared == len(self._shared_refs) * self.page_size
         assert 0 <= self.used_requests
         assert 0 <= self.used_adapters
-        assert self.used_requests + self.used_adapters <= self.capacity_tokens
+        assert 0 <= self.used_shared
+        assert (self.used_requests + self.used_adapters
+                + self.used_shared) <= self.capacity_tokens
+        # Conservation: free is exactly what the ledgers leave over.
+        assert self.free_tokens == (
+            self.capacity_tokens - self.used_requests
+            - self.used_adapters - self.used_shared)
+        for pid, refs in self._shared_refs.items():
+            assert refs >= 1, f"shared page {pid} with refcount {refs}"
         if self.page_size > 1:
             for req_id, tokens in self._request_holds.items():
                 assert tokens % self.page_size == 0, (
                     f"request {req_id} holds {tokens} tokens, not a "
                     f"multiple of page_size={self.page_size}")
+        for req_id, tokens in self._request_holds.items():
+            assert tokens > 0, f"phantom zero-token hold for {req_id}"
+        if free_page_ids is not None:
+            free = list(free_page_ids)
+            assert len(free) == len(set(free)), "duplicate free page ids"
+            both = set(free) & set(self._shared_refs)
+            assert not both, f"pages both free and shared: {sorted(both)}"
 
     def snapshot(self) -> dict:
         snap = {
@@ -151,6 +245,8 @@ class MemoryPool:
             snap["page_size"] = self.page_size
             snap["pages_used"] = self.used_requests // self.page_size
             snap["pages_free"] = self.free_pages
+            snap["shared"] = self.used_shared
+            snap["pages_shared"] = self.n_shared_pages
         return snap
 
 

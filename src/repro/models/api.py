@@ -117,6 +117,17 @@ def decode_step_paged(cfg, params, tokens, kv_pages, page_table,
                                 page_table, cache_len, **kw)
 
 
+def prefill_paged(cfg, params, tokens, kv_pages, page_table, start,
+                  seq_len, **kw):
+    """Suffix prefill into paged KV (prefix-cache hits skip the cached
+    prefix; see lm.prefill_paged). Paged families only."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV unsupported for family {cfg.family}")
+    return lm.prefill_paged(cfg, params, tokens, kv_pages, page_table,
+                            start, seq_len, **kw)
+
+
 def init_serve_state(cfg: ModelConfig, batch: int, max_len: int,
                      dtype=jnp.bfloat16):
     if cfg.family == Family.SSM:

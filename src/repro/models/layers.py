@@ -146,6 +146,37 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, Sq, H, D)
 
 
+def suffix_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_positions: jax.Array) -> jax.Array:
+    """Causal attention where each *row* starts at its own offset.
+
+    Suffix prefill over a prefix-cache hit: row ``b``'s queries sit at
+    absolute positions ``q_positions[b, :]`` while k/v hold the whole
+    context (cached prefix + fresh suffix, gathered from KV pages).
+    ``gqa_attention``'s causal path only supports a scalar/step offset,
+    so this applies the per-row mask ``kpos <= q_positions[b, i]``
+    directly — otherwise the exact ``_attn_block`` computation (same
+    einsums, NEG_INF masking, softmax) so the numerics match the dense
+    prefill path.
+
+    q: (B, S, H, D); k, v: (B, T, Kh, D); q_positions: (B, S) int.
+    Returns (B, S, H, D).
+    """
+    B, S, H, D = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    qg = q.reshape(B, S, Kh, G, D)
+    scale = D ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, None, :] <= q_positions[:, :, None]   # (B, S, T)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      cache_len: jax.Array) -> jax.Array:
     """Single-token decode against a padded KV cache.

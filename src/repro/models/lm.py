@@ -26,7 +26,8 @@ import numpy as np
 from .base import Family, ModelConfig, param_shapes
 from .layers import (apply_rope, cross_entropy, decode_attention, embed,
                      gqa_attention, head_rms_norm, mrope_cos_sin,
-                     gelu_mlp, rms_norm, rope_cos_sin, swiglu, unembed)
+                     gelu_mlp, rms_norm, rope_cos_sin, suffix_attention,
+                     swiglu, unembed)
 from .lora_apply import lora_delta
 from repro.distributed.act_sharding import (constrain_btd, constrain_boundary,
                                             constrain_logits,
@@ -630,3 +631,73 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
     return unembed(h, table)[:, 0], (k_out, v_out)
+
+
+def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                  kv_pages, page_table: jax.Array, start: jax.Array,
+                  seq_len: jax.Array, lora=None, adapter_idx=None,
+                  lora_backend: str = "einsum"):
+    """Suffix prefill straight into paged KV (prefix-cache data plane).
+
+    tokens: (B, S) right-padded *suffix* token ids — the part of each
+    prompt not covered by cached prefix pages; start: (B,) absolute
+    position of tokens[:, 0] (== the cached prefix length, 0 on a cache
+    miss); seq_len: (B,) valid suffix lengths (>= 1 — the engine caps
+    prefix matches at L-1 so the last prompt position always prefills);
+    page_table: (B, P) physical pages covering positions 0..start+S-1,
+    with cached-prefix pages mapped read-only by convention (suffix
+    positions land in the request's private pages, so the scatter never
+    writes a shared page).
+
+    Per layer: project the suffix q/k/v (RoPE at the absolute offset),
+    scatter K/V into the pages at positions start..start+seq_len-1
+    (padding redirected to trash page 0), gather the request's whole
+    page list back to (B, P*page, Kh, Dh), and run offset-causal
+    attention over it — the cached prefix participates as keys without
+    being recomputed. Returns (last-valid-position logits (B, V),
+    kv_pages'). On a miss row (start == 0) this computes exactly what
+    ``prefill`` + the host page scatter produced, so one code path
+    serves hits and misses.
+    """
+    B, S = tokens.shape
+    x = embed(tokens, params["embed/tok"])
+    cos, sin = _positions(cfg, tokens.shape, start, None)
+    k_pages, v_pages = kv_pages
+    page = k_pages.shape[2]
+    P = page_table.shape[1]
+    pos = start[:, None] + jnp.arange(S)[None, :]            # (B, S) abs
+    valid = jnp.arange(S)[None, :] < seq_len[:, None]        # (B, S)
+    page_idx = jnp.take_along_axis(page_table, pos // page, axis=1)
+    page_idx = jnp.where(valid, page_idx, 0)                 # pad → trash
+    page_off = pos % page
+    attn_stack = _slice_group(params, "layers/")
+
+    def body(carry, xs):
+        h0 = constrain_boundary(carry)
+        p = xs["p"]
+        lr = xs.get("lora")
+        _, q, k, v = _qkv_proj(cfg, h0, p, cos, sin, lr, adapter_idx,
+                               lora_backend=lora_backend)
+        kp = xs["kp"].at[page_idx, page_off].set(k)
+        vp = xs["vp"].at[page_idx, page_off].set(v)
+        kf = kp[page_table].reshape(B, P * page, cfg.n_kv_heads,
+                                    cfg.head_dim)
+        vf = vp[page_table].reshape(B, P * page, cfg.n_kv_heads,
+                                    cfg.head_dim)
+        out = suffix_attention(q, kf, vf, pos)
+        out = out.reshape(B, S, cfg.q_dim)
+        h0 = _o_proj(cfg, h0, out, p, lr, adapter_idx,
+                     lora_backend=lora_backend)
+        h0 = constrain_boundary(_mlp(cfg, h0, p))
+        return h0, (kp, vp)
+
+    xs = {"p": attn_stack, "kp": k_pages, "vp": v_pages}
+    if lora is not None:
+        xs["lora"] = lora
+    h, (k_out, v_out) = jax.lax.scan(body, x, xs)
+    h_last = jnp.take_along_axis(
+        h, jnp.reshape(seq_len - 1, (-1, 1, 1)).astype(jnp.int32), axis=1)
+    h_last = rms_norm(h_last, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return unembed(h_last, table)[:, 0], (k_out, v_out)

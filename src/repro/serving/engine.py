@@ -90,8 +90,8 @@ import numpy as np
 from repro.core import (AdapterCache, AdapterInfo, CacheStats,
                         ChameleonScheduler, HistogramPrefetcher,
                         MemoryPool, NoisyOraclePredictor, PoolError,
-                        QueuedRequestPrefetcher, Request, RequestState,
-                        SamplingParams)
+                        PrefixCache, QueuedRequestPrefetcher, Request,
+                        RequestState, SamplingParams)
 from repro.kernels.ops import DISPATCH_METER, resolve_lora_backend
 from repro.models import api
 from repro.models.base import ModelConfig
@@ -153,6 +153,23 @@ class EngineConfig:
     # state before syncing horizon N's tokens (host bookkeeping runs
     # one horizon behind the device while the batch is stable).
     pipeline_readback: bool = True
+    # Prefix KV reuse (ROADMAP 1): a token-id-keyed radix tree over the
+    # paged pool keeps *prompt* KV pages resident after requests finish;
+    # the next request with a matching prefix maps those pages into its
+    # page table and prefills only the suffix (COW fork on a mid-page
+    # divergence). Paged mode only. False restores the seed prefill
+    # path bit-for-bit (the A/B baseline).
+    prefix_cache: bool = True
+    # What may share a cached page:
+    #   "exact" — pages are keyed per adapter. LoRA here touches the
+    #   q/k/v/o projections, so prompt KV is adapter-dependent; only
+    #   same-adapter reuse is output-identical to the cache-off run.
+    #   "alora" — prompt prefill runs with the *base* model and the
+    #   adapter activates at generation ("Activated LoRA", PAPERS.md):
+    #   prefix pages become adapter-invariant and one tree serves every
+    #   adapter (true cross-adapter reuse). Changes prefill semantics
+    #   for *all* requests (cache on or off) so the A/B stays paired.
+    prefix_mode: str = "exact"
 
 
 class AdapterCatalog:
@@ -284,6 +301,20 @@ class ChameleonEngine:
         else:
             self.kv = api.init_serve_state(cfg, e.max_slots, e.max_len,
                                            jnp.float32)
+        # --- prefix KV reuse (radix tree over the paged pool) ---
+        if e.prefix_mode not in ("exact", "alora"):
+            raise ValueError(f"unknown prefix_mode {e.prefix_mode!r}")
+        self.prefix: Optional[PrefixCache] = (
+            PrefixCache(self.pool, e.page_size)
+            if self.paged and e.prefix_cache else None)
+        # Per-slot shared prefix pages (subset of slot_pages the slot
+        # only *references*: freed via release_shared, never returned
+        # to free_pages directly).
+        self.slot_shared: list[list[int]] = [[] for _ in range(e.max_slots)]
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.n_prefix_hits = 0          # placements with a nonzero match
+        self.n_cow_forks = 0
         self.tokens = jnp.zeros((e.max_slots, 1), jnp.int32)
         self.cache_len = jnp.zeros((e.max_slots,), jnp.int32)
         self.active = np.zeros((e.max_slots,), bool)
@@ -343,6 +374,10 @@ class ChameleonEngine:
             donate_argnums=(2, 3, 5, 6, 7))
         self._prefill_jit = jax.jit(self._prefill_fn,
                                     static_argnames=("S",))
+        # Suffix prefill straight into donated KV pages (prefix path).
+        self._prefill_paged_jit = jax.jit(self._prefill_paged_fn,
+                                          static_argnames=("S",),
+                                          donate_argnums=(3,))
         self._sample_jit = jax.jit(api.sample_tokens)
 
     # ------------------------------------------------------------- clock
@@ -481,21 +516,40 @@ class ChameleonEngine:
                            adapter_idx=adapter_slot, last_pos=last_pos,
                            lora_backend=self._lora_backend)
 
+    def _prefill_paged_fn(self, params, lora, tokens, kv_pages,
+                          page_table, start, seq_len, adapter_slot, S):
+        del S
+        return api.prefill_paged(self.cfg, params, tokens, kv_pages,
+                                 page_table, start, seq_len, lora=lora,
+                                 adapter_idx=adapter_slot,
+                                 lora_backend=self._lora_backend)
+
+    def _prefill_lora(self):
+        """LoRA tensors for *prefill*. aLoRA prefix mode computes prompt
+        KV with the base model (the adapter activates at generation), so
+        cached prefix pages are adapter-invariant; decode is untouched."""
+        return None if self.ecfg.prefix_mode == "alora" else self.lora
+
     # ------------------------------------------------------- page moves
     def _alloc_page(self, req_id: int, now: float) -> Optional[int]:
         """One physical page for ``req_id``; None when HBM is truly full.
 
-        The pool gate runs first: if the unified pool has no free page
+        The pool gate runs first: if the unified pool has no free page,
+        idle prefix-cache pages (refcount 1, LRU) are reclaimed, then
         the adapter cache is asked to shrink (§4.1 dynamic downsizing,
-        second-tier protection for queued adapters applies). Physical
-        pages cannot run out before pool pages — the page arrays are
-        sized to the whole pool.
+        second-tier protection for queued adapters applies). Cached
+        prefixes and resident adapters are both *accounted* idle memory
+        that live requests displace on demand. Physical pages cannot
+        run out before pool pages — the page arrays are sized to the
+        whole pool.
         """
-        if not self.free_pages:
-            return None
         ps = self.pool.page_size
+        if self.pool.free_tokens < ps and self.prefix is not None:
+            self.free_pages.extend(self.prefix.evict_lru(1))
         if self.pool.free_tokens < ps and not self.cache.shrink_for_requests(
                 ps, now, self.sched.queued_adapter_ids()):
+            return None
+        if not self.free_pages:
             return None
         try:
             self.pool.reserve_request_pages(req_id, 1)
@@ -526,7 +580,20 @@ class ChameleonEngine:
     def _free_slot_pages(self, slot: int, req_id: int) -> None:
         if not self.paged:
             return
-        self.free_pages.extend(self.slot_pages[slot])
+        shared = self.slot_shared[slot]
+        if shared:
+            # Drop the slot's references; pages only return to the
+            # physical free list once the prefix tree also lets go
+            # (eviction) — the tree holds its own pool ref, so this
+            # normally frees nothing and the prefix stays resident.
+            self.free_pages.extend(self.pool.release_shared(shared))
+            self.slot_shared[slot] = []
+            shared_set = set(shared)
+            private = [p for p in self.slot_pages[slot]
+                       if p not in shared_set]
+        else:
+            private = self.slot_pages[slot]
+        self.free_pages.extend(private)
         self.slot_pages[slot] = []
         self.page_table[slot, :] = 0
         self._page_table_dirty = True
@@ -652,6 +719,8 @@ class ChameleonEngine:
         """
         if not reqs:
             return
+        if self.prefix is not None:
+            return self._place_batch_prefix(reqs)
         free = [int(s) for s in np.where(~self.active)[0]]
         if self.paged:
             # Allocate each request's prompt pages up front; a request
@@ -678,18 +747,11 @@ class ChameleonEngine:
         last_pos = np.zeros((B,), np.int32)
         lslots = np.zeros((B,), np.int32)
         for i, req in enumerate(reqs):
-            if req.prompt is not None:
-                toks[i, :req.input_len] = np.asarray(req.prompt, np.int32) \
-                    % self.cfg.vocab_size
-            else:
-                # Trace-driven workloads carry lengths, not token
-                # material: fabricate a deterministic prompt.
-                toks[i, :req.input_len] = (np.arange(req.input_len)
-                                           % self.cfg.vocab_size)
+            toks[i, :req.input_len] = self._prompt_tokens(req)
             last_pos[i] = req.input_len - 1
             lslots[i] = self.slot_of[req.adapter_id]
         logits, (k_new, v_new) = self._prefill_jit(
-            self.params, self.lora, jnp.asarray(toks),
+            self.params, self._prefill_lora(), jnp.asarray(toks),
             jnp.asarray(lslots), jnp.asarray(last_pos), S)
         if self._all_greedy(reqs):
             first_toks = np.asarray(
@@ -746,6 +808,164 @@ class ChameleonEngine:
         for i, req in enumerate(reqs):   # state rebuilds next dispatch
             if req.done or self._hit_stop(req):
                 self._finish(free[i])
+
+    def _prompt_tokens(self, req: Request) -> np.ndarray:
+        """The request's prompt token ids, vocab-folded. Trace-driven
+        workloads carry lengths, not token material: fabricate a
+        deterministic prompt (identical across re-executions and across
+        the prefix-on/off arms)."""
+        if req.prompt is not None:
+            return np.asarray(req.prompt, np.int32) % self.cfg.vocab_size
+        return (np.arange(req.input_len) % self.cfg.vocab_size) \
+            .astype(np.int32)
+
+    def _sig_of(self, req: Request) -> int:
+        """KV signature a cached page is keyed by (see EngineConfig
+        .prefix_mode): the adapter in exact mode, one shared tree in
+        aLoRA mode (prompt KV is base-model-only there)."""
+        return -1 if self.ecfg.prefix_mode == "alora" else req.adapter_id
+
+    def _place_batch_prefix(self, reqs: list[Request]) -> None:
+        """Prefix-cache admission (paged): match each prompt against
+        the radix tree, map the shared pages into the slot's page
+        table, COW-fork a mid-page divergence, then batch-prefill only
+        the suffixes via ``prefill_paged`` (hits and misses share the
+        one jit — a miss is simply start=0). Freshly computed full
+        prompt pages are adopted into the tree afterwards."""
+        now = self.now()
+        free = [int(s) for s in np.where(~self.active)[0]]
+        ps = self.pool.page_size
+        placed, slots, starts, prompts = [], [], [], []
+        for req in reqs:
+            slot = free[len(placed)]
+            toksr = self._prompt_tokens(req)
+            L = req.input_len
+            sig = self._sig_of(req)
+            # Cap the match at L-1: the last prompt position always
+            # prefills, so first-token logits are computed fresh.
+            pages, m, ppage, plen = self.prefix.match(sig, toksr, L - 1)
+            # Reference everything we plan to read *before* allocating
+            # (allocation pressure may evict refcount-1 tree pages —
+            # ours must not be candidates).
+            self.pool.share_pages(pages)
+            if ppage is not None:
+                self.pool.share_pages([ppage])
+            self.slot_req[slot] = req
+            self.slot_pages[slot] = list(pages)
+            self.slot_shared[slot] = list(pages)
+            if pages:
+                self.page_table[slot, :len(pages)] = pages
+                self._page_table_dirty = True
+            n_priv = self.pool.pages_for(L) - len(pages)
+            if not self._grow_slot(slot, n_priv, now):
+                # Bounce: undo the mapping and requeue (squash path).
+                self.free_pages.extend(self.pool.release_shared(pages))
+                if ppage is not None:
+                    self.free_pages.extend(
+                        self.pool.release_shared([ppage]))
+                self.slot_pages[slot] = []
+                self.slot_shared[slot] = []
+                self.page_table[slot, :] = 0
+                self.slot_req[slot] = None
+                self.n_preempted += 1
+                self.sched.on_squash(req, now)
+                continue
+            start = m
+            if ppage is not None:
+                # Divergence mid-page: copy the agreeing head of the
+                # cached page into the request's first private page
+                # (which the suffix prefill then extends in place).
+                dst = self.slot_pages[slot][len(pages)]
+                kp, vp = self.kv_pages
+                kp = kp.at[:, dst, :plen].set(kp[:, ppage, :plen])
+                vp = vp.at[:, dst, :plen].set(vp[:, ppage, :plen])
+                self.kv_pages = (kp, vp)
+                self.free_pages.extend(self.pool.release_shared([ppage]))
+                self.n_cow_forks += 1
+                start = m + plen
+            self.prefix_lookup_tokens += L
+            self.prefix_hit_tokens += start
+            if start:
+                self.n_prefix_hits += 1
+            placed.append(req)
+            slots.append(slot)
+            starts.append(start)
+            prompts.append(toksr)
+        if not placed:
+            return
+        S = 1 << max(3, (max(r.input_len - s for r, s in
+                             zip(placed, starts)) - 1).bit_length())
+        B = 1 << max(0, (len(placed) - 1).bit_length())
+        toks = np.zeros((B, S), np.int32)
+        start_arr = np.zeros((B,), np.int32)
+        seq_len = np.ones((B,), np.int32)    # pad rows: 1 trash token
+        lslots = np.zeros((B,), np.int32)
+        row_table = np.zeros((B, self.pages_per_slot), np.int32)
+        for i, req in enumerate(placed):
+            s, L = starts[i], req.input_len
+            toks[i, :L - s] = prompts[i][s:]
+            start_arr[i] = s
+            seq_len[i] = L - s
+            lslots[i] = self.slot_of[req.adapter_id]
+            row_table[i] = self.page_table[slots[i]]
+        logits, self.kv_pages = self._prefill_paged_jit(
+            self.params, self._prefill_lora(), jnp.asarray(toks),
+            self.kv_pages, jnp.asarray(row_table),
+            jnp.asarray(start_arr), jnp.asarray(seq_len),
+            jnp.asarray(lslots), S)
+        if self._all_greedy(placed):
+            first_toks = np.asarray(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        else:
+            first_toks = np.asarray(self._sample_jit(
+                logits, *self._sampling_arrays(placed, B, first=True)))
+        now = self.now()
+        for i, req in enumerate(placed):
+            slot = slots[i]
+            self.active[slot] = True
+            L = req.input_len
+            first = int(first_toks[i])
+            self.tokens = self.tokens.at[slot, 0].set(first)
+            self.cache_len = self.cache_len.at[slot].set(L)
+            self.adapter_slot = self.adapter_slot.at[slot].set(
+                int(lslots[i]))
+            req.generated = 1
+            rid = req.req_id
+            if req.preserved_tokens:
+                self.outputs[rid] = list(req.preserved_tokens)
+                self._tbts[rid] = list(req.preserved_tbts)
+                if req.last_stream_time is not None:
+                    self._last_tok[rid] = req.last_stream_time
+            else:
+                self.outputs[rid] = []
+                self._tbts[rid] = []
+                req.first_token_time = now
+            self._record_token(req, 0, first, now)
+            self._adopt_prompt_pages(slot, req, prompts[i])
+        self.batch_epoch += 1
+        for i, req in enumerate(placed):
+            if req.done or self._hit_stop(req):
+                self._finish(slots[i])
+
+    def _adopt_prompt_pages(self, slot: int, req: Request,
+                            toks: np.ndarray) -> None:
+        """Hand the request's fully-written prompt pages to the radix
+        tree. Accounting is a conserving transfer per adopted page:
+        the request's hold shrinks by one page, the shared ledger gains
+        it (tree ref), and the slot takes its mapping ref — the pages
+        it keeps reading are now shared, tracked in ``slot_shared``."""
+        n_full = req.input_len // self.pool.page_size
+        if n_full == 0:
+            return
+        ps = self.pool.page_size
+        pages = self.slot_pages[slot][:n_full]
+        adopted = self.prefix.insert(self._sig_of(req), toks[:n_full * ps],
+                                     pages)
+        for pid in adopted:
+            self.pool.shrink_request(req.req_id, ps)
+            self.pool.add_shared_page(pid)
+            self.pool.share_pages([pid])
+            self.slot_shared[slot].append(pid)
 
     def _hit_stop(self, req: Request) -> bool:
         """Did the latest recorded token hit a SamplingParams stop id?"""
@@ -1294,6 +1514,15 @@ class ChameleonEngine:
         self.n_cancelled = 0
         self.n_expired = 0
         self.n_async_loads = 0
+        # Prefix-cache hit accounting restarts; the cached pages stay
+        # resident (warm prefixes, like warm adapters).
+        self.prefix_hit_tokens = 0
+        self.prefix_lookup_tokens = 0
+        self.n_prefix_hits = 0
+        self.n_cow_forks = 0
+        if self.prefix is not None:
+            self.prefix.evictions = 0
+            self.prefix.inserts = 0
         self.cache.stats = CacheStats()
         for counter in ("n_bypassed", "n_squashed", "n_deferred"):
             if hasattr(self.sched, counter):
@@ -1314,6 +1543,23 @@ class ChameleonEngine:
                 "kv_page_util": used / max(1, total),
                 "preempted": self.n_preempted}
 
+    def prefix_stats(self) -> dict:
+        """Prefix-reuse gauges (empty dict when the cache is off)."""
+        if self.prefix is None:
+            return {}
+        return {
+            "prefix_hit_rate": round(
+                self.prefix_hit_tokens
+                / max(1, self.prefix_lookup_tokens), 4),
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_lookup_tokens": self.prefix_lookup_tokens,
+            "prefix_hits": self.n_prefix_hits,
+            "prefix_shared_pages": self.pool.n_shared_pages,
+            "prefix_nodes": len(self.prefix),
+            "prefix_evictions": self.prefix.evictions,
+            "cow_forks": self.n_cow_forks,
+        }
+
     def stats(self) -> dict:
         return {
             "completed": len(self.completed),
@@ -1332,6 +1578,7 @@ class ChameleonEngine:
             "fused_hotloop": self.fused,
             "batch_epoch": self.batch_epoch,
             **self.kv_page_stats(),
+            **self.prefix_stats(),
         }
 
     def metrics(self) -> RunMetrics:
@@ -1361,5 +1608,6 @@ class ChameleonEngine:
                 float(np.mean(self.batch_occupancy))
                 if self.batch_occupancy else 0.0, 3),
             **self.kv_page_stats(),
+            **self.prefix_stats(),
         }
         return m

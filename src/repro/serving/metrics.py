@@ -132,7 +132,7 @@ def merge_metrics(per_node: list[RunMetrics],
     # kv_page_util / batch_occupancy_mean are fractions of per-node
     # capacity; kv_pages_used/total and preempted counts stay additive.
     ratio_gauges = ("link_busy_frac", "pressure", "kv_page_util",
-                    "batch_occupancy_mean")
+                    "batch_occupancy_mean", "prefix_hit_rate")
     merged = RunMetrics(
         n_submitted=(n_submitted if n_submitted is not None
                      else sum(m.n_submitted for m in per_node)))

@@ -104,6 +104,44 @@ def synthesize(cfg: TraceConfig, pool: list[AdapterInfo]) -> Trace:
     return Trace(requests=reqs, config=cfg)
 
 
+def synthesize_shared_prefix(cfg: TraceConfig, pool: list[AdapterInfo],
+                             n_prefixes: int = 4, prefix_len: int = 48,
+                             suffix_min: int = 4, suffix_max: int = 16,
+                             vocab_size: int = 32000) -> Trace:
+    """Shared-prefix-heavy workload (prefix-cache A/B substrate).
+
+    Production multi-tenant traffic concentrates on a handful of system
+    prompts / few-shot preambles; this variant makes that structure
+    explicit: every request's prompt is one of ``n_prefixes`` fixed
+    preambles of ``prefix_len`` tokens (popularity power-law, like the
+    paper's adapter skew) followed by a unique random suffix. Real
+    token ids are attached (``Request.prompt``) so the engine's radix
+    tree has material to match — the plain ``synthesize`` carries
+    lengths only. Arrivals and adapter assignment follow ``cfg``
+    exactly as in ``synthesize``.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    times = _arrival_times(cfg, rng)
+    n = len(times)
+    adapters = assign_adapters(n, pool, rng, alpha=cfg.adapter_alpha)
+    _, out = _sample_lengths(cfg, n, rng)
+    prefixes = [rng.integers(0, vocab_size, size=prefix_len).tolist()
+                for _ in range(n_prefixes)]
+    pop = 1.0 / np.arange(1, n_prefixes + 1)
+    pop /= pop.sum()
+    reqs = []
+    for i in range(n):
+        pre = prefixes[int(rng.choice(n_prefixes, p=pop))]
+        suffix = rng.integers(
+            0, vocab_size,
+            size=int(rng.integers(suffix_min, suffix_max + 1))).tolist()
+        prompt = pre + suffix
+        reqs.append(Request(input_len=len(prompt), output_len=int(out[i]),
+                            adapter_id=int(adapters[i]),
+                            arrival_time=float(times[i]), prompt=prompt))
+    return Trace(requests=reqs, config=cfg)
+
+
 def downscale_for_engine(trace: Trace, n_adapters: int,
                          max_input: int, max_output: int,
                          time_scale: float = 1.0) -> Trace:

@@ -71,9 +71,12 @@ class strategies:
 st = strategies
 
 
-def settings(**_kw):
-    """Accepted and ignored (max_examples, deadline, ...)."""
+def settings(max_examples=None, **_kw):
+    """``max_examples`` is honoured (it sizes the shim's random draws);
+    everything else (deadline, ...) is accepted and ignored."""
     def deco(fn):
+        if max_examples is not None:
+            fn._shim_max_examples = max_examples
         return fn
     return deco
 
@@ -81,6 +84,8 @@ def settings(**_kw):
 def given(**strats):
     """Run the test over boundary cases + seeded random draws."""
     def deco(fn):
+        n_draws = getattr(fn, "_shim_max_examples", _FALLBACK_EXAMPLES)
+
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
             # Deterministic per-test seed: stable across runs/machines.
@@ -97,7 +102,7 @@ def given(**strats):
                     case[n] = (b[min(k, len(b) - 1)] if b
                                else strats[n].example(rng))
                 cases.append(case)
-            for _ in range(_FALLBACK_EXAMPLES):
+            for _ in range(n_draws):
                 cases.append({n: strats[n].example(rng) for n in names})
             for case in cases:
                 fn(*args, **kwargs, **case)

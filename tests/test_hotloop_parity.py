@@ -283,9 +283,14 @@ class TestHotloopSatellites:
         steps = 0
         while eng.busy() and steps < 10_000:
             eng.step()
-            eng.pool.check_invariants()
-            allocated = sum(len(p) for p in eng.slot_pages)
-            assert eng.pool.used_requests == allocated * ps
-            assert len(eng.free_pages) + allocated == total
+            eng.pool.check_invariants(free_page_ids=eng.free_pages)
+            # Prefix sharing splits a slot's pages into private (charged
+            # to the request ledger) and shared (charged once to the
+            # tree, possibly mapped by several slots).
+            shared = set(eng.pool.shared_page_ids())
+            priv = sum(1 for plist in eng.slot_pages
+                       for p in plist if p not in shared)
+            assert eng.pool.used_requests == priv * ps
+            assert len(eng.free_pages) + priv + len(shared) == total
             steps += 1
         assert eng.stats()["completed"] == len(reqs)

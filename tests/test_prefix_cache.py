@@ -1,0 +1,311 @@
+"""Cross-adapter prefix KV reuse: whole-engine token parity + unit tests.
+
+The radix prefix cache (DESIGN §2) changes *where* prompt KV comes
+from — cached pages mapped into the page table instead of re-prefilled
+— but must never change *which* tokens are produced. This suite A/Bs
+``prefix_cache=True`` against the seed placement path across
+greedy/sampled, multi-adapter traces, mid-page copy-on-write forks,
+squash-while-shared and eviction-under-pressure, mirroring
+``test_hotloop_parity.py``; plus direct radix-tree unit tests on a bare
+``MemoryPool``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import MemoryPool, PrefixCache, Request, RequestState, \
+    SamplingParams
+from repro.models import api
+from repro.serving.engine import ChameleonEngine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+BASE = dict(max_slots=4, max_len=128, n_lora_slots=4, n_adapters=8,
+            seed=0)
+
+
+def make_engine(small_model, prefix, **kw):
+    cfg, params = small_model
+    return ChameleonEngine(cfg, params, EngineConfig(
+        **{**BASE, **kw, "prefix_cache": prefix}))
+
+
+def run_prompts(eng, prompts, adapters, out_len=8, sampling=None,
+                max_steps=20_000):
+    """Submit real-token-id requests and drain with per-step invariant
+    checks (including free-list disjointness against shared pages)."""
+    handles = [eng.submit(Request(input_len=len(p), output_len=out_len,
+                                  adapter_id=a, prompt=list(p)),
+                          sampling=sampling)
+               for p, a in zip(prompts, adapters)]
+    steps = 0
+    while eng.busy() and steps < max_steps:
+        eng.step()
+        eng.pool.check_invariants(
+            free_page_ids=getattr(eng, "free_pages", None))
+        steps += 1
+    assert not eng.busy(), "engine failed to drain"
+    return [h.tokens for h in handles]
+
+
+def shared_prefix_prompts(n=8, prefix_len=40, n_prefixes=2, seed=11,
+                          vocab=256):
+    """n prompts drawn from n_prefixes fixed preambles + unique
+    suffixes — the substrate every parity test replays on both arms."""
+    rng = np.random.default_rng(seed)
+    pres = [rng.integers(3, vocab, size=prefix_len).tolist()
+            for _ in range(n_prefixes)]
+    return [pres[i % n_prefixes]
+            + rng.integers(3, vocab, size=int(rng.integers(4, 13))).tolist()
+            for i in range(n)]
+
+
+class TestPrefixParity:
+    def test_greedy_token_parity_multi_adapter(self, small_model):
+        """Prefix on == prefix off, token for token, on a multi-adapter
+        shared-prefix trace — and the on-arm actually reuses pages."""
+        prompts = shared_prefix_prompts(n=8)
+        adapters = [i % 2 for i in range(8)]   # prefix i%2 ↔ adapter i%2
+        outs = {}
+        for prefix in (False, True):
+            eng = make_engine(small_model, prefix)
+            outs[prefix] = run_prompts(eng, prompts, adapters)
+            assert eng.stats()["completed"] == len(prompts)
+            if prefix:
+                assert eng.prefix_hit_tokens > 0, "no pages were reused"
+                assert eng.stats()["prefix_hit_rate"] > 0
+        assert outs[True] == outs[False], (
+            "prefix cache changed decoded tokens")
+
+    def test_sampled_token_parity(self, small_model):
+        """Stochastic sampling is keyed on (seed, position); skipping
+        the cached prefix must not shift the sampled stream."""
+        sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9,
+                            seed=1234)
+        prompts = shared_prefix_prompts(n=6, seed=13)
+        adapters = [0] * 6
+        outs = {}
+        for prefix in (False, True):
+            eng = make_engine(small_model, prefix)
+            outs[prefix] = run_prompts(eng, prompts, adapters,
+                                       sampling=sp)
+        assert outs[True] == outs[False], (
+            "prefix cache changed sampled tokens")
+
+    def test_exact_mode_isolates_adapters(self, small_model):
+        """exact mode: same prompt under a *different* adapter must not
+        hit — LoRA touches q/k/v/o, so its KV differs."""
+        eng = make_engine(small_model, True)
+        prompts = [shared_prefix_prompts(n=1, seed=17)[0]] * 2
+        run_prompts(eng, prompts, adapters=[0, 1])
+        assert eng.prefix_hit_tokens == 0
+        # Same adapter third time around: now it hits.
+        run_prompts(eng, prompts[:1], adapters=[0])
+        assert eng.prefix_hit_tokens > 0
+
+    def test_alora_cross_adapter_sharing_and_parity(self, small_model):
+        """aLoRA mode (base-model prompt prefill): one tree serves every
+        adapter, so the same prompt under different adapters shares
+        pages — and on/off arms stay token-identical (both arms prefill
+        with the base model, so the A/B is paired)."""
+        prompts = shared_prefix_prompts(n=6, seed=19)
+        adapters = [i % 3 for i in range(6)]    # prefixes cross adapters
+        outs = {}
+        for prefix in (False, True):
+            eng = make_engine(small_model, prefix, prefix_mode="alora")
+            outs[prefix] = run_prompts(eng, prompts, adapters)
+            if prefix:
+                assert eng.prefix_hit_tokens > 0, (
+                    "alora mode should share across adapters")
+        assert outs[True] == outs[False], (
+            "alora prefix cache changed decoded tokens")
+
+    def test_cow_fork_mid_page_divergence(self, small_model):
+        """Two prompts agreeing on 24 tokens (1.5 pages): the second
+        placement must fork the half-matching page copy-on-write and
+        still decode exactly the prefix-off tokens."""
+        rng = np.random.default_rng(23)
+        base = rng.integers(3, 256, size=48).tolist()
+        prompts = [base,
+                   base[:24] + rng.integers(3, 256, size=20).tolist()]
+        outs = {}
+        for prefix in (False, True):
+            eng = make_engine(small_model, prefix)
+            # Sequential so the first request's pages are adopted
+            # before the second one matches.
+            outs[prefix] = run_prompts(eng, prompts[:1], adapters=[0]) \
+                + run_prompts(eng, prompts[1:], adapters=[0])
+            if prefix:
+                assert eng.n_cow_forks >= 1, "divergence must COW-fork"
+                assert eng.prefix_hit_tokens >= 24
+        assert outs[True] == outs[False], (
+            "COW fork changed decoded tokens")
+
+    def test_squash_while_shared(self, small_model):
+        """Preempting a slot that maps shared prefix pages must release
+        only its references (the tree keeps the pages), and the squash
+        continuation must reproduce the prefix-off tokens exactly."""
+        prompts = shared_prefix_prompts(n=2, n_prefixes=1, seed=29)
+        ref_eng = make_engine(small_model, False)
+        ref = run_prompts(ref_eng, prompts, adapters=[0, 0], out_len=40)
+
+        eng = make_engine(small_model, True)
+        # Warm the tree with the first request, then squash the second.
+        first = run_prompts(eng, prompts[:1], adapters=[0], out_len=40)
+        h = eng.submit(Request(input_len=len(prompts[1]), output_len=40,
+                               adapter_id=0, prompt=list(prompts[1])))
+        it = h.stream()
+        for _ in range(4):
+            next(it)
+        assert eng.prefix_hit_tokens > 0, "second request should hit"
+        stolen, eng.free_pages = eng.free_pages, []
+        for _ in range(40):
+            eng.step()
+            eng.pool.check_invariants(free_page_ids=eng.free_pages)
+            if eng.n_preempted:
+                break
+        assert eng.n_preempted >= 1, "steal must force a preemption"
+        eng.free_pages = stolen
+        eng.drain()
+        assert h.state is RequestState.FINISHED
+        assert first == ref[:1] and h.tokens == ref[1], (
+            "squash-while-shared diverged from the prefix-off run")
+        # Every surviving shared page is back to the tree's own ref.
+        assert all(eng.pool.shared_refcount(p) == 1
+                   for p in eng.pool.shared_page_ids())
+        assert eng.pool.used_requests == 0
+
+    def test_eviction_under_pressure(self, small_model):
+        """Distinct long prompts on a small pool: the tree must shed
+        LRU leaves to keep admission alive — every request completes
+        and pool conservation holds at every step."""
+        eng = make_engine(small_model, True, max_slots=2, max_len=64,
+                          n_lora_slots=2, n_adapters=4)
+        rng = np.random.default_rng(5)
+        n = 0
+        while eng.prefix.evictions == 0 and n < 40:
+            p = rng.integers(3, 256, size=48).tolist()
+            run_prompts(eng, [p], adapters=[n % 4], out_len=4)
+            n += 1
+        assert eng.prefix.evictions >= 1, (
+            f"no evictions after {n} distinct 48-token prompts")
+        assert eng.stats()["completed"] == n
+        eng.pool.check_invariants(free_page_ids=eng.free_pages)
+
+    def test_refcounts_return_to_one_after_drain(self, small_model):
+        """End state: no request holds, every cached page held exactly
+        once (by the tree), hit/lookup counters consistent."""
+        eng = make_engine(small_model, True)
+        prompts = shared_prefix_prompts(n=8, seed=31)
+        run_prompts(eng, prompts, adapters=[0] * 8)
+        assert eng.pool.used_requests == 0
+        shared = eng.pool.shared_page_ids()
+        assert shared, "drain should leave the tree warm"
+        assert all(eng.pool.shared_refcount(p) == 1 for p in shared)
+        assert len(eng.prefix) == len(shared)
+        s = eng.stats()
+        assert s["prefix_hit_tokens"] <= s["prefix_lookup_tokens"]
+
+    def test_dense_mode_flag_is_noop(self, small_model):
+        """prefix_cache=True on the dense slab quietly disables the
+        cache (pages are the unit of sharing) — no stats, same run."""
+        eng = make_engine(small_model, True, paged=False)
+        assert eng.prefix is None
+        run_prompts(eng, shared_prefix_prompts(n=2), adapters=[0, 0])
+        assert "prefix_hit_rate" not in eng.stats()
+
+    def test_off_flag_restores_seed_shape(self, small_model):
+        eng = make_engine(small_model, False)
+        assert eng.prefix is None and eng.pool.n_shared_pages == 0
+
+    def test_bad_prefix_mode_rejected(self, small_model):
+        cfg, params = small_model
+        with pytest.raises(ValueError, match="prefix_mode"):
+            ChameleonEngine(cfg, params, EngineConfig(
+                **BASE, prefix_mode="fuzzy"))
+
+
+class TestPrefixCacheUnit:
+    """Radix tree semantics on a bare pool — no engine, no model."""
+
+    def _cache(self, ps=4, capacity=160):
+        pool = MemoryPool(capacity, page_size=ps)
+        return pool, PrefixCache(pool, ps)
+
+    def _adopt(self, pool, cache, sig, tokens, pages):
+        adopted = cache.insert(sig, tokens, pages)
+        for pid in adopted:
+            pool.add_shared_page(pid)
+        return adopted
+
+    def test_requires_paged_pool(self):
+        pool = MemoryPool(64, page_size=1)
+        with pytest.raises(ValueError):
+            PrefixCache(pool, 1)
+
+    def test_insert_match_roundtrip_and_limit(self):
+        pool, cache = self._cache()
+        toks = list(range(12))
+        assert self._adopt(pool, cache, 0, toks, [10, 11, 12]) == \
+            [10, 11, 12]
+        pages, n, pp, pl = cache.match(0, toks + [99], limit=12)
+        assert (pages, n, pp) == ([10, 11, 12], 12, None)
+        # limit=11 stops the whole-page walk at 8 and COW-matches 3
+        # tokens into the third page.
+        pages, n, pp, pl = cache.match(0, toks, limit=11)
+        assert (pages, n, pp, pl) == ([10, 11], 8, 12, 3)
+
+    def test_lcp_partial_match_on_divergence(self):
+        pool, cache = self._cache()
+        self._adopt(pool, cache, 0, list(range(8)), [10, 11])
+        div = [0, 1, 2, 3, 4, 5, 99, 98, 97]
+        pages, n, pp, pl = cache.match(0, div, limit=len(div))
+        assert (pages, n, pp, pl) == ([10], 4, 11, 2)
+
+    def test_duplicate_keys_rejected(self):
+        """First writer wins: re-inserting the same token path adopts
+        nothing (the duplicate pages stay private to their request)."""
+        pool, cache = self._cache()
+        toks = list(range(8))
+        self._adopt(pool, cache, 0, toks, [10, 11])
+        assert cache.insert(0, toks, [20, 21]) == []
+        assert len(cache) == 2
+
+    def test_sigs_are_isolated(self):
+        pool, cache = self._cache()
+        toks = list(range(8))
+        self._adopt(pool, cache, 0, toks, [10, 11])
+        pages, n, pp, _ = cache.match(1, toks, limit=8)
+        assert (pages, n, pp) == ([], 0, None)
+        # Same path under another sig is a fresh subtree.
+        assert self._adopt(pool, cache, 1, toks, [20, 21]) == [20, 21]
+
+    def test_evict_lru_order_and_leaf_only(self):
+        pool, cache = self._cache()
+        a = list(range(0, 4))
+        b = list(range(100, 104))
+        self._adopt(pool, cache, 0, a, [10])
+        self._adopt(pool, cache, 0, b, [11])
+        cache.match(0, a, limit=4)       # touch a: b becomes LRU
+        assert cache.evict_lru(1) == [11]
+        assert cache.evict_lru(1) == [10]
+        assert len(cache) == 0 and pool.n_shared_pages == 0
+
+    def test_evict_skips_referenced_pages(self):
+        """A page some request still maps (refcount > 1) is never a
+        victim; chains unwind leaf-first once released."""
+        pool, cache = self._cache()
+        self._adopt(pool, cache, 0, list(range(8)), [10, 11])
+        pool.share_pages([11])           # a live request maps the leaf
+        assert cache.evict_lru(2) == []  # leaf pinned, parent not a leaf
+        pool.release_shared([11])
+        assert cache.evict_lru(2) == [11, 10]
+        assert cache.evictions == 2

@@ -185,6 +185,105 @@ class TestPagedPoolInvariants:
                 assert pool.request_pages(rid_) == p
             assert pool.free_pages * page_size <= pool.free_tokens
 
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["grow", "adopt", "ref", "unref",
+                                   "release", "shrink", "hold", "drop"]),
+                  st.integers(0, 4),      # req / adapter / page pick
+                  st.integers(1, 6)),     # pages (or adapter tokens x10)
+        min_size=1, max_size=200),
+        page_size=st.sampled_from([4, 8, 16]))
+    @settings(max_examples=200, deadline=None)
+    def test_shared_refcount_churn_preserves_invariants(self, ops,
+                                                        page_size):
+        """The prefix-cache ledger under random interleavings of
+        reserve/adopt(shrink→add_shared)/share/release_shared against a
+        shadow refcount model: counts agree exactly, pages free exactly
+        when the last reference drops, and the pool's own invariants
+        (conservation, page-multiples, no zero holds) never break."""
+        pool = MemoryPool(capacity_tokens=240, page_size=page_size)
+        pages_held: dict[int, int] = {}
+        refs: dict[int, int] = {}       # shadow model: page -> refcount
+        next_pid = 100
+        for op, rid, n in ops:
+            try:
+                if op == "grow":
+                    pool.reserve_request_pages(rid, n)
+                    pages_held[rid] = pages_held.get(rid, 0) + n
+                elif op == "adopt" and pages_held.get(rid, 0) > 0:
+                    # The engine's adoption transaction: a full page
+                    # moves from the request ledger to the shared one.
+                    pool.shrink_request(rid, page_size)
+                    pid, next_pid = next_pid, next_pid + 1
+                    pool.add_shared_page(pid)
+                    refs[pid] = 1
+                    pages_held[rid] -= 1
+                    if pages_held[rid] == 0:
+                        del pages_held[rid]
+                elif op == "ref" and refs:
+                    pid = sorted(refs)[rid % len(refs)]
+                    pool.share_pages([pid])
+                    refs[pid] += 1
+                elif op == "unref" and refs:
+                    pid = sorted(refs)[rid % len(refs)]
+                    freed = pool.release_shared([pid])
+                    refs[pid] -= 1
+                    if refs[pid] == 0:
+                        assert freed == [pid], (
+                            "last release must free the page")
+                        del refs[pid]
+                    else:
+                        assert freed == []
+                elif op == "release":
+                    pool.release_request(rid)
+                    pages_held.pop(rid, None)
+                elif op == "shrink":
+                    give = min(n, pages_held.get(rid, 0))
+                    pool.shrink_request(rid, give * page_size)
+                    if pages_held.get(rid) is not None:
+                        pages_held[rid] -= give
+                        if pages_held[rid] == 0:
+                            del pages_held[rid]
+                elif op == "hold":
+                    pool.hold_adapter(rid, n * 10)
+                elif op == "drop":
+                    pool.drop_adapter(rid)
+            except Exception:
+                pass        # PoolError is legal when over-committed
+            pool.check_invariants()
+            assert pool.used_requests == \
+                sum(pages_held.values()) * page_size
+            assert pool.used_shared == len(refs) * page_size
+            assert pool.shared_page_ids() == set(refs)
+            for pid, c in refs.items():
+                assert pool.shared_refcount(pid) == c
+
+    def test_shrink_boundaries(self):
+        """shrink_request edges: non-multiples and over-shrinks raise
+        without drifting the ledger, shrink-to-zero pops the hold, and
+        a zero-token reserve never creates a phantom entry."""
+        from repro.core import PoolError
+        import pytest as _pytest
+        pool = MemoryPool(capacity_tokens=64, page_size=8)
+        pool.reserve_request_pages(1, 3)
+        free0 = pool.free_tokens
+        with _pytest.raises(PoolError):
+            pool.shrink_request(1, 5)       # not a page multiple
+        with _pytest.raises(PoolError):
+            pool.shrink_request(1, 32)      # exceeds the 24-token hold
+        with _pytest.raises(PoolError):
+            pool.shrink_request(1, -8)
+        assert pool.free_tokens == free0 and pool.request_pages(1) == 3
+        pool.shrink_request(1, 8)
+        assert pool.request_pages(1) == 2
+        pool.shrink_request(1, 16)          # exactly to zero
+        assert pool.request_pages(1) == 0
+        assert pool.used_requests == 0 and pool.free_tokens == 64
+        pool.reserve_request_pages(2, 0)    # zero-token reserve: no-op
+        pool.reserve_request(3, 0)
+        pool.check_invariants()             # asserts no zero-token holds
+        assert pool.release_request(2) == 0
+        assert pool.free_tokens == 64
+
     def test_non_page_multiple_hold_rejected(self):
         from repro.core import PoolError
         import pytest as _pytest
