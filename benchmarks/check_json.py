@@ -33,6 +33,9 @@ REQUIRED_VALIDATED = {
     "fig10_latency_load_prefix_ab": {
         "all_completed", "tokens_identical", "prefix_hit_rate",
         "prefix_reduces_p99_ttft"},
+    "fig17_scalability_sharded_engine": {
+        "all_completed", "tokens_identical", "mesh_shape", "n_devices",
+        "throughput_ratio_mesh_over_single", "collective_frac"},
 }
 
 

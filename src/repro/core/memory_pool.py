@@ -44,6 +44,7 @@ class PoolError(RuntimeError):
 class MemoryPool:
     capacity_tokens: int
     page_size: int = 1                # tokens per KV page (1 = dense mode)
+    n_shards: int = 1                 # devices the physical plane spans
     used_requests: int = 0
     used_adapters: int = 0
     used_shared: int = 0              # refcounted prefix-cache pages
@@ -65,6 +66,21 @@ class MemoryPool:
     def request_headroom(self) -> int:
         """Tokens available to requests without evicting any adapter."""
         return self.free_tokens
+
+    # Per-shard view ----------------------------------------------------
+    # When the KV plane is mesh-sharded, each device physically holds
+    # capacity/n_shards tokens ("Serving Heterogeneous LoRA Adapters":
+    # size the memory plane per device, not per host). The *accounting*
+    # stays global — pages are a logical currency and the control plane
+    # must make identical decisions at every mesh shape for token
+    # parity — so these are telemetry, not gates.
+    @property
+    def per_shard_capacity_tokens(self) -> int:
+        return self.capacity_tokens // self.n_shards
+
+    @property
+    def per_shard_free_tokens(self) -> int:
+        return self.free_tokens // self.n_shards
 
     # Pages -------------------------------------------------------------
     def pages_for(self, tokens: int) -> int:
@@ -247,6 +263,10 @@ class MemoryPool:
             snap["pages_free"] = self.free_pages
             snap["shared"] = self.used_shared
             snap["pages_shared"] = self.n_shared_pages
+        if self.n_shards > 1:
+            snap["n_shards"] = self.n_shards
+            snap["per_shard_capacity"] = self.per_shard_capacity_tokens
+            snap["per_shard_free"] = self.per_shard_free_tokens
         return snap
 
 

@@ -21,6 +21,7 @@ _MODEL_SIZE: int = 1
 _SEQ_SHARD: bool = False
 _MOE_TOKEN_PARALLEL: bool = False
 _MESH = None
+_EXACT: bool = False
 
 
 @contextlib.contextmanager
@@ -28,27 +29,35 @@ def activation_sharding(batch_axes: tuple, model_axis: str = "model",
                         expert_axis: str = "data", model_size: int = 1,
                         seq_shard_boundary: bool = False,
                         moe_token_parallel: bool = False,
-                        mesh=None):
+                        mesh=None, exact_reductions: bool = False):
     """``seq_shard_boundary``: shard the inter-layer residual stream's
     sequence dim over the model axis (Megatron-style sequence
     parallelism). This is what bounds remat memory: the saved per-layer
     carries shrink by the TP degree (25 GB -> 1.6 GB per chip for a
     14B model at 64k tokens/chip); XLA re-gathers S where attention/MLP
-    need it."""
+    need it.
+
+    ``exact_reductions`` (the serving engine's mode): constrain
+    activations so no einsum ever contracts over a sharded dim —
+    FFN hidden and merged attention heads are gathered *before* their
+    down/out projections instead of row-parallel psum'd after. Every
+    FP reduction then keeps the single-device order, making sharded
+    inference token-identical to mesh=1 (DESIGN §4)."""
     global _BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS, _MODEL_SIZE, \
-        _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH
+        _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH, _EXACT
     prev = (_BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS, _MODEL_SIZE,
-            _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH)
+            _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH, _EXACT)
     _BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS = (batch_axes, model_axis,
                                               expert_axis)
     _MODEL_SIZE, _SEQ_SHARD = model_size, seq_shard_boundary
     _MOE_TOKEN_PARALLEL = moe_token_parallel
     _MESH = mesh
+    _EXACT = exact_reductions
     try:
         yield
     finally:
         (_BATCH_AXES, _MODEL_AXIS, _EXPERT_AXIS, _MODEL_SIZE,
-         _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH) = prev
+         _SEQ_SHARD, _MOE_TOKEN_PARALLEL, _MESH, _EXACT) = prev
 
 
 def moe_a2a_mesh():
@@ -62,6 +71,17 @@ def moe_a2a_mesh():
 def _wsc(x, spec):
     if _BATCH_AXES is None:
         return x
+    if _MESH is not None:
+        # Mesh installed explicitly (the serving engine does not run
+        # its jits under a ``with mesh:`` scope): resolve the raw spec
+        # to a NamedSharding, fitted to this value's shape so uneven
+        # dims (a B=1 prefill bucket on a 2-way data axis) degrade to
+        # replicated instead of erroring.
+        from jax.sharding import NamedSharding
+        from repro.distributed.sharding import fit_spec
+        fitted = fit_spec(x.shape, spec, _MESH)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(_MESH, fitted))
     return jax.lax.with_sharding_constraint(x, spec)
 
 
@@ -85,8 +105,60 @@ def constrain_bd(x):
 
 
 def constrain_logits(x):
-    """(B, S, V): batch over data, vocab over model."""
+    """(B, S, V) or (B, V) logits: batch over data, vocab over model.
+
+    Exact mode gathers the vocab dim instead: sampling consumes these
+    (sort / cumsum / top-k over V), and a model-sharded vocab turns
+    those into distributed scans with a different FP order than
+    single-device — the unembed einsum still runs column-parallel, the
+    all-gather after it is elementwise."""
+    v = None if _EXACT else _MODEL_AXIS
+    if x.ndim == 2:
+        return _wsc(x, P(_BATCH_AXES, v))
+    return _wsc(x, P(_BATCH_AXES, None, v))
+
+
+def constrain_heads(x):
+    """Attention head tensors — (B, S, H, D) q/k/v or (B, S, Kh, G, D)
+    grouped query: heads over the model axis (the serving fused scan
+    otherwise replicates the per-head compute, DESIGN §4)."""
+    if x.ndim == 4:
+        return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS, None))
+    if x.ndim == 5:
+        return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS, None, None))
+    return x
+
+
+def constrain_ffn_hidden(x):
+    """(B, S, F) MLP hidden: F over model — matches the gate/up column
+    sharding so SwiGLU runs fully sharded until the down projection.
+    Exact mode gathers F here instead, so the down projection contracts
+    an unsharded dim in single-device FP order (no psum of partials)."""
+    if _EXACT:
+        return _wsc(x, P(_BATCH_AXES, None, None))
     return _wsc(x, P(_BATCH_AXES, None, _MODEL_AXIS))
+
+
+def constrain_attn_merged(x):
+    """(B, S, q_dim) attention output after heads merge, feeding the o
+    projection. Exact mode only: gather the head shards so the o-proj
+    contraction runs unsharded (see ``exact_reductions``); otherwise a
+    no-op — training relies on GSPMD propagation (row-parallel o)."""
+    if _EXACT:
+        return _wsc(x, P(_BATCH_AXES, None, None))
+    return x
+
+
+def constrain_residual(x):
+    """(B, S, D) residual stream *mid-layer* (between the attention
+    residual and the MLP norm). Exact mode only: the column-parallel
+    o projection leaves D model-sharded, and the next rms_norm would
+    psum its mean-square over the shards — a different FP reduction
+    order per mesh shape. Gathering here keeps every norm reduction in
+    single-device order; outside exact mode propagation stands."""
+    if _EXACT:
+        return _wsc(x, P(_BATCH_AXES, None, None))
+    return x
 
 
 def constrain_ssm_channels(x):

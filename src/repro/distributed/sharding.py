@@ -18,6 +18,7 @@ axes since the weight all-gather amortises over a 4096-token step.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -37,16 +38,27 @@ def _axis_size(mesh: Mesh, name: str) -> int:
     return mesh.shape[name]
 
 
-def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
+# Weight tensors silently degrading to replicated (a 40-head model on a
+# 16-way "model" axis, say) used to be invisible; warn once per
+# (label, shape, spec) so a misfit shows up in logs without spamming a
+# per-step path. Batch/state fits (B=1 buckets legitimately drop
+# "data") stay silent — only callers that pass ``warn_label`` opt in.
+_FIT_WARNED: set = set()
+
+
+def fit_spec(shape: tuple, spec: P, mesh: Mesh, *,
+             warn_label: str | None = None) -> P:
     """Drop axes that do not divide their dimension.
 
     pjit *input* shardings require exact divisibility (GSPMD padding
     only applies inside the computation), so every spec passes through
     this fitter. Tuples are trimmed left-to-right: ("pod","data") on a
-    dim of size 2 keeps ("pod",).
+    dim of size 2 keeps ("pod",). With ``warn_label`` set, each axis
+    dropped from that tensor warns once via ``warnings.warn``.
     """
     entries = list(spec) + [None] * (len(shape) - len(spec))
     out = []
+    dropped = []
     for dim, entry in zip(shape, entries):
         if entry is None:
             out.append(None)
@@ -59,6 +71,8 @@ def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
             if dim % (prod * sz) == 0:
                 kept.append(a)
                 prod *= sz
+            else:
+                dropped.append((a, dim, sz))
         if not kept:
             out.append(None)
         elif isinstance(entry, tuple) and len(axes) > 1:
@@ -70,6 +84,16 @@ def fit_spec(shape: tuple, spec: P, mesh: Mesh) -> P:
             out.append(kept[0])
     while out and out[-1] is None:
         out.pop()
+    if dropped and warn_label is not None:
+        key = (warn_label, tuple(shape), str(spec))
+        if key not in _FIT_WARNED:
+            _FIT_WARNED.add(key)
+            detail = ", ".join(
+                f"'{a}' (size {sz}) on dim {dim}" for a, dim, sz in dropped)
+            warnings.warn(
+                f"fit_spec[{warn_label}]: shape {tuple(shape)} spec "
+                f"{spec} drops non-dividing mesh axes: {detail}; the "
+                f"dimension stays replicated", stacklevel=2)
     return P(*out)
 
 
@@ -126,6 +150,8 @@ def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh: Mesh,
         if leaf in ("shared_gate", "shared_up"):  # (nm, D, F)
             return sp(L, fsdp if fsdp else None, model)
         if leaf == "shared_down":                # (nm, F, D)
+            if not train:
+                return sp(L)                # replicated: see "down"
             return sp(L, model, fsdp if fsdp else None)
 
     # ---- attention ---------------------------------------------------------
@@ -136,6 +162,14 @@ def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh: Mesh,
         return sp(*( [L] if stacked else [] ),
                   fsdp if fsdp else None, model)
     if leaf == "o":                              # (..., q_dim, D)
+        if not train:
+            # Inference: column-parallel (output D over model). Row-
+            # parallel would shard the contraction and psum partials —
+            # a different FP reduction order per mesh shape. Keeping
+            # every contraction dim unsharded makes sharded inference
+            # bit-identical to single-device (token parity, DESIGN §4)
+            # at the cost of the pre-projection head all-gather.
+            return sp(*( [L] if stacked else [] ), None, model)
         return sp(*( [L] if stacked else [] ),
                   model, fsdp if fsdp else None)
     if leaf.endswith("_bias"):
@@ -148,6 +182,15 @@ def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh: Mesh,
         return sp(*( [L] if stacked else [] ),
                   fsdp if fsdp else None, model)
     if leaf == "down":                           # (..., F, D)
+        if not train:
+            # Inference keeps the down projection *replicated*, not
+            # column-parallel: with the long F contraction, XLA's local
+            # matmul blocks differently at width D/tp than at width D
+            # (observed 3e-5 drift on CPU at K=256), so even an
+            # unsharded-contraction split breaks bit-exact token parity.
+            # Replicated weights make the local matmul shape identical
+            # to single-device — deterministic by construction.
+            return sp(*( [L] if stacked else [] ))
         return sp(*( [L] if stacked else [] ),
                   model, fsdp if fsdp else None)
 
@@ -155,6 +198,8 @@ def param_spec(path: str, shape: tuple, cfg: ModelConfig, mesh: Mesh,
     if leaf == "in_proj":                        # (L, D, E*)
         return sp(L, fsdp if fsdp else None, model)
     if leaf == "out_proj":                       # (L, Di, D)
+        if not train:
+            return sp(L, None, model)       # column-parallel: see "o"
         return sp(L, model, fsdp if fsdp else None)
     if leaf in ("conv_w",):                      # (L, K, conv_dim)
         return sp(L, None, model)
@@ -181,7 +226,7 @@ def param_shardings(cfg: ModelConfig, params_or_shapes: dict, mesh: Mesh,
     for path, v in params_or_shapes.items():
         shape = v if isinstance(v, tuple) else v.shape
         spec = fit_spec(shape, param_spec(path, shape, cfg, mesh, kind),
-                        mesh)
+                        mesh, warn_label=path)
         out[path] = NamedSharding(mesh, spec)
     return out
 
@@ -213,6 +258,19 @@ def kv_cache_spec(mesh: Mesh, shape: tuple) -> P:
     return fit_spec(shape, spec, mesh)
 
 
+def kv_pages_spec(mesh: Mesh, shape: tuple) -> P:
+    """Paged KV pool (L, n_pages, page, Kh, Dh): the *page* axis shards
+    over "data" (each device owns n_pages/d physical pages — per-device
+    HBM sizing, DESIGN §4), kv heads over "model" when divisible. The
+    host-side page table stays global: page indices address the logical
+    pool and GSPMD routes the gather."""
+    pod, data, model = _axes(mesh)
+    L, n_pages, page, Kh, Dh = shape
+    tp = _axis_size(mesh, model)
+    head = model if Kh % tp == 0 else None
+    return fit_spec(shape, P(None, pod + (data,), None, head), mesh)
+
+
 def ssm_state_spec(mesh: Mesh, shape: tuple) -> P:
     """(L, B, Di, N): batch over data, d_inner over model."""
     pod, data, model = _axes(mesh)
@@ -232,6 +290,8 @@ def lora_spec(proj: str, which: str, mesh: Mesh) -> P:
     pod, data, model = _axes(mesh)
     if which == "a":
         return P(None, None, None, None)
-    if proj == "o":
-        return P(None, None, None, None)   # o-delta output is D (fsdp-free)
+    # Projection output dims are model-sharded at inference (q/k/v over
+    # heads, o column-parallel); the down projection's output is
+    # replicated, but its LoRA delta contracts only over r (a single
+    # K-block), so a sharded B adds without a reduction-order change.
     return P(None, None, None, model)

@@ -77,6 +77,36 @@ class DispatchMeter:
 DISPATCH_METER = DispatchMeter()
 
 
+class CollectiveMeter(DispatchMeter):
+    """DISPATCH_METER-style probe for the sharded data plane.
+
+    A mesh>1 engine ticks this once per sharded dispatch and wraps the
+    blocking completion of that dispatch in ``sync()`` — on a sharded
+    program the dominant cost of that wait beyond single-device compute
+    is the GSPMD collectives (psum after row-parallel matmuls, page
+    all-gathers), so ``frac()`` reports the collective/wall time
+    fraction the per-device gauges in ``serving/metrics.py`` export.
+    ``reset()`` also restarts the wall clock the fraction is taken
+    over.
+    """
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._t0 = time.perf_counter()
+
+    def reset(self) -> None:
+        super().reset()
+        self._t0 = time.perf_counter()
+
+    def frac(self) -> float:
+        wall = time.perf_counter() - self._t0
+        return (self.sync_seconds / wall) if wall > 0 else 0.0
+
+
+#: Process-wide probe for sharded (mesh>1) engine dispatches.
+COLLECTIVE_METER = CollectiveMeter()
+
+
 def resolve_lora_backend(backend: str | None) -> str:
     """Resolve a ``EngineConfig.lora_backend`` knob to a concrete path.
 

@@ -18,3 +18,30 @@ def make_host_mesh():
     """Whatever this host actually has (tests / examples)."""
     n = len(jax.devices())
     return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def make_serving_mesh(n_devices: int, model_parallel: int = 1):
+    """The serving data plane's ("data", "model") mesh.
+
+    ``EngineConfig.mesh_shape = (d, m)`` resolves through here (the
+    single factory — the engine never calls jax.make_mesh itself):
+    d*m devices, batch/KV-pages over "data", weights/LoRA-slot dout
+    over "model". CPU CI gets its devices from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    if n_devices < 1 or model_parallel < 1:
+        raise ValueError(
+            f"mesh shape must be positive, got n_devices={n_devices} "
+            f"model_parallel={model_parallel}")
+    if n_devices % model_parallel != 0:
+        raise ValueError(
+            f"model_parallel={model_parallel} must divide "
+            f"n_devices={n_devices}")
+    avail = len(jax.devices())
+    if n_devices > avail:
+        raise ValueError(
+            f"mesh wants {n_devices} devices but only {avail} are "
+            f"available (CPU CI: set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n_devices})")
+    return jax.make_mesh((n_devices // model_parallel, model_parallel),
+                         ("data", "model"))

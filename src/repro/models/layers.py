@@ -10,6 +10,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.act_sharding import constrain_ffn_hidden, \
+    constrain_heads
+
 NEG_INF = -1e30
 
 
@@ -122,7 +125,9 @@ def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     B, Sq, H, D = q.shape
     Kh = k.shape[2]
     G = H // Kh
-    qg = q.reshape(B, Sq, Kh, G, D)
+    qg = constrain_heads(q.reshape(B, Sq, Kh, G, D))
+    k = constrain_heads(k)
+    v = constrain_heads(v)
     scale = D ** -0.5
     if Sq < Q_CHUNK_THRESHOLD or Sq % Q_CHUNK != 0:
         out = _attn_block(qg, k, v, q_offset, kv_len, causal, scale)
@@ -165,7 +170,9 @@ def suffix_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     B, S, H, D = q.shape
     Kh = k.shape[2]
     G = H // Kh
-    qg = q.reshape(B, S, Kh, G, D)
+    qg = constrain_heads(q.reshape(B, S, Kh, G, D))
+    k = constrain_heads(k)
+    v = constrain_heads(v)
     scale = D ** -0.5
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
                         preferred_element_type=jnp.float32) * scale
@@ -193,7 +200,8 @@ def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
            w_down: jax.Array) -> jax.Array:
     g = jnp.einsum("bsd,df->bsf", x, w_gate)
     u = jnp.einsum("bsd,df->bsf", x, w_up)
-    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down)
+    h = constrain_ffn_hidden(jax.nn.silu(g) * u)
+    return jnp.einsum("bsf,fd->bsd", h, w_down)
 
 
 def gelu_mlp(x: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:

@@ -29,8 +29,11 @@ from .layers import (apply_rope, cross_entropy, decode_attention, embed,
                      gelu_mlp, rms_norm, rope_cos_sin, suffix_attention,
                      swiglu, unembed)
 from .lora_apply import lora_delta
-from repro.distributed.act_sharding import (constrain_btd, constrain_boundary,
+from repro.distributed.act_sharding import (constrain_attn_merged,
+                                            constrain_btd,
+                                            constrain_boundary,
                                             constrain_logits,
+                                            constrain_residual,
                                             constrain_expert_ecd)
 from .moe import moe_block, moe_block_gather
 
@@ -105,11 +108,12 @@ def _o_proj(cfg: ModelConfig, x: jax.Array, out: jax.Array, p: dict,
             lora=None, adapter_idx=None, prefix: str = "",
             lora_backend: str = "einsum") -> jax.Array:
     """Output projection + LoRA + residual. out: (B, S, q_dim)."""
+    out = constrain_attn_merged(out)
     o = jnp.einsum("bse,ed->bsd", out, p[prefix + "o"])
     if lora is not None and "o" in lora:
         o = o + lora_delta(out, lora["o"], adapter_idx,
                            backend=lora_backend)
-    return x + o
+    return constrain_residual(x + o)
 
 
 def _attn(cfg: ModelConfig, x: jax.Array, p: dict, cos, sin,
@@ -545,7 +549,7 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
     ``lora_backend="kernel"`` routes the LoRA deltas through the Pallas
     sgmv kernel (each request's row is one contiguous token run).
     """
-    x = embed(tokens, params["embed/tok"])
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
     cos, sin = _positions(cfg, tokens.shape, 0, mrope_pos)
     h, kv, _ = _backbone(cfg, params, x, cos, sin, lora=lora,
                          adapter_idx=adapter_idx, collect_kv=True,
@@ -558,7 +562,7 @@ def prefill(cfg: ModelConfig, params: dict, tokens: jax.Array,
     h_last = rms_norm(h_last, params["final_norm"], cfg.norm_eps)
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
-    return unembed(h_last, table)[:, 0], kv
+    return constrain_logits(unembed(h_last, table)[:, 0]), kv
 
 
 def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
@@ -572,7 +576,7 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
     ``lora_backend="kernel"`` routes the per-token LoRA deltas through
     the Pallas bgmv kernel.
     """
-    x = embed(tokens, params["embed/tok"])
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
     if cfg.mrope:
         cos, sin = _positions(cfg, tokens.shape, cache_len, mrope_pos)
     else:
@@ -584,7 +588,7 @@ def decode_step(cfg: ModelConfig, params: dict, tokens: jax.Array,
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
-    return unembed(h, table)[:, 0], kv
+    return constrain_logits(unembed(h, table)[:, 0]), kv
 
 
 def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
@@ -602,7 +606,7 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     table instead of a dense (B, max_len) slab, so HBM holds exactly the
     pages requests allocated (DESIGN §2).
     """
-    x = embed(tokens, params["embed/tok"])
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
     cos, sin = _positions(cfg, tokens.shape, cache_len, None)
     k_pages, v_pages = kv_pages
     page = k_pages.shape[2]
@@ -630,7 +634,7 @@ def decode_step_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
-    return unembed(h, table)[:, 0], (k_out, v_out)
+    return constrain_logits(unembed(h, table)[:, 0]), (k_out, v_out)
 
 
 def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
@@ -660,7 +664,7 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     serves hits and misses.
     """
     B, S = tokens.shape
-    x = embed(tokens, params["embed/tok"])
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
     cos, sin = _positions(cfg, tokens.shape, start, None)
     k_pages, v_pages = kv_pages
     page = k_pages.shape[2]
@@ -700,4 +704,4 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     h_last = rms_norm(h_last, params["final_norm"], cfg.norm_eps)
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
-    return unembed(h_last, table)[:, 0], (k_out, v_out)
+    return constrain_logits(unembed(h_last, table)[:, 0]), (k_out, v_out)

@@ -81,10 +81,22 @@ def random_lora_weights(key, rank: int, r_max: int, n_layers: int,
     return out
 
 
-def write_adapter_to_slot(slots: dict, adapter: dict, slot: int) -> dict:
-    """Functional slot update (engine: cache-fill on load)."""
+def write_adapter_to_slot(slots: dict, adapter: dict, slot: int,
+                          shardings: dict | None = None) -> dict:
+    """Functional slot update (engine: cache-fill on load).
+
+    ``shardings`` ({proj: (A_sharding, B_sharding)}, per-adapter-weight
+    layout): commit the host weights to the sharded slot layout *before*
+    the slot write, so each device of a mesh engine receives only its
+    slice of the LoRA-B tensor — the upload path never materialises the
+    full weight on every device.
+    """
     out = {}
     for name, (a_s, b_s) in slots.items():
         a_w, b_w = adapter[name]
+        if shardings is not None:
+            sh_a, sh_b = shardings[name]
+            a_w = jax.device_put(a_w, sh_a)
+            b_w = jax.device_put(b_w, sh_b)
         out[name] = (a_s.at[:, slot].set(a_w), b_s.at[:, slot].set(b_w))
     return out

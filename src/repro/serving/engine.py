@@ -79,6 +79,7 @@ state, never in adapter bytes.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 from dataclasses import dataclass
 from typing import Callable, Optional
@@ -86,19 +87,24 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import (AdapterCache, AdapterInfo, CacheStats,
                         ChameleonScheduler, HistogramPrefetcher,
                         MemoryPool, NoisyOraclePredictor, PoolError,
                         PrefixCache, QueuedRequestPrefetcher, Request,
                         RequestState, SamplingParams)
-from repro.kernels.ops import DISPATCH_METER, resolve_lora_backend
+from repro.distributed.act_sharding import activation_sharding
+from repro.kernels.ops import (COLLECTIVE_METER, DISPATCH_METER,
+                               resolve_lora_backend)
+from repro.launch.mesh import make_serving_mesh
 from repro.models import api
 from repro.models.base import ModelConfig
 from repro.models.lora_apply import (init_lora_slots, random_lora_weights,
                                      write_adapter_to_slot)
 from repro.serving.handles import RequestHandle, prepare_request
 from repro.serving.metrics import RequestRecord, RunMetrics
+from repro.serving.shard_plan import ShardPlan
 
 
 @dataclass
@@ -170,6 +176,17 @@ class EngineConfig:
     #   adapter (true cross-adapter reuse). Changes prefill semantics
     #   for *all* requests (cache on or off) so the A/B stays paired.
     prefix_mode: str = "exact"
+    # Mesh-sharded data plane (DESIGN §4): (data, model) shape of the
+    # ("data", "model") serving mesh one engine spans — resolved through
+    # ``launch.make_serving_mesh``, the single mesh factory. Weights and
+    # LoRA-slot dout shard over "model"; KV pages, dense KV batch and
+    # all per-request batch state over "data"; every jit'd entry point
+    # gets explicit in/out shardings from the ``sharding.py`` rule
+    # table. None = single-device (bit-for-bit the seed path). The
+    # control plane (pool, scheduler, page tables) stays host-side and
+    # global, so a mesh>1 engine is token-identical to mesh=1 — the
+    # parity lock ``tests/test_sharded_engine.py`` asserts.
+    mesh_shape: Optional[tuple] = None
 
 
 class AdapterCatalog:
@@ -226,6 +243,20 @@ class ChameleonEngine:
         e = self.ecfg
         key = jax.random.PRNGKey(e.seed)
 
+        # --- serving mesh (DESIGN §4): one engine across N devices ---
+        self.mesh = None
+        self.plan: Optional[ShardPlan] = None
+        self._collective = False      # mesh>1: COLLECTIVE_METER armed
+        if e.mesh_shape is not None:
+            d, m = e.mesh_shape
+            self.mesh = make_serving_mesh(d * m, m)
+            self.plan = ShardPlan(self.mesh, cfg)
+            # Weights land sharded over "model" once, up front —
+            # resident, never re-gathered per step.
+            self._params_sh = self.plan.params(params)
+            self.params = params = jax.device_put(params, self._params_sh)
+            self._collective = self.mesh.size > 1
+
         # --- LoRA adapter catalog (host-side weights = "host memory") ---
         self.catalog = catalog or AdapterCatalog(cfg, e.n_adapters,
                                                  e.r_max, seed=e.seed)
@@ -234,6 +265,19 @@ class ChameleonEngine:
         self.lora = init_lora_slots(key, e.n_lora_slots, cfg.n_layers,
                                     cfg.d_model, cfg.q_dim, cfg.kv_dim,
                                     self.catalog.r_max)
+        # Sharded slot arena: A replicated, B dout over "model" (the
+        # LoRA delta adds to the sharded projection output without a
+        # reshard — S-LoRA's TP partition strategy). Host adapter
+        # weights upload *directly into this layout*: each device
+        # receives only its dout slice of B, never the full tensor.
+        self._lora_sh = None
+        self._adapter_w_sh = None
+        if self.plan is not None:
+            self._lora_sh = self.plan.lora_slots(self.lora)
+            self.lora = jax.device_put(self.lora, self._lora_sh)
+            if self.host_adapters:
+                self._adapter_w_sh = self.plan.adapter_weights(
+                    next(iter(self.host_adapters.values())))
         self.slot_of: dict[int, int] = {}       # adapter_id -> lora slot
         self.free_slots = list(range(e.n_lora_slots))
         # Double-buffered async loads: slot writes land in the
@@ -256,8 +300,13 @@ class ChameleonEngine:
         cap = e.max_slots * e.max_len \
             + 4 * max(c.size_tokens for c in infos.values())
         self.paged = bool(e.paged) and api.supports_paged(cfg)
+        # Per-device sizing is telemetry (n_shards); the *accounting*
+        # stays global so admission/eviction decisions — and therefore
+        # emitted tokens — are identical at every mesh shape.
         self.pool = MemoryPool(capacity_tokens=cap,
-                               page_size=e.page_size if self.paged else 1)
+                               page_size=e.page_size if self.paged else 1,
+                               n_shards=(self.mesh.size
+                                         if self.mesh is not None else 1))
         self.cache = AdapterCache(self.pool, infos,
                                   enabled=cache_enabled,
                                   on_load=self._load_adapter,
@@ -289,9 +338,22 @@ class ChameleonEngine:
             # (page 0). Sizing pages to the *whole* pool is the unified
             # paging: KV can spread into memory adapters are not using.
             self.n_pages = cap // ps + 1
+            if self.mesh is not None:
+                # Round physical pages up to the data-axis size so the
+                # page axis shards evenly. The pool still caps
+                # allocation at the unrounded capacity and pages pop
+                # off the free list in the same 1, 2, 3… order, so the
+                # extra pages are never allocated — control-plane
+                # decisions (hence tokens) stay mesh-invariant.
+                ds = self.mesh.shape["data"]
+                self.n_pages = -(-self.n_pages // ds) * ds
             self.pages_per_slot = -(-e.max_len // ps)
             self.kv_pages = api.init_paged_serve_state(
                 cfg, self.n_pages, ps, jnp.float32)
+            if self.plan is not None:
+                kvp = self.plan.kv_pages(self.kv_pages[0].shape)
+                self._kv_sh = (kvp, kvp)
+                self.kv_pages = jax.device_put(self.kv_pages, self._kv_sh)
             self.page_table = np.zeros(
                 (e.max_slots, self.pages_per_slot), np.int32)
             self.slot_pages: list[list[int]] = [[] for _ in
@@ -301,6 +363,10 @@ class ChameleonEngine:
         else:
             self.kv = api.init_serve_state(cfg, e.max_slots, e.max_len,
                                            jnp.float32)
+            if self.plan is not None:
+                kvd = self.plan.kv_dense(self.kv[0].shape)
+                self._kv_sh = (kvd, kvd)
+                self.kv = jax.device_put(self.kv, self._kv_sh)
         # --- prefix KV reuse (radix tree over the paged pool) ---
         if e.prefix_mode not in ("exact", "alora"):
             raise ValueError(f"unknown prefix_mode {e.prefix_mode!r}")
@@ -319,6 +385,18 @@ class ChameleonEngine:
         self.cache_len = jnp.zeros((e.max_slots,), jnp.int32)
         self.active = np.zeros((e.max_slots,), bool)
         self.adapter_slot = jnp.zeros((e.max_slots,), jnp.int32)
+        if self.plan is not None:
+            # Batch state over "data". ``_batch_sh(ndim)`` reuses the
+            # fitted row spec so a max_slots that doesn't divide the
+            # data axis degrades to replicated everywhere consistently.
+            row = self.plan.batch((e.max_slots,))
+            ax = row.spec[0] if len(row.spec) else None
+            self._batch_ax = ax
+            self.tokens = self.plan.put(self.tokens, self._batch_sh(2))
+            self.cache_len = self.plan.put(self.cache_len,
+                                           self._batch_sh(1))
+            self.adapter_slot = self.plan.put(self.adapter_slot,
+                                              self._batch_sh(1))
         self.slot_req: list[Optional[Request]] = [None] * e.max_slots
         self.t0 = time.monotonic()
         self._clock = clock
@@ -379,6 +457,174 @@ class ChameleonEngine:
                                           static_argnames=("S",),
                                           donate_argnums=(3,))
         self._sample_jit = jax.jit(api.sample_tokens)
+        # Prefill shapes vary per (B, S) admission bucket, so their
+        # sharded jits (fitted in/out shardings per bucket) are built
+        # lazily; the fixed-shape decode/fused jits above are replaced
+        # with explicitly-sharded versions here.
+        self._sharded_prefill_cache: dict = {}
+        if self.plan is not None:
+            self._install_sharded_jits()
+
+    # --------------------------------------------- sharded data plane
+    def _batch_sh(self, ndim: int):
+        """NamedSharding for (max_slots, ...) batch-state tensors."""
+        return self.plan.named(
+            P(self._batch_ax, *([None] * (ndim - 1))))
+
+    def _act_scope(self):
+        """Activation-sharding anchors (constrain_* in models/) are
+        armed only while a mesh engine traces/dispatches — scoped, not
+        global, so single-device engines in the same process (cluster
+        replicas, A/B baselines) are untouched."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        # Batch axes are *empty* in exact mode: data-splitting the batch
+        # halves every local matmul's M, and XLA picks a different
+        # blocking (FP summation order) for the smaller shape — measured
+        # 2e-6 logit drift at mesh (2,2) even with replicated weights.
+        # Compute therefore runs at full batch; the "data" axis shards
+        # storage (KV pages, batch-state vectors) via the jit in/out
+        # shardings, and GSPMD inserts the elementwise (exact)
+        # gather/scatter at the jit boundary.
+        return activation_sharding(
+            (), model_size=self.mesh.shape["model"],
+            mesh=self.mesh, exact_reductions=True)
+
+    def _install_sharded_jits(self) -> None:
+        """Explicit in/out shardings for the fixed-shape entry points.
+
+        Derived entirely from the ``sharding.py`` rule table via the
+        engine's ShardPlan: weights + LoRA-B over "model", KV (pages or
+        dense batch) and every per-request vector over "data". Donated
+        buffers (tokens/KV/cache_len/active/positions) keep identical
+        in- and out-shardings so XLA's in-place aliasing survives
+        sharding. Only the active data plane's pair is rebuilt; the
+        other keeps its unsharded default (it is never called)."""
+        b1, b2 = self._batch_sh(1), self._batch_sh(2)
+        hor = self.plan.named(P(None, self._batch_ax))   # (K, B) blocks
+        logits_sh = self.plan.logits(
+            (self.ecfg.max_slots, self.cfg.vocab_size))
+        params_sh, lora_sh = self._params_sh, self._lora_sh
+        kv_sh = self._kv_sh
+        if self.paged:
+            self._decode_paged_jit = jax.jit(
+                self._decode_paged_fn,
+                in_shardings=(params_sh, lora_sh, b2, kv_sh, b2, b1, b1),
+                out_shardings=(logits_sh, kv_sh))
+            carry = (b2, kv_sh, b1, b1, b1)
+
+            # pjit rejects *any* kwargs once in_shardings is explicit,
+            # so the static knobs move to trailing positional args and
+            # a thin wrapper keeps the call sites' K=/all_greedy=
+            # keyword surface identical to the unsharded jits.
+            def fp(params, lora, tokens, kv_pages, page_table,
+                   cache_len, active, positions, adapter_slot, budget,
+                   stop, temp, topk, topp, seeds, K, all_greedy):
+                return self._fused_paged_fn(
+                    params, lora, tokens, kv_pages, page_table,
+                    cache_len, active, positions, adapter_slot, budget,
+                    stop, temp, topk, topp, seeds, K=K,
+                    all_greedy=all_greedy)
+            fp_jit = jax.jit(
+                fp, static_argnums=(15, 16),
+                donate_argnums=(2, 3, 5, 6, 7),
+                in_shardings=(params_sh, lora_sh, b2, kv_sh, b2, b1,
+                              b1, b1, b1, b1, b2, b1, b1, b1, b1),
+                out_shardings=(carry, hor, hor))
+            self._fused_paged_jit = (
+                lambda *a, K, all_greedy: fp_jit(*a, K, all_greedy))
+        else:
+            self._decode_jit = jax.jit(
+                self._decode_fn,
+                in_shardings=(params_sh, lora_sh, b2, kv_sh, b1, b1),
+                out_shardings=(logits_sh, kv_sh))
+            carry = (b2, kv_sh, b1, b1, b1)
+
+            def fd(params, lora, tokens, kv, cache_len, active,
+                   positions, adapter_slot, budget, stop, temp, topk,
+                   topp, seeds, K, all_greedy):
+                return self._fused_fn(
+                    params, lora, tokens, kv, cache_len, active,
+                    positions, adapter_slot, budget, stop, temp, topk,
+                    topp, seeds, K=K, all_greedy=all_greedy)
+            fd_jit = jax.jit(
+                fd, static_argnums=(14, 15),
+                donate_argnums=(2, 3, 4, 5, 6),
+                in_shardings=(params_sh, lora_sh, b2, kv_sh, b1, b1,
+                              b1, b1, b1, b2, b1, b1, b1, b1),
+                out_shardings=(carry, hor, hor))
+            self._fused_jit = (
+                lambda *a, K, all_greedy: fd_jit(*a, K, all_greedy))
+
+    def _get_prefill_jit(self, B: int, S: int):
+        """Sharded dense prefill jit for one (B, S) bucket. pjit input
+        shardings demand exact divisibility, so each bucket fits its
+        own specs (B=1 rows degrade to replicated)."""
+        if self.plan is None:
+            return self._prefill_jit
+        key = ("dense", B, S)
+        jitf = self._sharded_prefill_cache.get(key)
+        if jitf is None:
+            pl, cfg = self.plan, self.cfg
+            lora_sh = (None if self.ecfg.prefix_mode == "alora"
+                       else self._lora_sh)
+            bB = pl.batch((B,))
+            kv = pl.kv_dense((cfg.n_layers, B, S, cfg.n_kv_heads,
+                              cfg.head_dim))
+            jitf = jax.jit(
+                self._prefill_fn, static_argnames=("S",),
+                in_shardings=(self._params_sh, lora_sh,
+                              pl.batch((B, S)), bB, bB),
+                out_shardings=(pl.logits((B, cfg.vocab_size)),
+                               (kv, kv)))
+            self._sharded_prefill_cache[key] = jitf
+        return jitf
+
+    def _get_prefill_paged_jit(self, B: int, S: int):
+        """Sharded suffix-prefill jit for one (B, S) bucket; the KV
+        pool keeps its fixed pages-over-"data" sharding (donated)."""
+        if self.plan is None:
+            return self._prefill_paged_jit
+        key = ("paged", B, S)
+        jitf = self._sharded_prefill_cache.get(key)
+        if jitf is None:
+            pl, cfg = self.plan, self.cfg
+            lora_sh = (None if self.ecfg.prefix_mode == "alora"
+                       else self._lora_sh)
+            bB = pl.batch((B,))
+            jitf = jax.jit(
+                self._prefill_paged_fn, static_argnames=("S",),
+                donate_argnums=(3,),
+                in_shardings=(self._params_sh, lora_sh,
+                              pl.batch((B, S)), self._kv_sh,
+                              pl.batch((B, self.pages_per_slot)),
+                              bB, bB, bB),
+                out_shardings=(pl.logits((B, cfg.vocab_size)),
+                               self._kv_sh))
+            self._sharded_prefill_cache[key] = jitf
+        return jitf
+
+    def _commit(self, x, sh):
+        """Re-commit a host-updated device value to its planned
+        sharding before a jit with explicit in_shardings sees it
+        (eager ``.at[].set`` preserves sharding in practice, making
+        this a free no-op — but pjit hard-errors on a mismatch, so the
+        invariant is enforced, not assumed)."""
+        if self.plan is None:
+            return x
+        return jax.device_put(x, sh)
+
+    def _commit_batch_state(self) -> None:
+        if self.plan is None:
+            return
+        self.tokens = self._commit(self.tokens, self._batch_sh(2))
+        self.cache_len = self._commit(self.cache_len, self._batch_sh(1))
+        self.adapter_slot = self._commit(self.adapter_slot,
+                                         self._batch_sh(1))
+        if self.paged:
+            self.kv_pages = self._commit(self.kv_pages, self._kv_sh)
+        else:
+            self.kv = self._commit(self.kv, self._kv_sh)
 
     # ------------------------------------------------------------- clock
     def now(self) -> float:
@@ -410,7 +656,13 @@ class ChameleonEngine:
         slot = self.free_slots.pop()
         self.slot_of[info.adapter_id] = slot
         self._lora_staging = write_adapter_to_slot(
-            self._lora_staging, self.host_adapters[info.adapter_id], slot)
+            self._lora_staging, self.host_adapters[info.adapter_id], slot,
+            shardings=self._adapter_w_sh)
+        if self._lora_sh is not None:
+            # The slot write preserves the arena sharding; re-commit so
+            # the jits' explicit in_shardings never see a drifted one.
+            self._lora_staging = jax.device_put(self._lora_staging,
+                                                self._lora_sh)
         e = self.ecfg
         delay = (info.size_bytes / (e.h2d_gbps * 1e9)
                  if e.h2d_gbps > 0 else 0.0)
@@ -750,9 +1002,10 @@ class ChameleonEngine:
             toks[i, :req.input_len] = self._prompt_tokens(req)
             last_pos[i] = req.input_len - 1
             lslots[i] = self.slot_of[req.adapter_id]
-        logits, (k_new, v_new) = self._prefill_jit(
-            self.params, self._prefill_lora(), jnp.asarray(toks),
-            jnp.asarray(lslots), jnp.asarray(last_pos), S)
+        with self._act_scope():
+            logits, (k_new, v_new) = self._get_prefill_jit(B, S)(
+                self.params, self._prefill_lora(), jnp.asarray(toks),
+                jnp.asarray(lslots), jnp.asarray(last_pos), S)
         if self._all_greedy(reqs):
             first_toks = np.asarray(
                 jnp.argmax(logits, axis=-1).astype(jnp.int32))
@@ -908,11 +1161,16 @@ class ChameleonEngine:
             seq_len[i] = L - s
             lslots[i] = self.slot_of[req.adapter_id]
             row_table[i] = self.page_table[slots[i]]
-        logits, self.kv_pages = self._prefill_paged_jit(
-            self.params, self._prefill_lora(), jnp.asarray(toks),
-            self.kv_pages, jnp.asarray(row_table),
-            jnp.asarray(start_arr), jnp.asarray(seq_len),
-            jnp.asarray(lslots), S)
+        if self.plan is not None:
+            # The COW fork above host-updates the (donated) pool —
+            # re-commit so the explicit in_shardings hold exactly.
+            self.kv_pages = self._commit(self.kv_pages, self._kv_sh)
+        with self._act_scope():
+            logits, self.kv_pages = self._get_prefill_paged_jit(B, S)(
+                self.params, self._prefill_lora(), jnp.asarray(toks),
+                self.kv_pages, jnp.asarray(row_table),
+                jnp.asarray(start_arr), jnp.asarray(seq_len),
+                jnp.asarray(lslots), S)
         if self._all_greedy(placed):
             first_toks = np.asarray(
                 jnp.argmax(logits, axis=-1).astype(jnp.int32))
@@ -1166,16 +1424,20 @@ class ChameleonEngine:
             self._idle_wait()
             return
         self.batch_occupancy.append(int(self.active.sum()))
+        self._commit_batch_state()
         DISPATCH_METER.tick()
-        if self.paged:
-            logits, self.kv_pages = self._decode_paged_jit(
-                self.params, self.lora, self.tokens, self.kv_pages,
-                jnp.asarray(self.page_table), self.cache_len,
-                self.adapter_slot)
-        else:
-            logits, self.kv = self._decode_jit(
-                self.params, self.lora, self.tokens, self.kv,
-                self.cache_len, self.adapter_slot)
+        if self._collective:
+            COLLECTIVE_METER.tick()
+        with self._act_scope():
+            if self.paged:
+                logits, self.kv_pages = self._decode_paged_jit(
+                    self.params, self.lora, self.tokens, self.kv_pages,
+                    jnp.asarray(self.page_table), self.cache_len,
+                    self.adapter_slot)
+            else:
+                logits, self.kv = self._decode_jit(
+                    self.params, self.lora, self.tokens, self.kv,
+                    self.cache_len, self.adapter_slot)
         DISPATCH_METER.tick()
         if self._all_greedy(self.slot_req):
             nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -1187,7 +1449,8 @@ class ChameleonEngine:
         self.cache_len = self.cache_len + jnp.asarray(self.active,
                                                       jnp.int32)
         now = self.now()
-        with DISPATCH_METER.sync():
+        with DISPATCH_METER.sync(), COLLECTIVE_METER.sync() \
+                if self._collective else contextlib.nullcontext():
             nxt_host = np.asarray(nxt)
         to_finish, to_squash = [], []
         for slot in np.where(self.active)[0]:
@@ -1330,28 +1593,36 @@ class ChameleonEngine:
         if refresh:
             self._refresh_device_state()
         d = self._dev
+        self._commit_batch_state()
         DISPATCH_METER.tick()
-        if self.paged:
-            if self._page_table_dirty or self._page_table_dev is None:
-                self._page_table_dev = jnp.asarray(self.page_table)
-                self._page_table_dirty = False
-            carry, toks, emits = self._fused_paged_jit(
-                self.params, self.lora, self.tokens, self.kv_pages,
-                self._page_table_dev, self.cache_len, d["active"],
-                d["positions"], self.adapter_slot, d["budget"],
-                d["stop"], d["temp"], d["topk"], d["topp"], d["seeds"],
-                K=K, all_greedy=d["all_greedy"])
-            (self.tokens, self.kv_pages, self.cache_len,
-             d["active"], d["positions"]) = carry
-        else:
-            carry, toks, emits = self._fused_jit(
-                self.params, self.lora, self.tokens, self.kv,
-                self.cache_len, d["active"], d["positions"],
-                self.adapter_slot, d["budget"], d["stop"], d["temp"],
-                d["topk"], d["topp"], d["seeds"],
-                K=K, all_greedy=d["all_greedy"])
-            (self.tokens, self.kv, self.cache_len,
-             d["active"], d["positions"]) = carry
+        if self._collective:
+            COLLECTIVE_METER.tick()
+        with self._act_scope():
+            if self.paged:
+                if self._page_table_dirty or self._page_table_dev is None:
+                    self._page_table_dev = jnp.asarray(self.page_table)
+                    if self.plan is not None:
+                        self._page_table_dev = jax.device_put(
+                            self._page_table_dev,
+                            self._batch_sh(2))
+                    self._page_table_dirty = False
+                carry, toks, emits = self._fused_paged_jit(
+                    self.params, self.lora, self.tokens, self.kv_pages,
+                    self._page_table_dev, self.cache_len, d["active"],
+                    d["positions"], self.adapter_slot, d["budget"],
+                    d["stop"], d["temp"], d["topk"], d["topp"], d["seeds"],
+                    K=K, all_greedy=d["all_greedy"])
+                (self.tokens, self.kv_pages, self.cache_len,
+                 d["active"], d["positions"]) = carry
+            else:
+                carry, toks, emits = self._fused_jit(
+                    self.params, self.lora, self.tokens, self.kv,
+                    self.cache_len, d["active"], d["positions"],
+                    self.adapter_slot, d["budget"], d["stop"], d["temp"],
+                    d["topk"], d["topp"], d["seeds"],
+                    K=K, all_greedy=d["all_greedy"])
+                (self.tokens, self.kv, self.cache_len,
+                 d["active"], d["positions"]) = carry
         self._inflight = (toks, emits, K)
 
     def _drain_inflight(self) -> None:
@@ -1365,7 +1636,8 @@ class ChameleonEngine:
             return
         toks, emits, _K = self._inflight
         self._inflight = None
-        with DISPATCH_METER.sync():
+        with DISPATCH_METER.sync(), COLLECTIVE_METER.sync() \
+                if self._collective else contextlib.nullcontext():
             toks_h = np.asarray(toks)
             emits_h = np.asarray(emits)
         now = self.now()
@@ -1560,6 +1832,40 @@ class ChameleonEngine:
             "cow_forks": self.n_cow_forks,
         }
 
+    def shard_stats(self) -> dict:
+        """Per-device data-plane gauges (empty dict off-mesh): physical
+        page occupancy per data shard, resident LoRA-arena bytes per
+        device, and the collective time fraction from the
+        COLLECTIVE_METER probe."""
+        if self.mesh is None:
+            return {}
+        out = {
+            "mesh_shape": [self.mesh.shape["data"],
+                           self.mesh.shape["model"]],
+            "n_devices": self.mesh.size,
+        }
+        if self.paged:
+            ds = self.mesh.shape["data"]
+            stride = self.n_pages // ds
+            per = [0] * ds
+            used = set(range(1, self.n_pages)) - set(self.free_pages)
+            for pid in used:
+                per[pid // stride] += 1
+            out["per_shard_pages_used"] = per
+            out["per_shard_pages_total"] = stride
+        # Actual bytes one device holds for the slot arena — with B
+        # sharded over "model" this is arena_bytes/model_size + the
+        # replicated A halves.
+        arena = 0
+        for a, b in self.lora.values():
+            arena += a.addressable_shards[0].data.nbytes
+            arena += b.addressable_shards[0].data.nbytes
+        out["per_shard_lora_slot_bytes"] = arena
+        if self._collective:
+            out["collective_frac"] = round(COLLECTIVE_METER.frac(), 4)
+            out["collective_dispatches"] = COLLECTIVE_METER.dispatches
+        return out
+
     def stats(self) -> dict:
         return {
             "completed": len(self.completed),
@@ -1579,6 +1885,7 @@ class ChameleonEngine:
             "batch_epoch": self.batch_epoch,
             **self.kv_page_stats(),
             **self.prefix_stats(),
+            **self.shard_stats(),
         }
 
     def metrics(self) -> RunMetrics:
@@ -1609,5 +1916,6 @@ class ChameleonEngine:
                 if self.batch_occupancy else 0.0, 3),
             **self.kv_page_stats(),
             **self.prefix_stats(),
+            **self.shard_stats(),
         }
         return m

@@ -131,8 +131,10 @@ def merge_metrics(per_node: list[RunMetrics],
     # Non-additive gauges: report the worst node instead of a sum.
     # kv_page_util / batch_occupancy_mean are fractions of per-node
     # capacity; kv_pages_used/total and preempted counts stay additive.
+    # collective_frac (sharded engines) is a wall-time fraction.
     ratio_gauges = ("link_busy_frac", "pressure", "kv_page_util",
-                    "batch_occupancy_mean", "prefix_hit_rate")
+                    "batch_occupancy_mean", "prefix_hit_rate",
+                    "collective_frac")
     merged = RunMetrics(
         n_submitted=(n_submitted if n_submitted is not None
                      else sum(m.n_submitted for m in per_node)))

@@ -160,7 +160,7 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
                  node: NodeConfig | None = None,
                  model_cfg=None, params=None, ecfg=None,
                  n_nodes: int = 2, policy: str = "adapter_affinity",
-                 seed: int = 0):
+                 seed: int = 0, mesh_shape: tuple | None = None):
     """Build a ``ServingSystem`` (see ``serving.handles``): one factory
     over the full system × tier matrix.
 
@@ -176,9 +176,19 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
     ``step``, ``busy``, ``drain``, ``cancel``, ``queue_pressure``,
     ``stats``, ``metrics``. The engine tiers build a reduced model
     when ``model_cfg``/``params`` are not supplied.
+
+    ``mesh_shape`` ((data, model), real-engine tiers only): shard each
+    engine's data plane over a device mesh — resolved through
+    ``launch.mesh.make_serving_mesh``, so device availability is
+    validated before any buffer lands. At tier="cluster" every replica
+    gets the same shape; the cluster validates replicas × mesh size
+    against the device count.
     """
     if tier not in TIERS:
         raise ValueError(f"unknown tier {tier!r}; one of {TIERS}")
+    if mesh_shape is not None and tier not in ("engine", "cluster"):
+        raise ValueError(
+            f"mesh_shape applies to the real-engine tiers, not {tier!r}")
     if tier == "sim":
         sim, _, _ = build_node(system, node or NodeConfig(seed=seed))
         return sim
@@ -189,6 +199,12 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
             node=node or NodeConfig(seed=seed)))
     if model_cfg is None or params is None:
         model_cfg, params = _default_model()
+    if mesh_shape is not None:
+        import dataclasses
+
+        from .engine import EngineConfig
+        ecfg = dataclasses.replace(ecfg or EngineConfig(),
+                                   mesh_shape=tuple(mesh_shape))
     if tier == "engine":
         return build_engine(system, model_cfg, params, ecfg)
     from .cluster import EngineCluster, EngineClusterConfig
