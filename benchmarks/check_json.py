@@ -36,6 +36,7 @@ REQUIRED_VALIDATED = {
     "fig17_scalability_sharded_engine": {
         "all_completed", "tokens_identical", "mesh_shape", "n_devices",
         "throughput_ratio_mesh_over_single", "collective_frac"},
+    "gateway": {"all_completed", "fair_tenant_p99_improves"},
 }
 
 

@@ -12,7 +12,7 @@ from .lora import (PAPER_RANKS, AdapterInfo, adapter_bytes, assign_adapters,
                    build_adapter_pool, powerlaw_rank_sampler)
 from .memory_pool import MemoryPool, PoolError, kv_token_bytes
 from .predictor import (HistogramPredictor, NoisyOraclePredictor, bucket_of,
-                        bucket_repr, measure_accuracy)
+                        bucket_repr, measure_accuracy, predict_request)
 from .prefetcher import HistogramPrefetcher, QueuedRequestPrefetcher
 from .prefix_cache import PrefixCache, PrefixNode
 from .quotas import QueueStats, assign_quotas, tok_min
@@ -31,7 +31,7 @@ __all__ = [
     "build_adapter_pool", "powerlaw_rank_sampler",
     "MemoryPool", "PoolError", "kv_token_bytes",
     "HistogramPredictor", "NoisyOraclePredictor", "bucket_of",
-    "bucket_repr", "measure_accuracy",
+    "bucket_repr", "measure_accuracy", "predict_request",
     "HistogramPrefetcher", "QueuedRequestPrefetcher",
     "PrefixCache", "PrefixNode",
     "QueueStats", "assign_quotas", "tok_min",

@@ -18,6 +18,7 @@ from typing import Optional
 from .adapter_cache import AdapterCache
 from .lora import AdapterInfo
 from .memory_pool import MemoryPool, PoolError
+from .predictor import predict_request
 from .request import Request, RequestState
 from .scheduler import BaseScheduler
 
@@ -37,11 +38,7 @@ class _SingleQueueScheduler(BaseScheduler):
         self.n_deferred = 0   # placements refused while the adapter loads
 
     def submit(self, req: Request, now: float) -> None:
-        if req.predicted_output <= 0:
-            req.predicted_output = max(1, int(self.predictor.predict(
-                req.input_len, req.adapter_id, req.output_len)))
-        req.predicted_output = min(req.predicted_output,
-                                   self.max_predicted_output)
+        predict_request(self.predictor, req, self.max_predicted_output)
         self.reqs.append(req)
 
     def requeue(self, req: Request, now: float) -> None:

@@ -113,6 +113,24 @@ class HistogramPredictor:
         return bucket_repr(b)
 
 
+def predict_request(predictor, req, max_predicted: int = 4096) -> int:
+    """Fill ``req.predicted_output`` from ``predictor`` — once.
+
+    The single length-prediction hook shared by every consumer of a
+    prediction: schedulers call it at queue admission, the gateway calls
+    it earlier (lane classification + SLO wait estimates). Idempotent —
+    an already-predicted request keeps its value, so whichever layer
+    sees the request first decides and every later layer agrees (the
+    gateway's lane choice and the scheduler's WRS are computed from the
+    same number). Returns the (clamped, >=1) prediction.
+    """
+    if req.predicted_output <= 0:
+        req.predicted_output = max(1, int(predictor.predict(
+            req.input_len, req.adapter_id, req.output_len)))
+    req.predicted_output = min(req.predicted_output, max_predicted)
+    return req.predicted_output
+
+
 def measure_accuracy(predictor, pairs) -> float:
     """Fraction of (input, adapter, truth) triples predicted in-bucket."""
     ok = 0

@@ -14,6 +14,11 @@ Lifecycle (DESIGN §3):
        |          |           +-----> EXPIRED   (deadline passed)
        +----------+----------------> CANCELLED  (handle.cancel())
 
+REJECTED is a fourth terminal state reached *before* QUEUED: gateway
+admission control (serving/gateway.py) refused entry, so no scheduler
+ever saw the request. Its handle still resolves (state + decision
+trace) — a refused submit is reported, never dropped.
+
 LOADING is the async-adapter deferral: admission pinned the adapter and
 its host->device transfer is in flight, so the request cannot be placed
 yet (the rest of the batch proceeds). RUNNING requests may bounce back
@@ -44,10 +49,11 @@ class RequestState(enum.Enum):
     CANCELLED = "cancelled"   # handle.cancel() before completion
     EXPIRED = "expired"       # deadline/TTL passed before completion
     SQUASHED = "squashed"     # bypasser that exceeded its predicted length
+    REJECTED = "rejected"     # gateway admission control refused entry
 
 
 TERMINAL_STATES = frozenset({RequestState.FINISHED, RequestState.CANCELLED,
-                             RequestState.EXPIRED})
+                             RequestState.EXPIRED, RequestState.REJECTED})
 
 
 @dataclass
@@ -59,6 +65,11 @@ class Request:
     adapter_id: int
     arrival_time: float = 0.0
     req_id: int = field(default_factory=lambda: next(_req_counter))
+
+    # Multi-tenant serving: which tenant (org/user) submitted this.
+    # Engines and schedulers ignore it; the gateway keys its per-tenant
+    # limits, fair-queueing weights and decision traces on it.
+    tenant: str = "default"
 
     # Real prompt token ids (length == input_len). None keeps the
     # synthetic arange prompt the engine historically fabricated, so

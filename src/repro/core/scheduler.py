@@ -13,6 +13,17 @@ Quota charge of a request = input + predicted output + adapter tokens
 (paper: the quota "includes input tokens, output tokens, and the memory
 required for the corresponding adapter"). The *pool* reservation excludes
 the adapter (adapters are held once, reference-counted, by the cache).
+
+Layering (DESIGN §3): this scheduler orders work *within one node's
+continuous batch* and is deliberately tenant-blind — per-tenant
+fairness, admission limits, and SLO-aware rejection live a layer up in
+``serving/gateway.py``, which holds its own queue and keeps this one
+shallow. Both layers price requests with the same length-prediction
+hook (``predictor.predict_request``), so a gateway-degraded
+``max_new_tokens`` is the number this scheduler charges quota for.
+``submit`` is non-blocking (enqueue only); placement happens inside
+``schedule`` on the engine's step, and deadline enforcement for queued
+requests is the step loop's ``reap_expired`` sweep.
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ from .adapter_cache import AdapterCache
 from .kmeans import choose_queues, queue_index
 from .lora import AdapterInfo
 from .memory_pool import MemoryPool, PoolError
+from .predictor import predict_request
 from .quotas import QueueStats, assign_quotas
 from .request import Request, RequestState
 from .wrs import WRSCalculator
@@ -136,6 +148,20 @@ class _QueueState:
 
 
 class ChameleonScheduler(BaseScheduler):
+    """The paper's adapter-aware multi-level queue (§4.2).
+
+    Requests land in one of K WRS-cutoff queues at ``submit``
+    (non-blocking; prediction via the shared ``predict_request`` hook);
+    ``schedule`` assembles each batch in two phases — per-queue M/M/1
+    quota admission, then top-down redistribution of spare tokens —
+    with an adapter-blocking bypass lane whose mispredictors are
+    squashed back to their queue. Queue count and cutoffs re-adapt by
+    K-means over observed WRS every ``t_refresh`` seconds (minimum
+    ``refresh_min_samples`` completions). Non-preemptive: admitted
+    requests run to completion unless the paged engine preempts for
+    pages or a deadline/cancel sweep removes them.
+    """
+
     name = "chameleon"
 
     def __init__(self,
@@ -239,11 +265,7 @@ class ChameleonScheduler(BaseScheduler):
 
     # -- submission ----------------------------------------------------------
     def submit(self, req: Request, now: float) -> None:
-        if req.predicted_output <= 0:
-            req.predicted_output = max(1, int(self.predictor.predict(
-                req.input_len, req.adapter_id, req.output_len)))
-        req.predicted_output = min(req.predicted_output,
-                                   self.max_predicted_output)
+        predict_request(self.predictor, req, self.max_predicted_output)
         ad = self.adapters[req.adapter_id]
         req.wrs = self.wrs_calc.wrs(req.input_len, req.predicted_output,
                                     ad.size_tokens)

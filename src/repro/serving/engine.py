@@ -73,9 +73,21 @@ deterministic synthetic prompt. Squash/preemption preserves the
 streamed prefix and its latency records across the requeue (the handle
 never re-streams a position).
 
+One engine can span a device **mesh** (``EngineConfig.mesh_shape``,
+DESIGN §4.1): weights and LoRA-slot dout shard over the "model" axis,
+KV pages / dense KV and per-request batch state over "data", and every
+jit'd entry point (prefill, both decode loops, sampling, slot writes)
+carries explicit in/out shardings from the ``distributed.sharding``
+rule table via ``ShardPlan``. The control plane (pool, scheduler, page
+tables, prefix cache) stays host-side and global, which is what keeps
+a mesh>1 engine token-identical to single-device (``mesh_shape=None``,
+the default) — asserted by ``tests/test_sharded_engine.py``.
+
 Multi-replica serving shares one ``AdapterCatalog`` (host-side adapter
 weights + size metadata) across engines: replicas differ only in device
-state, never in adapter bytes.
+state, never in adapter bytes. A gateway (``serving/gateway.py``) can
+front any of this — engine, DES node, or cluster — adding per-tenant
+admission control without the engine knowing tenants exist.
 """
 from __future__ import annotations
 

@@ -1,9 +1,11 @@
 """The unified serving surface: request handles and the ServingSystem
 protocol (DESIGN §3).
 
-Every tier — the real JAX engine (``ChameleonEngine``), the real-engine
-cluster (``EngineCluster``) and the discrete-event simulator
-(``NodeSimulator``) — serves requests through the same four verbs:
+Every tier — the real JAX engine (``ChameleonEngine``, single- or
+mesh-sharded), the real-engine cluster (``EngineCluster``), the
+discrete-event simulator (``NodeSimulator``) and its cluster
+(``Cluster``), plus the multi-tenant ``Gateway`` that wraps any of
+them — serves requests through the same four verbs:
 
     handle = system.submit(req, sampling=..., on_token=..., ttl=...)
     system.step()            # one iteration (prefill admission + decode)
@@ -23,8 +25,12 @@ Lifecycle (see ``core.request.RequestState``):
        │          │           ├──────> EXPIRED    (deadline passed)
        └──────────┴─────────────────> CANCELLED  (handle.cancel())
 
-All three systems are single-threaded and driven by ``step()``; a
-handle therefore *pumps* its owning system while the caller blocks on
+REJECTED is a fourth terminal state produced only by gateway admission
+control — the request never reaches a scheduler, but its handle still
+resolves (with a ``decision`` trace and ``retry_after`` hint).
+
+Every tier is single-threaded and driven by ``step()``; a handle
+therefore *pumps* its owning system while the caller blocks on
 ``stream()`` / ``result()``. Token delivery is position-keyed so a
 squash/requeue that re-executes a request's prefix never re-streams
 tokens the caller already consumed.
@@ -93,6 +99,11 @@ class RequestHandle:
         #: routed to (subsumes the node index the old cluster ``submit``
         #: returned); single-node systems leave it None.
         self.node: Optional[int] = None
+        #: Gateway tiers attach the admission decision
+        #: (``serving.gateway.GatewayDecision``) here, and on rejection
+        #: the suggested retry-after seconds; None everywhere else.
+        self.decision = None
+        self.retry_after: Optional[float] = None
 
     # -- identity / state ------------------------------------------------
     @property
@@ -109,7 +120,7 @@ class RequestHandle:
 
     @property
     def done(self) -> bool:
-        """Terminal: FINISHED, CANCELLED or EXPIRED."""
+        """Terminal: FINISHED, CANCELLED, EXPIRED or REJECTED."""
         return self.req.terminal
 
     # -- token delivery (system side) ------------------------------------

@@ -13,6 +13,67 @@ from dataclasses import dataclass, field
 import numpy as np
 
 
+#: Registry of every gauge a serving tier can export through
+#: ``metrics()`` (``cache_stats`` / ``sched_stats``) or the gateway's
+#: ``_gauges()``: name -> (unit, one-line meaning). docs/OPERATIONS.md
+#: documents each entry with its healthy range and the overload symptom
+#: it diagnoses; ``tests/test_gateway.py`` asserts the doc covers every
+#: name here and that live systems emit no gauge missing from this
+#: table — add the gauge HERE and to the doc when you add one to a
+#: tier.
+GAUGES: dict = {
+    # Adapter cache (all tiers).
+    "hit_rate": ("ratio", "adapter-cache hit fraction"),
+    "hits": ("count", "adapter-cache hits"),
+    "misses": ("count", "adapter-cache misses (each one is an H2D load)"),
+    "evictions": ("count", "adapters evicted from device"),
+    "gb_loaded": ("GB", "total adapter bytes moved host->device"),
+    "link_busy_frac": ("ratio", "PCIe/NVLink busy fraction (sim tier)"),
+    # Scheduler / engine control plane.
+    "bypassed": ("count", "requests admitted via the bypass lane"),
+    "squashed": ("count", "bypassers squashed on misprediction"),
+    "queues": ("count", "Chameleon MLQ queue count after adaptation"),
+    "deferred": ("count", "placements deferred while the adapter loads"),
+    "cancelled": ("count", "requests cancelled before completion"),
+    "expired": ("count", "requests that hit their deadline"),
+    "async_loads": ("count", "adapter loads overlapped with decode"),
+    "pressure": ("requests", "scheduler backlog + in-flight (routing signal)"),
+    "batch_occupancy_mean": ("ratio", "mean continuous-batch slot occupancy"),
+    # Paged KV plane.
+    "kv_pages_used": ("pages", "KV pages currently allocated"),
+    "kv_pages_total": ("pages", "KV pages in the pool"),
+    "kv_page_util": ("ratio", "KV page utilisation"),
+    "preempted": ("count", "requests preempted out of pages"),
+    # Prefix cache.
+    "prefix_hit_rate": ("ratio", "prompt tokens served from the radix tree"),
+    "prefix_hit_tokens": ("tokens", "prompt tokens reused"),
+    "prefix_lookup_tokens": ("tokens", "prompt tokens looked up"),
+    "prefix_hits": ("count", "requests with a non-empty prefix match"),
+    "prefix_shared_pages": ("pages", "pages shared via refcounting"),
+    "prefix_nodes": ("count", "radix-tree nodes resident"),
+    "prefix_evictions": ("count", "radix-tree leaves evicted"),
+    "cow_forks": ("count", "copy-on-write page forks"),
+    # Sharded engine.
+    "mesh_shape": ("(data,model)", "serving mesh shape"),
+    "n_devices": ("count", "devices in the serving mesh"),
+    "per_shard_pages_used": ("pages", "KV pages used per data shard"),
+    "per_shard_pages_total": ("pages", "KV pages per data shard"),
+    "per_shard_lora_slot_bytes": ("bytes", "LoRA arena bytes on one device"),
+    "collective_frac": ("ratio", "wall-time fraction spent in collectives"),
+    "collective_dispatches": ("count", "jit dispatches containing collectives"),
+    # Gateway (serving/gateway.py).
+    "gw_submitted": ("count", "requests submitted through the gateway"),
+    "gw_admitted": ("count", "requests admitted (incl. degraded)"),
+    "gw_rejected": ("count", "requests refused by admission control"),
+    "gw_degraded": ("count", "requests admitted with a reduced max_new_tokens"),
+    "gw_queued": ("requests", "requests currently held in gateway lanes"),
+    "gw_inflight": ("requests", "requests dispatched into the wrapped tier"),
+    "gw_reject_rate": ("ratio", "rejected / submitted"),
+    "gw_degrade_rate": ("ratio", "degraded / submitted"),
+    "gw_queue_wait_est_s": ("seconds", "current backlog drain estimate"),
+}
+
+
 @dataclass
 class RequestRecord:
     req_id: int
@@ -134,7 +195,8 @@ def merge_metrics(per_node: list[RunMetrics],
     # collective_frac (sharded engines) is a wall-time fraction.
     ratio_gauges = ("link_busy_frac", "pressure", "kv_page_util",
                     "batch_occupancy_mean", "prefix_hit_rate",
-                    "collective_frac")
+                    "collective_frac", "gw_reject_rate",
+                    "gw_degrade_rate", "gw_queue_wait_est_s")
     merged = RunMetrics(
         n_submitted=(n_submitted if n_submitted is not None
                      else sum(m.n_submitted for m in per_node)))

@@ -160,7 +160,8 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
                  node: NodeConfig | None = None,
                  model_cfg=None, params=None, ecfg=None,
                  n_nodes: int = 2, policy: str = "adapter_affinity",
-                 seed: int = 0, mesh_shape: tuple | None = None):
+                 seed: int = 0, mesh_shape: tuple | None = None,
+                 gateway=None):
     """Build a ``ServingSystem`` (see ``serving.handles``): one factory
     over the full system × tier matrix.
 
@@ -183,20 +184,35 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
     validated before any buffer lands. At tier="cluster" every replica
     gets the same shape; the cluster validates replicas × mesh size
     against the device count.
+
+    ``gateway``: wrap the built tier in the multi-tenant admission
+    layer (``serving.gateway.Gateway``) — pass ``True`` for the default
+    policy or a ``GatewayConfig``. The return value is then the Gateway
+    (itself a ``ServingSystem``); on the sim tier it inherits the
+    node's cost model so SLO wait estimates start calibrated.
     """
     if tier not in TIERS:
         raise ValueError(f"unknown tier {tier!r}; one of {TIERS}")
     if mesh_shape is not None and tier not in ("engine", "cluster"):
         raise ValueError(
             f"mesh_shape applies to the real-engine tiers, not {tier!r}")
+
+    def _gated(sys_, cost=None):
+        if not gateway:
+            return sys_
+        from .gateway import Gateway, GatewayConfig
+        gcfg = gateway if isinstance(gateway, GatewayConfig) else None
+        return Gateway(sys_, gcfg, cost_model=cost)
+
     if tier == "sim":
-        sim, _, _ = build_node(system, node or NodeConfig(seed=seed))
-        return sim
+        sim, _, cost = build_node(system, node or NodeConfig(seed=seed))
+        return _gated(sim, cost)
     if tier == "sim-cluster":
         from .cluster import Cluster, ClusterConfig
-        return Cluster(ClusterConfig(
+        cl = Cluster(ClusterConfig(
             n_nodes=n_nodes, system=system, policy=policy,
             node=node or NodeConfig(seed=seed)))
+        return _gated(cl, cl.nodes[0].cost if cl.nodes else None)
     if model_cfg is None or params is None:
         model_cfg, params = _default_model()
     if mesh_shape is not None:
@@ -206,7 +222,7 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
         ecfg = dataclasses.replace(ecfg or EngineConfig(),
                                    mesh_shape=tuple(mesh_shape))
     if tier == "engine":
-        return build_engine(system, model_cfg, params, ecfg)
+        return _gated(build_engine(system, model_cfg, params, ecfg))
     from .cluster import EngineCluster, EngineClusterConfig
-    return EngineCluster(model_cfg, params, ecfg, EngineClusterConfig(
-        n_engines=n_nodes, system=system, policy=policy, seed=seed))
+    return _gated(EngineCluster(model_cfg, params, ecfg, EngineClusterConfig(
+        n_engines=n_nodes, system=system, policy=policy, seed=seed)))

@@ -16,6 +16,7 @@ available: ``load_azure_csv``.
 from __future__ import annotations
 
 import csv
+import dataclasses
 import math
 from dataclasses import dataclass, field
 
@@ -140,6 +141,44 @@ def synthesize_shared_prefix(cfg: TraceConfig, pool: list[AdapterInfo],
                             adapter_id=int(adapters[i]),
                             arrival_time=float(times[i]), prompt=prompt))
     return Trace(requests=reqs, config=cfg)
+
+
+def synthesize_multitenant(cfg: TraceConfig, pool: list[AdapterInfo],
+                           tenants: tuple = ("acme", "globex", "initech",
+                                             "umbrella"),
+                           heavy_hitter: str = "floodcorp",
+                           heavy_rps_factor: float = 8.0,
+                           heavy_output_factor: float = 4.0) -> Trace:
+    """Multi-tenant workload with one adversarial heavy hitter
+    (gateway A/B substrate).
+
+    Each well-behaved tenant independently submits a ``cfg``-shaped
+    stream at ``cfg.rps`` (same Azure-calibrated length model as
+    ``synthesize``); ``heavy_hitter`` floods ``heavy_rps_factor``× that
+    rate with ``heavy_output_factor``× longer decodes — the tenant a
+    per-engine scheduler cannot tell apart from everyone else but a
+    gateway must bound. Tenant streams use derived seeds and merge by
+    arrival time, so the offered load is identical across A/B arms.
+    ``Request.tenant`` carries the attribution.
+    """
+    streams = []
+    for i, name in enumerate(tenants):
+        sub = dataclasses.replace(cfg, seed=cfg.seed + 1 + i)
+        t = synthesize(sub, pool)
+        for r in t.requests:
+            r.tenant = name
+        streams.extend(t.requests)
+    hcfg = dataclasses.replace(
+        cfg, seed=cfg.seed + 101,
+        rps=cfg.rps * heavy_rps_factor,
+        output_lognorm_mu=cfg.output_lognorm_mu
+        + math.log(heavy_output_factor))
+    ht = synthesize(hcfg, pool)
+    for r in ht.requests:
+        r.tenant = heavy_hitter
+    streams.extend(ht.requests)
+    streams.sort(key=lambda r: r.arrival_time)
+    return Trace(requests=streams, config=cfg)
 
 
 def downscale_for_engine(trace: Trace, n_adapters: int,

@@ -1,0 +1,387 @@
+"""Multi-tenant gateway (DESIGN §3.3): admission control, weighted-fair
+dispatch, SLO-aware overload behavior, decision traces, and the
+gauge/doc coverage contract.
+
+Everything runs against the DES tier (pure Python, no JAX device work):
+the gateway's behavior is tier-independent by construction — it speaks
+only the ``ServingSystem`` verbs — and ``tests/test_serving_api.py``
+already proves those verbs are uniform across sim/engine/cluster.
+
+The SLO tests pin the wait model (``calibrate=False`` + explicit
+``init_*`` seeds) so the admit/degrade/reject thresholds are exact
+arithmetic, not calibration-dependent.
+"""
+import pathlib
+
+import pytest
+
+from repro.core import Request, RequestState, SamplingParams
+from repro.core.request import TERMINAL_STATES
+from repro.serving import (GAUGES, Gateway, GatewayConfig, NodeConfig,
+                           TenantPolicy, TraceConfig, build_system,
+                           synthesize_multitenant)
+from repro.serving.handles import RequestHandle, ServingSystem
+
+NCFG = dict(n_adapters=8)
+
+
+def gated(gcfg=None, **node_kw):
+    return build_system("chameleon", tier="sim",
+                        node=NodeConfig(**{**NCFG, **node_kw}),
+                        gateway=gcfg or GatewayConfig())
+
+
+def req(out=8, inp=32, adapter=0, **kw):
+    return Request(input_len=inp, output_len=out, adapter_id=adapter, **kw)
+
+
+#: Wait model pinned for exact SLO arithmetic: predicted wait for one
+#: queued request = (input 32 + predicted output 128) * 0.05s/tok.
+PINNED = dict(init_s_per_tok=0.05, init_ttft_s=0.2,
+              service_parallelism=1.0, calibrate=False)
+
+
+# ------------------------------------------------------------------
+# ServingSystem conformance
+# ------------------------------------------------------------------
+class TestConformance:
+    def test_protocol_and_lifecycle(self):
+        gw = gated()
+        assert isinstance(gw, Gateway)
+        assert isinstance(gw, ServingSystem)
+        h = gw.submit("acme", req())
+        assert isinstance(h, RequestHandle)
+        assert gw.busy()
+        gw.drain()
+        assert not gw.busy()
+        assert h.state is RequestState.FINISHED
+        assert h.result().n_tokens == 8
+
+    def test_stream_equals_on_token(self):
+        gw = gated()
+        seen = []
+        h = gw.submit("acme", req(out=6, adapter=1), on_token=seen.append)
+        streamed = list(h.stream())
+        assert len(streamed) == 6
+        assert streamed == seen == h.tokens
+
+    def test_submit_shapes_all_tag_tenant(self):
+        gw = gated()
+        h1 = gw.submit("acme", req())                  # operator shape
+        h2 = gw.submit(req(adapter=1), tenant="globex")  # kwarg shape
+        r3 = req(adapter=2)
+        r3.tenant = "initech"
+        h3 = gw.submit(r3)                             # pre-tagged shape
+        assert (h1.req.tenant, h2.req.tenant, h3.req.tenant) == \
+            ("acme", "globex", "initech")
+        gw.drain()
+        assert all(h.state is RequestState.FINISHED for h in (h1, h2, h3))
+        assert set(gw.gateway_stats()["tenants"]) == \
+            {"acme", "globex", "initech"}
+
+    def test_queue_pressure_counts_gateway_backlog(self):
+        gw = gated()
+        base = gw.queue_pressure()
+        for i in range(5):
+            gw.submit("acme", req(adapter=i % 4))
+        assert gw.queue_pressure() >= base + 5
+
+
+# ------------------------------------------------------------------
+# Per-tenant isolation (weighted-fair dispatch)
+# ------------------------------------------------------------------
+class TestIsolation:
+    def test_light_tenant_not_starved_by_flood(self):
+        """30 long requests from one tenant are already queued when a
+        light tenant submits one short request: SFQ must dispatch the
+        light tenant ahead of the flood's backlog, so its TTFT looks
+        like an idle system, not like position 31 in a FIFO."""
+        gw = gated()
+        flood = [gw.submit("floodcorp", req(out=96, inp=256, adapter=i % 4))
+                 for i in range(30)]
+        probe = gw.submit("acme", req(out=8, inp=16, adapter=1))
+        gw.drain()
+        assert probe.state is RequestState.FINISHED
+        assert all(h.state is RequestState.FINISHED for h in flood)
+        flood_ttfts = sorted(h.req.ttft() for h in flood)
+        # The probe beats the median flood request despite arriving last.
+        assert probe.req.ttft() < flood_ttfts[len(flood_ttfts) // 2]
+
+    def test_weights_bias_service_order(self):
+        """With equal backlogs, the heavier tenant's requests drain
+        first in proportion to weight (SFQ finish tags = cost/weight)."""
+        gcfg = GatewayConfig(
+            default_policy=TenantPolicy(weight=1.0, max_inflight=1),
+            tenants={"gold": TenantPolicy(weight=4.0, max_inflight=1)})
+        gw = gated(gcfg)
+        gold = [gw.submit("gold", req(out=16, adapter=0)) for _ in range(6)]
+        iron = [gw.submit("iron", req(out=16, adapter=1)) for _ in range(6)]
+        gw.drain()
+        gold_done = sum(h.req.finish_time for h in gold)
+        iron_done = sum(h.req.finish_time for h in iron)
+        assert gold_done < iron_done
+
+
+# ------------------------------------------------------------------
+# Admission limits: reject early, never drop silently
+# ------------------------------------------------------------------
+class TestLimits:
+    def test_tenant_queue_cap_rejects_with_retry_after(self):
+        gcfg = GatewayConfig(tenants={
+            "bulk": TenantPolicy(max_inflight=1, max_queued=3)})
+        gw = gated(gcfg)
+        flood = [gw.submit("bulk", req(out=16, adapter=i % 4))
+                 for i in range(10)]
+        rejected = [h for h in flood if h.state is RequestState.REJECTED]
+        assert len(rejected) == 7           # 3 queued, rest refused
+        for h in rejected:
+            assert h.done                   # REJECTED is terminal
+            assert h.retry_after > 0
+            assert h.decision.action == "reject"
+            assert h.decision.reason == "tenant_queue_full"
+            assert h.decision.retry_after_s == h.retry_after
+        gw.drain()
+        assert sum(h.state is RequestState.FINISHED for h in flood) == 3
+        ts = gw.gateway_stats()["tenants"]["bulk"]
+        assert (ts["submitted"], ts["rejected"], ts["completed"]) == (10, 7, 3)
+
+    def test_global_queue_cap(self):
+        gcfg = GatewayConfig(max_queued_total=2)
+        gw = gated(gcfg)
+        handles = [gw.submit(f"t{i}", req(adapter=i % 4)) for i in range(5)]
+        reasons = [h.decision.reason for h in handles]
+        assert reasons.count("ok") == 2
+        assert reasons.count("gateway_queue_full") == 3
+        gw.drain()
+        assert all(h.done for h in handles)
+
+    def test_rejected_never_reaches_inner_tier(self):
+        gcfg = GatewayConfig(tenants={
+            "bulk": TenantPolicy(max_queued=1)})
+        gw = gated(gcfg)
+        gw.submit("bulk", req())
+        h = gw.submit("bulk", req(adapter=1))
+        assert h.state is RequestState.REJECTED
+        gw.drain()
+        assert h.req.req_id not in gw.inner.outputs
+
+
+# ------------------------------------------------------------------
+# SLO-aware overload: admit / degrade / reject are exact arithmetic
+# under a pinned wait model
+# ------------------------------------------------------------------
+class TestSLO:
+    def backlogged(self, n=10):
+        """A gateway with ``n`` same-tenant requests queued (no SLO on
+        them) under the pinned wait model: predicted wait for 'bulk' is
+        n * (32 + 128) * 0.05 = n * 8 seconds."""
+        gcfg = GatewayConfig(
+            tenants={"bulk": TenantPolicy(max_inflight=1, max_queued=64)},
+            **PINNED)
+        gw = gated(gcfg)
+        for i in range(n):
+            gw.submit("bulk", req(adapter=i % 4))
+        return gw
+
+    def test_idle_generous_budget_admits_untouched(self):
+        gw = gated(GatewayConfig(**PINNED))
+        cap = SamplingParams(max_new_tokens=64)
+        h = gw.submit("acme", req(out=64), sampling=cap, ttl=10.0)
+        assert h.decision.action == "admit"
+        assert h.req.sampling.max_new_tokens == 64
+        gw.drain()
+        assert h.state is RequestState.FINISHED
+
+    def test_wait_alone_busts_budget_rejects(self):
+        gw = self.backlogged(10)            # bulk's predicted wait: 80s
+        h = gw.submit("bulk", req(adapter=1), ttl=5.0)
+        assert h.state is RequestState.REJECTED
+        assert h.decision.reason == "predicted_slo_miss"
+        # retry_after = projected TTFT overshoot: 80 + 0.2 - 5.
+        assert h.retry_after == pytest.approx(75.2)
+
+    def test_full_decode_busts_budget_degrades(self):
+        gw = self.backlogged(10)            # projected TTFT: 80.2s
+        # Residual budget 1.8s < predicted decode 128 * 0.05 = 6.4s,
+        # but allowed = 1.8 / 0.05 * 0.8 = 28 >= floor 16 -> degrade.
+        h = gw.submit("bulk", req(out=512, adapter=1), ttl=82.0)
+        d = h.decision
+        assert d.action == "degrade"
+        assert d.reason == "predicted_slo_miss_full_decode"
+        assert d.max_new_tokens == 28
+        assert h.req.sampling.max_new_tokens == 28
+        gw.drain()
+        assert h.state is RequestState.FINISHED
+        assert len(h.tokens) <= 28
+
+    def test_degrade_floor_rejects_infeasible(self):
+        gw = self.backlogged(10)            # projected TTFT: 80.2s
+        # Residual budget 0.5s -> allowed = 0.5/0.05*0.8 = 8 < floor 16.
+        h = gw.submit("bulk", req(adapter=1), ttl=80.7)
+        assert h.state is RequestState.REJECTED
+        assert h.decision.reason == "deadline_infeasible"
+
+    def test_other_tenants_flood_does_not_reject_light_tenant(self):
+        """The wait model is fair-share-aware: a light tenant with no
+        backlog of its own must admit cleanly even while another tenant
+        has hours of queue — SFQ guarantees it near-idle service."""
+        gw = self.backlogged(50)            # bulk's own wait: 400s
+        h = gw.submit("acme", req(adapter=1), ttl=10.0)
+        assert h.decision.action == "admit"
+        assert h.decision.predicted_wait_s == pytest.approx(0.0)
+        # The same budget from the flooding tenant itself is hopeless.
+        h2 = gw.submit("bulk", req(adapter=1), ttl=10.0)
+        assert h2.decision.reason == "predicted_slo_miss"
+
+    def test_slo_default_arms_deadline(self):
+        gw = gated(GatewayConfig(slo_default_s=60.0, **PINNED))
+        h = gw.submit("acme", req())
+        assert h.req.deadline == pytest.approx(60.0)
+        assert h.decision.budget_s == pytest.approx(60.0)
+
+
+# ------------------------------------------------------------------
+# Decision traces: one per submit, on every path to a terminal state
+# ------------------------------------------------------------------
+class TestDecisionTraces:
+    def test_every_outcome_traced_and_terminal(self):
+        gcfg = GatewayConfig(
+            tenants={"bulk": TenantPolicy(max_inflight=1, max_queued=24)},
+            **PINNED)
+        gw = gated(gcfg)
+        handles = []
+        # admitted + finished
+        handles += [gw.submit("acme", req(adapter=i % 4)) for i in range(3)]
+        # rejected (backlog + hopeless ttl)
+        for i in range(10):
+            handles.append(gw.submit("bulk", req(adapter=i % 4)))
+        handles.append(gw.submit("bulk", req(adapter=1), ttl=1.0))
+        # degraded: acme's queued work halves bulk's fair share, so
+        # bulk's wait is 10 * 160 tokens / 0.5 * 0.05 = 160s; ttl 165
+        # leaves 4.8s residual < the 6.4s predicted full decode.
+        handles.append(gw.submit("bulk", req(out=512, adapter=2), ttl=165.0))
+        # cancelled while gateway-queued
+        victim = gw.submit("bulk", req(adapter=3))
+        handles.append(victim)
+        assert victim.cancel()
+        gw.drain()
+
+        assert all(h.state in TERMINAL_STATES for h in handles)
+        assert set(gw.decisions) == {h.req.req_id for h in handles}
+        actions = {h.decision.action for h in handles}
+        assert actions == {"admit", "degrade", "reject"}
+        assert gw.n_submitted == len(handles)
+        assert gw.n_cancelled_queued == 1
+
+    def test_queued_past_deadline_expires_not_drops(self):
+        """Admission was optimistic (near-zero wait model) but the
+        request sits behind a long one past its deadline: the sweep
+        must expire it in place, with its admit decision retained."""
+        gcfg = GatewayConfig(
+            tenants={"bulk": TenantPolicy(max_inflight=1)},
+            init_s_per_tok=1e-6, init_ttft_s=1e-6,
+            service_parallelism=1.0, calibrate=False)
+        gw = gated(gcfg)
+        blocker = gw.submit("bulk", req(out=64, inp=256))
+        doomed = gw.submit("bulk", req(adapter=1), ttl=0.01)
+        assert doomed.decision.action == "admit"
+        gw.drain()
+        assert blocker.state is RequestState.FINISHED
+        assert doomed.state is RequestState.EXPIRED
+        assert gw.n_expired_queued == 1
+        assert gw.gateway_stats()["tenants"]["bulk"]["expired_queued"] == 1
+
+    def test_cancel_future_held_and_dispatched(self):
+        gw = gated()
+        held = gw.submit("acme", req(arrival_time=50.0))
+        assert held.cancel()
+        assert held.state is RequestState.CANCELLED
+        live = gw.submit("acme", req(out=32, adapter=1))
+        for _ in range(3):                  # get it dispatched
+            gw.step()
+        assert live.req.req_id in gw._dispatched
+        assert live.cancel()                # delegated to the inner tier
+        gw.drain()
+        assert live.state is RequestState.CANCELLED
+        assert gw.n_cancelled_queued == 1   # only the held one
+
+
+# ------------------------------------------------------------------
+# Trace replay (future arrivals) end-to-end
+# ------------------------------------------------------------------
+class TestTraceReplay:
+    def test_multitenant_trace_all_terminal(self):
+        from repro.serving import build_node
+        _, adapters, _ = build_node("chameleon", NodeConfig(**NCFG))
+        trace = synthesize_multitenant(
+            TraceConfig(rps=0.4, duration_s=15.0, n_adapters=8, seed=5),
+            list(adapters.values()), tenants=("acme", "globex"),
+            heavy_hitter="floodcorp", heavy_rps_factor=4.0)
+        assert trace.n > 0
+        gw = gated(GatewayConfig(slo_default_s=120.0))
+        handles = [gw.submit(r.tenant, r) for r in trace.requests]
+        assert gw._future                   # held until arrival
+        gw.drain()
+        assert all(h.state in TERMINAL_STATES for h in handles)
+        assert set(gw.decisions) == {h.req.req_id for h in handles}
+        # The DES clock crossed every arrival (idle gaps advanced).
+        assert gw.inner.now >= trace.requests[-1].arrival_time
+        # Decisions deferred to arrival: no admission happened at t=0.
+        assert all(gw.decisions[h.req.req_id].t >= h.req.arrival_time - 1e-9
+                   for h in handles)
+
+
+# ------------------------------------------------------------------
+# Observability: gauges registered, documented, and exported
+# ------------------------------------------------------------------
+class TestObservability:
+    def run_small(self):
+        gw = gated(GatewayConfig(tenants={
+            "bulk": TenantPolicy(max_queued=2)}))
+        for i in range(6):
+            gw.submit("bulk" if i % 2 else "acme", req(adapter=i % 4))
+        gw.drain()
+        return gw
+
+    def test_metrics_merge_gw_gauges_and_widen_submitted(self):
+        gw = self.run_small()
+        m = gw.metrics()
+        m = m[0] if isinstance(m, tuple) else m
+        gw_keys = {k for k in m.sched_stats if k.startswith("gw_")}
+        assert gw_keys == {k for k in GAUGES if k.startswith("gw_")}
+        # n_submitted counts rejects the inner tier never saw.
+        assert m.n_submitted == gw.n_submitted == 6
+        assert m.sched_stats["gw_rejected"] == 1
+        assert m.sched_stats["gw_reject_rate"] == pytest.approx(1 / 6,
+                                                                abs=1e-4)
+
+    def test_live_gauges_all_registered(self):
+        """No tier may emit a gauge missing from the GAUGES registry
+        (which the operations doc is asserted against below)."""
+        gw = self.run_small()
+        m = gw.metrics()
+        m = m[0] if isinstance(m, tuple) else m
+        live = set(m.cache_stats) | set(m.sched_stats)
+        unregistered = {k for k in live if k not in GAUGES}
+        assert not unregistered, (
+            f"gauges emitted but not in serving.metrics.GAUGES "
+            f"(add them there and to docs/OPERATIONS.md): {unregistered}")
+
+    def test_operations_doc_covers_every_gauge(self):
+        doc = (pathlib.Path(__file__).resolve().parents[1]
+               / "docs" / "OPERATIONS.md")
+        assert doc.exists(), "docs/OPERATIONS.md is part of the product"
+        text = doc.read_text()
+        undocumented = [name for name in GAUGES if f"`{name}`" not in text]
+        assert not undocumented, (
+            f"gauges in serving.metrics.GAUGES missing from "
+            f"docs/OPERATIONS.md: {undocumented}")
+
+    def test_gateway_stats_shape(self):
+        gw = self.run_small()
+        gs = gw.gateway_stats()
+        assert gs["n_submitted"] == 6
+        assert gs["n_admitted"] + gs["n_rejected"] == 6
+        assert set(gs["lane_depths"]) == {"short", "long"}
+        for ts in gs["tenants"].values():
+            assert ts["submitted"] == ts["admitted"] + ts["rejected"]
