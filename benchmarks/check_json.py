@@ -37,6 +37,8 @@ REQUIRED_VALIDATED = {
         "all_completed", "tokens_identical", "mesh_shape", "n_devices",
         "throughput_ratio_mesh_over_single", "collective_frac"},
     "gateway": {"all_completed", "fair_tenant_p99_improves"},
+    "disagg_interference": {"all_completed", "tokens_identical",
+                            "handoffs", "prefill_util", "decode_util"},
 }
 
 

@@ -119,6 +119,91 @@ def validate_real_engine(rows) -> dict:
     }
 
 
+# ------------------------------------------------------------------
+# Prefix-affinity cell: warm radix trees vs adapter locality.
+# ------------------------------------------------------------------
+def run_prefix_affinity(n_engines: int = 2, quick: bool = True,
+                        seed: int = 0):
+    """Same-preamble requests under ``prefix_affinity`` vs
+    ``adapter_affinity`` routing: prefix keys concentrate each
+    preamble group on one replica, so its radix tree (PR 6) stays warm
+    and the cluster-wide prefix hit rate rises; adapter-keyed routing
+    scatters the groups (adapters are assigned across groups) and the
+    trees stay cold. Runs in ``prefix_mode="alora"`` — prefix pages
+    are adapter-invariant there (PR 6), so reuse is decided purely by
+    *where* a preamble's requests land, which is what this cell
+    isolates; in "exact" mode the adapter key would confound it."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core import Request
+    from repro.models import api
+    from repro.serving.cluster import EngineCluster, EngineClusterConfig
+    from repro.serving.engine import EngineConfig
+
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    ecfg = EngineConfig(max_slots=4, max_len=160, n_lora_slots=4,
+                        n_adapters=8, seed=seed, prefix_mode="alora")
+    rng = np.random.default_rng(seed)
+    n_groups = 4
+    per_group = 4 if quick else 8
+    preambles = [[int(x) for x in rng.integers(1, 200, 48)]
+                 for _ in range(n_groups)]
+
+    def mk_reqs():
+        reqs = []
+        for g, pre in enumerate(preambles):
+            for j in range(per_group):
+                suffix = [int(x) for x in rng.integers(200, 250, 8)]
+                # Adapters deliberately cut across groups: adapter
+                # locality and prefix locality point at different
+                # replicas, so the two policies actually diverge.
+                reqs.append(Request(
+                    input_len=len(pre) + len(suffix), output_len=4,
+                    adapter_id=(g + j) % ecfg.n_adapters,
+                    prompt=pre + suffix))
+        return reqs
+
+    rows = []
+    for policy in ("adapter_affinity", "prefix_affinity"):
+        rng = np.random.default_rng(seed)      # same suffixes per policy
+        cluster = EngineCluster(
+            cfg, params, ecfg,
+            EngineClusterConfig(n_engines=n_engines, policy=policy,
+                                seed=seed))
+        cluster.warmup()
+        handles = [cluster.submit(r) for r in mk_reqs()]
+        cluster.drain()
+        merged, _ = cluster.metrics()
+        sg = merged.sched_stats
+        rows.append({
+            "policy": policy, "n_engines": n_engines,
+            "completed": sum(h.done for h in handles),
+            "prefix_hit_rate": sg.get("prefix_hit_rate", 0.0),
+            "prefix_hit_tokens": sg.get("prefix_hit_tokens", 0),
+            "adapter_loads": merged.cache_stats["misses"],
+            "routed": cluster.routed.tolist(),
+        })
+    return rows
+
+
+def validate_prefix_affinity(rows) -> dict:
+    by = {r["policy"]: r for r in rows}
+    return {
+        "prefix_hit_rate_prefix_affinity": round(
+            by["prefix_affinity"]["prefix_hit_rate"], 3),
+        "prefix_hit_rate_adapter_affinity": round(
+            by["adapter_affinity"]["prefix_hit_rate"], 3),
+        "prefix_affinity_warms_trees": bool(
+            by["prefix_affinity"]["prefix_hit_rate"]
+            >= by["adapter_affinity"]["prefix_hit_rate"]),
+        "completed_all": all(r["completed"] > 0 for r in rows),
+    }
+
+
 if __name__ == "__main__":
     import argparse
 
@@ -128,6 +213,9 @@ if __name__ == "__main__":
     ap.add_argument("--real-engine", action="store_true",
                     help="drive N real JAX engine replicas instead of "
                          "the DES cluster")
+    ap.add_argument("--prefix", action="store_true",
+                    help="prefix_affinity vs adapter_affinity warm-tree "
+                         "cell (real engines)")
     ap.add_argument("--n-engines", type=int, default=2)
     ap.add_argument("--system", default="chameleon")
     ap.add_argument("--full", action="store_true")
@@ -135,7 +223,12 @@ if __name__ == "__main__":
                     help="also write {name, paper_ref, rows, validated} "
                          "to PATH (CI schema)")
     args = ap.parse_args()
-    if args.real_engine:
+    if args.prefix:
+        rows = run_prefix_affinity(n_engines=args.n_engines,
+                                   quick=not args.full)
+        validated = validate_prefix_affinity(rows)
+        variant = f"{NAME}_prefix_affinity"
+    elif args.real_engine:
         rows = run_real_engine(n_engines=args.n_engines,
                                quick=not args.full, system=args.system)
         validated = validate_real_engine(rows)

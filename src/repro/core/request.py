@@ -10,6 +10,10 @@ discrete-event simulator.
 Lifecycle (DESIGN §3):
 
     QUEUED --> LOADING --> RUNNING --> FINISHED
+       |          |           |  ^
+       |          |           |  | (disagg: prefill done, KV in flight)
+       |          |           v  |
+       |          |         MIGRATING
        |          |           |
        |          |           +-----> EXPIRED   (deadline passed)
        +----------+----------------> CANCELLED  (handle.cancel())
@@ -18,6 +22,13 @@ REJECTED is a fourth terminal state reached *before* QUEUED: gateway
 admission control (serving/gateway.py) refused entry, so no scheduler
 ever saw the request. Its handle still resolves (state + decision
 trace) — a refused submit is reported, never dropped.
+
+MIGRATING (serving/disagg.py) is the disaggregated-cluster handoff
+window: prefill completed on a prefill-role replica and the request's
+KV pages are crossing the inter-replica link to a decode replica. The
+request holds pool references on *both* ends (source pages are
+share-pinned so eviction cannot reclaim them mid-copy); cancel and
+deadline expiry remain legal and must release both sides.
 
 LOADING is the async-adapter deferral: admission pinned the adapter and
 its host->device transfer is in flight, so the request cannot be placed
@@ -45,6 +56,7 @@ class RequestState(enum.Enum):
     QUEUED = "queued"
     LOADING = "loading"       # admission pinned the adapter; H2D in flight
     RUNNING = "running"       # in the continuous batch (prefill or decode)
+    MIGRATING = "migrating"   # disagg: KV handoff prefill -> decode replica
     FINISHED = "finished"
     CANCELLED = "cancelled"   # handle.cancel() before completion
     EXPIRED = "expired"       # deadline/TTL passed before completion

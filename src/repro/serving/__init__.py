@@ -18,3 +18,5 @@ from .trace import (Trace, TraceConfig, downscale_for_engine,
                     load_azure_csv, synthesize, synthesize_multitenant)
 from .cluster import (POLICIES, Cluster, ClusterConfig, EngineCluster,
                       EngineClusterConfig, Router, run_cluster)
+from .disagg import (DisaggCluster, DisaggConfig, KVHandoff,
+                     RoleAutoscaler)

@@ -25,10 +25,17 @@ Routing policies (``Router``):
   is the cluster policy the Chameleon cache makes profitable: it
   raises hit rates and cuts host->device adapter traffic without
   load-imbalance pathologies.
+- ``prefix_affinity``             — consistent hash of the prompt's
+  first KV page of token ids, so same-preamble requests land where the
+  radix prefix tree (PR 6) is warm; spills to least-loaded like
+  adapter_affinity when the target is overloaded. Promptless requests
+  fall back to adapter-keyed hashing.
 
 Nodes run independently (no cross-node migration — the paper treats
-migration as out of scope) and metrics merge via
-``metrics.merge_metrics``.
+migration as out of scope; the *disaggregated* cluster in
+``serving/disagg.py`` relaxes exactly this, migrating each request
+once, prefill→decode, over an explicit KV handoff plane) and metrics
+merge via ``metrics.merge_metrics``.
 """
 from __future__ import annotations
 
@@ -37,15 +44,29 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .handles import DRAIN_MAX_STEPS
 from .metrics import RunMetrics, merge_metrics
 from .systems import NodeConfig, build_node
 from .trace import Trace, TraceConfig, synthesize
 
-POLICIES = ("round_robin", "random", "least_loaded", "adapter_affinity")
+POLICIES = ("round_robin", "random", "least_loaded", "adapter_affinity",
+            "prefix_affinity")
 
 
 def _stable_hash(key: str) -> int:
     return int.from_bytes(hashlib.md5(key.encode()).digest()[:8], "big")
+
+
+def prefix_route_key(req, page_size: int = 16):
+    """Routing key for ``prefix_affinity``: the prompt's first KV page
+    of token ids. Two requests sharing a system prompt/few-shot
+    preamble agree on this key, so a consistent hash of it lands them
+    on the same replica — the one whose radix tree (PR 6) already holds
+    their preamble's pages. Requests without real prompt tokens fall
+    back to adapter-keyed routing (None)."""
+    if req.prompt is None or len(req.prompt) == 0:
+        return None
+    return tuple(req.prompt[:page_size])
 
 
 class Router:
@@ -68,21 +89,25 @@ class Router:
         self._rr = 0
         self._hint: dict[int, int] = {}         # adapter -> last node
 
-    def _hash_node(self, adapter_id: int, nodes=None) -> int:
+    def _hash_key(self, key: str, nodes=None) -> int:
         """Rendezvous (highest-random-weight) hash: deterministic,
-        uniform, and adding/removing a node only remaps ~1/N adapters."""
+        uniform, and adding/removing a node only remaps ~1/N keys."""
         nodes = range(self.n) if nodes is None else nodes
-        return max(nodes,
-                   key=lambda nd: _stable_hash(f"a{adapter_id}:n{nd}"))
+        return max(nodes, key=lambda nd: _stable_hash(f"{key}:n{nd}"))
+
+    def _hash_node(self, adapter_id: int, nodes=None) -> int:
+        return self._hash_key(f"a{adapter_id}", nodes)
 
     def route(self, adapter_id: int, loads=None,
-              resident=None) -> int:
+              resident=None, prefix_key=None) -> int:
         """Pick a node.
 
         ``loads``: per-node queue-pressure signal, or None when the
         frontend has no load feed (then affinity degrades to pure
         consistent hashing — still deterministic and cache-friendly);
-        ``resident``: optional per-node bool, adapter currently cached.
+        ``resident``: optional per-node bool, adapter currently cached;
+        ``prefix_key``: ``prefix_route_key(req)`` output, consumed only
+        by the ``prefix_affinity`` policy.
         """
         if self.policy == "round_robin":
             node = self._rr
@@ -99,6 +124,21 @@ class Router:
         # load-based (or hash-based, without a load feed) placement.
         if self.policy == "least_loaded":
             return least
+        if self.policy == "prefix_affinity":
+            # Consistent hash of the prompt's first page of token ids:
+            # same-preamble requests converge on the replica whose radix
+            # tree already holds their prefix pages, so the suffix-only
+            # prefill (PR 6) actually fires cluster-wide. Promptless
+            # requests degrade to adapter-keyed hashing; an overloaded
+            # target spills to least-loaded exactly like
+            # adapter_affinity (warmth is worthless behind a deep queue).
+            target = (self._hash_key(f"p{_stable_hash(repr(prefix_key))}")
+                      if prefix_key is not None
+                      else self._hash_node(adapter_id))
+            if loads is not None and loads[target] \
+                    > self.overload_factor * max(1.0, loads[least]):
+                target = least
+            return target
         target = None
         if resident is not None:
             res_nodes = [i for i, r in enumerate(resident) if r]
@@ -160,7 +200,8 @@ class Cluster:
         loads = [sim.queue_pressure() for sim in self.nodes]
         resident = [sim.cache.resident(req.adapter_id)
                     for sim in self.nodes]
-        node = self.router.route(req.adapter_id, loads, resident)
+        node = self.router.route(req.adapter_id, loads, resident,
+                                 prefix_key=prefix_route_key(req))
         handle = self.nodes[node].submit(
             req, sampling=sampling, on_token=on_token, ttl=ttl)
         handle.node = node
@@ -181,7 +222,7 @@ class Cluster:
     def busy(self) -> bool:
         return any(sim.busy() for sim in self.nodes)
 
-    def drain(self, max_steps: int = 2_000_000) -> None:
+    def drain(self, max_steps: int = DRAIN_MAX_STEPS) -> None:
         for _ in range(max_steps):
             if not self.busy():
                 break
@@ -218,7 +259,8 @@ class Cluster:
                 while h and h[0] <= req.arrival_time:
                     heapq.heappop(h)
                     self._outstanding[i] -= 1
-            node = self.router.route(req.adapter_id, self._outstanding)
+            node = self.router.route(req.adapter_id, self._outstanding,
+                                     prefix_key=prefix_route_key(req))
             per_node[node].append(req)
             self._outstanding[node] += 1
             est_service = 1.0 + 0.01 * req.output_len
@@ -342,7 +384,9 @@ class EngineCluster:
         loads = [e.queue_pressure() for e in self.engines]
         resident = [e.cache.resident(req.adapter_id)
                     for e in self.engines]
-        node = self.router.route(req.adapter_id, loads, resident)
+        node = self.router.route(
+            req.adapter_id, loads, resident,
+            prefix_key=prefix_route_key(req, self.ecfg.page_size))
         handle = self.engines[node].submit(
             req, sampling=sampling, on_token=on_token, ttl=ttl)
         handle.node = node
@@ -371,7 +415,7 @@ class EngineCluster:
         stacking clusters behind a higher-level balancer)."""
         return float(sum(e.queue_pressure() for e in self.engines))
 
-    def drain(self, max_steps: int = 10_000) -> None:
+    def drain(self, max_steps: int = DRAIN_MAX_STEPS) -> None:
         for _ in range(max_steps):
             if not self.busy():
                 break

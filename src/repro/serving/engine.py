@@ -199,6 +199,17 @@ class EngineConfig:
     # global, so a mesh>1 engine is token-identical to mesh=1 — the
     # parity lock ``tests/test_sharded_engine.py`` asserts.
     mesh_shape: Optional[tuple] = None
+    # Chunked prefill (ROADMAP 3 stepping stone): a prompt longer than
+    # this many tokens prefills in chunks of this size — one chunk per
+    # engine step — instead of one monolithic jit'd call, so in-flight
+    # decodes keep stepping between chunks and a long prefill can no
+    # longer stall them for its full duration. Paged mode only (chunks
+    # write straight into the slot's pages via the suffix-prefill entry
+    # point). Tokens are unchanged: each chunk attends to all previously
+    # written positions, so the final logits match the monolithic
+    # prefill bit-for-bit. 0 disables (the seed behavior, and the A/B
+    # baseline of ``benchmarks/disagg_interference.py``).
+    prefill_chunk_tokens: int = 0
 
 
 class AdapterCatalog:
@@ -422,6 +433,23 @@ class ChameleonEngine:
         self.n_preempted = 0                   # paged: out-of-page squashes
         self.n_cancelled = 0
         self.n_expired = 0
+        # Chunked prefill (``EngineConfig.prefill_chunk_tokens``): slots
+        # whose prompt is mid-prefill. The slot holds its request and
+        # all prompt pages but stays off the active mask until the last
+        # chunk produces the first token, so decode steps interleave
+        # with the chunks. slot -> {"req", "prompt", "done"}.
+        self._chunked: dict[int, dict] = {}
+        self.n_chunked_prefills = 0
+        # Disaggregated serving (serving/disagg.py): requests detached
+        # from decode by ``begin_migration`` while their KV crosses to
+        # a decode replica. The slot stays occupied (slot_req set,
+        # active False) until complete/abort, so its pool holds and
+        # shared-page refs keep the KV pinned mid-handoff.
+        # req_id -> slot.
+        self._migrating: dict[int, int] = {}
+        self.n_kv_exports = 0
+        self.n_kv_imports = 0
+        self.kv_handoff_bytes = 0
         # Lifecycle fast path: deadline/cancel sweeps run only once a
         # request armed them (keeps the hot step loop scan-free).
         self._deadlines_armed = False
@@ -972,6 +1000,14 @@ class ChameleonEngine:
             # the handle after cancel() returned.
             handle._push(pos, tok)
 
+    def _free_slots(self) -> list[int]:
+        """Slots a new placement may take: off the active mask *and*
+        holding no request. A slot can be inactive yet occupied — a
+        chunked prefill in progress, or a MIGRATING request whose KV is
+        mid-handoff — and clobbering either would corrupt its pages."""
+        return [s for s in range(self.ecfg.max_slots)
+                if not self.active[s] and self.slot_req[s] is None]
+
     def _place_batch(self, reqs: list[Request]) -> None:
         """Batched prefill admission: one jit'd prefill over a (B, S)
         bucket covers every request admitted this iteration.
@@ -983,9 +1019,18 @@ class ChameleonEngine:
         """
         if not reqs:
             return
+        e = self.ecfg
+        if self.paged and e.prefill_chunk_tokens > 0:
+            big = [r for r in reqs if r.input_len > e.prefill_chunk_tokens]
+            if big:
+                reqs = [r for r in reqs
+                        if r.input_len <= e.prefill_chunk_tokens]
+                self._start_chunked(big)
+            if not reqs:
+                return
         if self.prefix is not None:
             return self._place_batch_prefix(reqs)
-        free = [int(s) for s in np.where(~self.active)[0]]
+        free = self._free_slots()
         if self.paged:
             # Allocate each request's prompt pages up front; a request
             # whose prompt cannot get pages even after shrinking the
@@ -1098,7 +1143,7 @@ class ChameleonEngine:
         one jit — a miss is simply start=0). Freshly computed full
         prompt pages are adopted into the tree afterwards."""
         now = self.now()
-        free = [int(s) for s in np.where(~self.active)[0]]
+        free = self._free_slots()
         ps = self.pool.page_size
         placed, slots, starts, prompts = [], [], [], []
         for req in reqs:
@@ -1236,6 +1281,279 @@ class ChameleonEngine:
             self.pool.add_shared_page(pid)
             self.pool.share_pages([pid])
             self.slot_shared[slot].append(pid)
+
+    # ------------------------------------------------- chunked prefill
+    def _start_chunked(self, reqs: list[Request]) -> None:
+        """Admit long prompts onto slots without prefilling them yet:
+        the slot takes the request and all its prompt pages up front
+        (so the memory admission decision is identical to the
+        monolithic path — a prompt that cannot get pages bounces via
+        the squash path exactly as before), then ``_advance_chunked``
+        runs one ``prefill_chunk_tokens`` chunk per engine step."""
+        now = self.now()
+        free = self._free_slots()
+        n_placed = 0
+        for req in reqs:
+            slot = free[n_placed]
+            self.slot_req[slot] = req
+            if self._grow_slot(slot, self.pool.pages_for(req.input_len),
+                               now):
+                # The decode dispatches that run between chunks write
+                # their per-row KV at ``cache_len[row]`` for *every*
+                # slot, masked or not — inactive rows are harmless only
+                # because their page-table row points at the trash
+                # page. So the real row lives privately here until
+                # activation; the global table keeps the trash mapping.
+                row = self.page_table[slot].copy()
+                self.page_table[slot, :] = 0
+                self._page_table_dirty = True
+                self._chunked[slot] = {
+                    "req": req, "prompt": self._prompt_tokens(req),
+                    "done": 0, "table": row}
+                self.n_chunked_prefills += 1
+                n_placed += 1
+            else:
+                self.slot_req[slot] = None
+                self.n_preempted += 1
+                self.sched.on_squash(req, now)
+
+    def _advance_chunked(self) -> None:
+        """Run one prefill chunk for every mid-prefill slot (each is a
+        B=1 suffix-prefill call: chunk tokens attend to all previously
+        written positions, so the final logits — and therefore every
+        token — match the monolithic prefill). The last chunk's logits
+        produce the first token and the slot joins the decode batch."""
+        if not self._chunked:
+            return
+        if self.plan is not None:
+            self.kv_pages = self._commit(self.kv_pages, self._kv_sh)
+        chunk = self.ecfg.prefill_chunk_tokens
+        for slot in sorted(self._chunked):
+            st = self._chunked[slot]
+            req = st["req"]
+            done = st["done"]
+            L = req.input_len
+            n = min(chunk, L - done)
+            S = 1 << max(3, (n - 1).bit_length())
+            toks = np.zeros((1, S), np.int32)
+            toks[0, :n] = st["prompt"][done:done + n]
+            row_table = st["table"][None, :]
+            lslot = self.slot_of[req.adapter_id]
+            with self._act_scope():
+                logits, self.kv_pages = self._get_prefill_paged_jit(1, S)(
+                    self.params, self._prefill_lora(), jnp.asarray(toks),
+                    self.kv_pages, jnp.asarray(row_table),
+                    jnp.asarray([done], np.int32),
+                    jnp.asarray([n], np.int32),
+                    jnp.asarray([lslot], np.int32), S)
+            st["done"] = done + n
+            if st["done"] >= L:
+                del self._chunked[slot]
+                self.page_table[slot] = st["table"]
+                self._page_table_dirty = True
+                self._activate_chunked(slot, req, logits, lslot)
+
+    def _activate_chunked(self, slot: int, req: Request, logits,
+                          lslot: int) -> None:
+        """Last chunk landed: sample the first token and join the
+        decode batch — the same bookkeeping the monolithic placement
+        runs after its prefill call."""
+        if self._all_greedy([req]):
+            first = int(np.asarray(
+                jnp.argmax(logits[0:1], axis=-1).astype(jnp.int32))[0])
+        else:
+            first = int(np.asarray(self._sample_jit(
+                logits[0:1], *self._sampling_arrays([req], 1,
+                                                    first=True)))[0])
+        now = self.now()
+        self.active[slot] = True
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        self.cache_len = self.cache_len.at[slot].set(req.input_len)
+        self.adapter_slot = self.adapter_slot.at[slot].set(lslot)
+        req.generated = 1
+        rid = req.req_id
+        if req.preserved_tokens:
+            self.outputs[rid] = list(req.preserved_tokens)
+            self._tbts[rid] = list(req.preserved_tbts)
+            if req.last_stream_time is not None:
+                self._last_tok[rid] = req.last_stream_time
+        else:
+            self.outputs[rid] = []
+            self._tbts[rid] = []
+            req.first_token_time = now
+        self._record_token(req, 0, first, now)
+        self.batch_epoch += 1
+        if req.done or self._hit_stop(req):
+            self._finish(slot)
+
+    # ------------------------------------------- KV handoff (disagg)
+    def begin_migration(self, req: Request) -> Optional[dict]:
+        """Detach ``req`` from decode and serialize its KV for a
+        prefill->decode handoff (serving/disagg.py). Returns the
+        shipment dict, or None when the request is not in a migratable
+        state (mid-chunk-prefill, already finished, or not here).
+
+        The slot is *not* freed: slot_req stays set (so no placement
+        can take the slot), the request's pool holds and shared-page
+        refs stay live (so neither the prefix tree's LRU eviction nor
+        the adapter cache's shrink can reclaim the pages mid-copy), and
+        the request enters MIGRATING. ``complete_migration`` (transfer
+        landed) or ``abort_migration`` (cancel/deadline) releases it.
+        """
+        self._sync_inflight()
+        slot = next((i for i, r in enumerate(self.slot_req) if r is req),
+                    None)
+        if slot is None or slot in self._chunked \
+                or not self.active[slot] or req.terminal:
+            return None
+        cache_len = req.input_len + req.generated - 1
+        pending = int(np.asarray(self.tokens)[slot, 0])
+        if self.paged:
+            n_pages = self.pool.pages_for(cache_len)
+            pages = self.slot_pages[slot][:n_pages]
+            kp, vp = self.kv_pages
+            idx = jnp.asarray(np.asarray(pages, np.int32))
+            k_pay = np.asarray(kp[:, idx])
+            v_pay = np.asarray(vp[:, idx])
+        else:
+            k, v = self.kv
+            k_pay = np.asarray(k[:, slot, :cache_len])
+            v_pay = np.asarray(v[:, slot, :cache_len])
+        rid = req.req_id
+        shipment = {
+            "req": req,
+            "cache_len": cache_len,
+            "pending_token": pending,
+            "paged": self.paged,
+            "k": k_pay, "v": v_pay,
+            "nbytes": int(k_pay.nbytes + v_pay.nbytes),
+            # Streamed-token state moves with the request so the decode
+            # replica's bookkeeping (dedup positions, TBT reference
+            # point) continues exactly where the source stopped.
+            "outputs": self.outputs.pop(rid, []),
+            "tbts": self._tbts.pop(rid, []),
+            "last_tok": self._last_tok.pop(rid, None),
+            "handle": self.handles.pop(rid, None),
+        }
+        req.state = RequestState.MIGRATING
+        self.active[slot] = False
+        self._migrating[rid] = slot
+        self.batch_epoch += 1
+        return shipment
+
+    def complete_migration(self, req: Request) -> None:
+        """The shipment landed on the decode replica: release this
+        end — adapter pin (scheduler on_finish), KV pages, the slot."""
+        slot = self._migrating.pop(req.req_id, None)
+        if slot is None:
+            return
+        now = self.now()
+        self.sched.on_finish(req, now)
+        self._free_slot_pages(slot, req.req_id)
+        self.slot_req[slot] = None
+        self.batch_epoch += 1
+        self.n_kv_exports += 1
+
+    def abort_migration(self, req: Request,
+                        state: RequestState = RequestState.CANCELLED,
+                        shipment: Optional[dict] = None) -> bool:
+        """Cancel / deadline expiry while MIGRATING: finalize on the
+        source (the destination never saw the request). The shipment,
+        when passed back, restores the streamed-token records that
+        export popped, so ``handle.result()`` still reports the tokens
+        and TBTs the user actually saw."""
+        slot = self._migrating.pop(req.req_id, None)
+        if slot is None:
+            return False
+        if shipment is not None:
+            rid = req.req_id
+            self.outputs[rid] = list(shipment["outputs"])
+            self._tbts[rid] = list(shipment["tbts"])
+            if shipment["handle"] is not None:
+                self.handles[rid] = shipment["handle"]
+        self._finalize_slot(slot, state)
+        return True
+
+    def import_request_kv(self, shipment: dict) -> bool:
+        """Decode-replica end of the handoff: pin the adapter, reserve
+        pages in this pool, scatter the shipped KV in, restore the
+        streamed-token state and join the decode batch. Returns False
+        (with nothing held) when a slot, the adapter, or pages are not
+        available — the caller retries next step.
+
+        The adapter load this may trigger is flushed synchronously
+        (``flush_loads``): the modeled H2D time already overlapped the
+        KV transfer on the link, and the disagg router pre-warms decode
+        replicas, so a blocking flush here is the rare path."""
+        self._sync_inflight()
+        req = shipment["req"]
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        now = self.now()
+        aid = req.adapter_id
+        rid = req.req_id
+        cache_len = shipment["cache_len"]
+        protect = self.sched.queued_adapter_ids() - {aid}
+        need = (self.pool.pages_for(cache_len) * self.pool.page_size
+                if self.paged else req.input_len + req.predicted_output)
+        extra = (0 if self.cache.resident(aid)
+                 else self.catalog.infos[aid].size_tokens)
+        if not self.cache.shrink_for_requests(need + extra, now, protect):
+            return False
+        try:
+            self.cache.acquire(aid, now, queued_protect=protect)
+        except PoolError:
+            return False
+        if not self.cache.is_ready(aid):
+            self.flush_loads()
+        self.slot_req[slot] = req
+        if self.paged:
+            if not self._grow_slot(slot, self.pool.pages_for(cache_len),
+                                   now):
+                self.slot_req[slot] = None
+                self.cache.release(aid, now)
+                return False
+            pages = self.slot_pages[slot]
+            idx = jnp.asarray(np.asarray(pages, np.int32))
+            kp, vp = self.kv_pages
+            kp = kp.at[:, idx].set(jnp.asarray(shipment["k"]))
+            vp = vp.at[:, idx].set(jnp.asarray(shipment["v"]))
+            self.kv_pages = (kp, vp)
+            self._page_table_dirty = True
+        else:
+            try:
+                self.pool.reserve_request(rid, need)
+            except PoolError:
+                self.slot_req[slot] = None
+                self.cache.release(aid, now)
+                return False
+            req.reserved_tokens = need
+            k, v = self.kv
+            k = k.at[:, slot, :cache_len].set(jnp.asarray(shipment["k"]))
+            v = v.at[:, slot, :cache_len].set(jnp.asarray(shipment["v"]))
+            self.kv = (k, v)
+        req.adapter_ref = True
+        self.active[slot] = True
+        self.tokens = self.tokens.at[slot, 0].set(
+            shipment["pending_token"])
+        self.cache_len = self.cache_len.at[slot].set(cache_len)
+        self.adapter_slot = self.adapter_slot.at[slot].set(
+            self.slot_of[aid])
+        self.outputs[rid] = list(shipment["outputs"])
+        self._tbts[rid] = list(shipment["tbts"])
+        if shipment["last_tok"] is not None:
+            self._last_tok[rid] = shipment["last_tok"]
+        if shipment["handle"] is not None:
+            self.handles[rid] = shipment["handle"]
+        req.state = RequestState.RUNNING
+        if req.deadline is not None:
+            self._deadlines_armed = True
+        self.batch_epoch += 1
+        self.n_kv_imports += 1
+        self.kv_handoff_bytes += shipment["nbytes"]
+        return True
 
     def _hit_stop(self, req: Request) -> bool:
         """Did the latest recorded token hit a SamplingParams stop id?"""
@@ -1384,6 +1702,16 @@ class ChameleonEngine:
                 self._finalize_slot(int(slot), RequestState.CANCELLED)
             elif req.deadline is not None and now >= req.deadline:
                 self._finalize_slot(int(slot), RequestState.EXPIRED)
+        # Mid-chunk prefills are off the active mask but hold a slot
+        # and pages — cancel/expiry must reap them here too.
+        for slot in list(self._chunked):
+            req = self._chunked[slot]["req"]
+            if req.cancel_requested:
+                del self._chunked[slot]
+                self._finalize_slot(slot, RequestState.CANCELLED)
+            elif req.deadline is not None and now >= req.deadline:
+                del self._chunked[slot]
+                self._finalize_slot(slot, RequestState.EXPIRED)
         # A cancel that raced placement (neither queued nor in a slot
         # at cancel() time) is caught here once it settles somewhere.
         if self._cancel_races:
@@ -1430,6 +1758,7 @@ class ChameleonEngine:
         admitted = self.sched.schedule(now, running)
         self._run_prefetchers(now)
         self._place_batch(admitted)
+        self._advance_chunked()
         if self.paged:
             self._ensure_decode_pages()
         if not self.active.any():
@@ -1501,6 +1830,7 @@ class ChameleonEngine:
         in-flight adapter loads to poll."""
         return bool(self._deadlines_armed or self._cancel_armed
                     or self._cancel_races or self._pending_loads
+                    or self._chunked
                     or self.sched.pending_count() > 0)
 
     def _refresh_device_state(self) -> None:
@@ -1753,6 +2083,7 @@ class ChameleonEngine:
         admitted = self.sched.schedule(now, running)
         self._run_prefetchers(now)
         self._place_batch(admitted)
+        self._advance_chunked()
         if self.paged:
             self._ensure_decode_pages(self._host_lens())
         if not self.active.any():
@@ -1768,8 +2099,12 @@ class ChameleonEngine:
             self._drain_inflight()
 
     def busy(self) -> bool:
-        """True while any work is in flight or queued."""
-        return bool(self.active.any()) or self.sched.pending_count() > 0
+        """True while any work is in flight or queued. Mid-prefill
+        chunked slots count; MIGRATING slots do not — their next step
+        belongs to the handoff plane (the disagg cluster's ``busy``
+        covers in-flight shipments)."""
+        return (bool(self.active.any()) or bool(self._chunked)
+                or self.sched.pending_count() > 0)
 
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
@@ -1798,6 +2133,10 @@ class ChameleonEngine:
         self.n_cancelled = 0
         self.n_expired = 0
         self.n_async_loads = 0
+        self.n_chunked_prefills = 0
+        self.n_kv_exports = 0
+        self.n_kv_imports = 0
+        self.kv_handoff_bytes = 0
         # Prefix-cache hit accounting restarts; the cached pages stay
         # resident (warm prefixes, like warm adapters).
         self.prefix_hit_tokens = 0
@@ -1826,6 +2165,18 @@ class ChameleonEngine:
         return {"kv_pages_used": used, "kv_pages_total": total,
                 "kv_page_util": used / max(1, total),
                 "preempted": self.n_preempted}
+
+    def handoff_stats(self) -> dict:
+        """Chunked-prefill / KV-handoff gauges (zeros when unused)."""
+        if not (self.n_chunked_prefills or self.n_kv_exports
+                or self.n_kv_imports or self._chunked
+                or self._migrating):
+            return {}
+        return {"chunked_prefills": self.n_chunked_prefills,
+                "kv_exports": self.n_kv_exports,
+                "kv_imports": self.n_kv_imports,
+                "kv_handoff_gb": round(self.kv_handoff_bytes / 1e9, 6),
+                "migrating": len(self._migrating)}
 
     def prefix_stats(self) -> dict:
         """Prefix-reuse gauges (empty dict when the cache is off)."""
@@ -1896,6 +2247,7 @@ class ChameleonEngine:
             "fused_hotloop": self.fused,
             "batch_epoch": self.batch_epoch,
             **self.kv_page_stats(),
+            **self.handoff_stats(),
             **self.prefix_stats(),
             **self.shard_stats(),
         }
@@ -1927,6 +2279,7 @@ class ChameleonEngine:
                 float(np.mean(self.batch_occupancy))
                 if self.batch_occupancy else 0.0, 3),
             **self.kv_page_stats(),
+            **self.handoff_stats(),
             **self.prefix_stats(),
             **self.shard_stats(),
         }

@@ -55,7 +55,7 @@ from repro.core.predictor import HistogramPredictor, predict_request
 from repro.core.request import Request, RequestState
 from repro.core.sampling import GREEDY, SamplingParams
 
-from .handles import RequestHandle, prepare_request
+from .handles import DRAIN_MAX_STEPS, RequestHandle, prepare_request
 
 LANES = ("short", "long")
 
@@ -609,7 +609,7 @@ class Gateway:
         return bool(self._future or self._total_queued()
                     or self.inner.busy())
 
-    def drain(self, max_steps: int = 2_000_000) -> None:
+    def drain(self, max_steps: int = DRAIN_MAX_STEPS) -> None:
         for _ in range(max_steps):
             if not self.busy():
                 return

@@ -46,6 +46,15 @@ import numpy as np
 from repro.core.request import Request, RequestState
 from repro.core.sampling import SamplingParams
 
+#: One drain bound for every tier. ``drain()`` exits as soon as the
+#: system goes idle, so the cap only matters as a hang backstop — but
+#: the historical split (DES cluster 2M, engine cluster 10k) meant a
+#: long trace could silently under-drain the engine tier and report a
+#: truncated run as complete. A DES step is microseconds and an engine
+#: step milliseconds; 2M bounds both at minutes of wall time while
+#: being unreachable by any healthy workload in this repo.
+DRAIN_MAX_STEPS = 2_000_000
+
 
 @dataclass
 class RequestResult:
@@ -205,7 +214,7 @@ class ServingSystem(Protocol):
 
     def busy(self) -> bool: ...
 
-    def drain(self, max_steps: int = 10_000) -> None: ...
+    def drain(self, max_steps: int = DRAIN_MAX_STEPS) -> None: ...
 
     def cancel(self, handle: RequestHandle) -> bool: ...
 

@@ -61,6 +61,25 @@ GAUGES: dict = {
     "per_shard_lora_slot_bytes": ("bytes", "LoRA arena bytes on one device"),
     "collective_frac": ("ratio", "wall-time fraction spent in collectives"),
     "collective_dispatches": ("count", "jit dispatches containing collectives"),
+    # Disaggregated prefill/decode (serving/disagg.py). The first five
+    # are per-engine (chunked prefill + KV handoff endpoints); the rest
+    # are cluster-level, injected by DisaggCluster.metrics().
+    "chunked_prefills": ("count", "prefill chunks executed (chunked prefill)"),
+    "kv_exports": ("count", "requests whose KV was exported (handoff src)"),
+    "kv_imports": ("count", "requests whose KV was imported (handoff dst)"),
+    "kv_handoff_gb": ("GB", "KV bytes scattered in on the import side"),
+    "migrating": ("requests", "requests currently in the MIGRATING window"),
+    "prefill_nodes": ("count", "replicas currently in the prefill role"),
+    "decode_nodes": ("count", "replicas currently in the decode role"),
+    "spilled_prefills": ("count", "requests spilled back to decode replicas"),
+    "role_rebalances": ("count", "replicas moved across roles (autoscaler)"),
+    "prefill_util": ("ratio", "mean batch-slot occupancy, prefill tier"),
+    "decode_util": ("ratio", "mean batch-slot occupancy, decode tier"),
+    "handoffs": ("count", "KV shipments delivered prefill->decode"),
+    "handoff_gb": ("GB", "KV bytes moved over the inter-replica link"),
+    "handoff_wait_s": ("seconds", "mean export->import handoff latency"),
+    "handoffs_inflight": ("requests", "shipments on the modeled link now"),
+    "handoffs_dropped": ("count", "shipments cancelled/expired in flight"),
     # Gateway (serving/gateway.py).
     "gw_submitted": ("count", "requests submitted through the gateway"),
     "gw_admitted": ("count", "requests admitted (incl. degraded)"),

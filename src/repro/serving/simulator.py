@@ -44,7 +44,7 @@ from repro.core import (AdapterCache, ChameleonScheduler, MemoryPool,
 from repro.core.prefetcher import HistogramPrefetcher
 
 from .cost_model import CostModel
-from .handles import RequestHandle, prepare_request
+from .handles import DRAIN_MAX_STEPS, RequestHandle, prepare_request
 from .metrics import RequestRecord, RunMetrics
 from .trace import Trace
 
@@ -428,7 +428,7 @@ class NodeSimulator:
             if self.sched.pending_count():
                 self._force_drain_step()
 
-    def drain(self, max_steps: int = 2_000_000) -> None:
+    def drain(self, max_steps: int = DRAIN_MAX_STEPS) -> None:
         self._drain_attempts = 0
         for _ in range(max_steps):
             if not self.busy() or self._deadlocked():

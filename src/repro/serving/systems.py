@@ -139,7 +139,7 @@ def build_engine(system: str, cfg, params, ecfg=None, catalog=None,
 # The single serving factory (DESIGN §3): one system matrix, three
 # execution tiers, one ServingSystem surface.
 # ------------------------------------------------------------------
-TIERS = ("sim", "engine", "cluster", "sim-cluster")
+TIERS = ("sim", "engine", "cluster", "sim-cluster", "disagg")
 
 
 def _default_model():
@@ -171,7 +171,11 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
     tier="cluster"      N real engines behind a router
                         (``EngineCluster``, shared AdapterCatalog);
     tier="sim-cluster"  N DES nodes behind the same router
-                        (``Cluster``).
+                        (``Cluster``);
+    tier="disagg"       N real engines split into prefill and decode
+                        roles with a paged-KV handoff between them
+                        (``DisaggCluster``; n_nodes splits
+                        floor(n/2) prefill / rest decode).
 
     Every tier serves the same surface: ``submit() -> RequestHandle``,
     ``step``, ``busy``, ``drain``, ``cancel``, ``queue_pressure``,
@@ -193,7 +197,8 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
     """
     if tier not in TIERS:
         raise ValueError(f"unknown tier {tier!r}; one of {TIERS}")
-    if mesh_shape is not None and tier not in ("engine", "cluster"):
+    if mesh_shape is not None and tier not in ("engine", "cluster",
+                                               "disagg"):
         raise ValueError(
             f"mesh_shape applies to the real-engine tiers, not {tier!r}")
 
@@ -223,6 +228,12 @@ def build_system(system: str = "chameleon", tier: str = "engine", *,
                                    mesh_shape=tuple(mesh_shape))
     if tier == "engine":
         return _gated(build_engine(system, model_cfg, params, ecfg))
+    if tier == "disagg":
+        from .disagg import DisaggCluster, DisaggConfig
+        n_prefill = max(1, n_nodes // 2)
+        return _gated(DisaggCluster(model_cfg, params, ecfg, DisaggConfig(
+            n_prefill=n_prefill, n_decode=max(1, n_nodes - n_prefill),
+            system=system, seed=seed)))
     from .cluster import EngineCluster, EngineClusterConfig
     return _gated(EngineCluster(model_cfg, params, ecfg, EngineClusterConfig(
         n_engines=n_nodes, system=system, policy=policy, seed=seed)))

@@ -1,0 +1,422 @@
+"""Disaggregated prefill/decode serving (DESIGN §3.4): KV handoff
+correctness, MIGRATING lifecycle, role-aware routing, chunked prefill.
+
+The hard invariants under test:
+
+- **handoff parity** — a request whose KV migrated engine->engine
+  (paged or dense, COW-shared prefix pages included) streams exactly
+  the tokens a single engine would have produced;
+- **pool safety** — ``MemoryPool.check_invariants`` holds on *both*
+  ends mid-handoff (source pages pinned, destination pages reserved);
+- **MIGRATING lifecycle** — cancel and deadline expiry inside the
+  handoff window finalize cleanly with the streamed-token records
+  intact and both ends released;
+- **routing** — prefill-tier saturation spills back to decode
+  replicas; the disagg tier serves the ServingSystem protocol.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request
+from repro.core.request import RequestState
+from repro.models import api
+from repro.serving import ServingSystem, build_system
+from repro.serving.cluster import EngineCluster, EngineClusterConfig
+from repro.serving.disagg import (DisaggCluster, DisaggConfig,
+                                  RoleAutoscaler)
+from repro.serving.engine import ChameleonEngine, EngineConfig
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+def make_engine(small_model, **kw):
+    cfg, params = small_model
+    defaults = dict(max_slots=4, max_len=128, n_lora_slots=4,
+                    n_adapters=8, seed=0)
+    defaults.update(kw)
+    return ChameleonEngine(cfg, params, EngineConfig(**defaults))
+
+
+def make_disagg(small_model, ecfg_kw=None, **dkw):
+    cfg, params = small_model
+    defaults = dict(max_slots=4, max_len=128, n_lora_slots=4,
+                    n_adapters=8, seed=0)
+    defaults.update(ecfg_kw or {})
+    dcfg = dict(n_prefill=1, n_decode=2, link_gbps=8.0, seed=0)
+    dcfg.update(dkw)
+    return DisaggCluster(cfg, params, EngineConfig(**defaults),
+                         DisaggConfig(**dcfg))
+
+
+def _prompt(rng, n):
+    return [int(x) for x in rng.integers(1, 200, n)]
+
+
+def _run_to_generated(eng, handle, n):
+    """Step until the request has streamed ``n`` tokens (horizon-1
+    source engines expose each token at the step boundary)."""
+    for _ in range(10_000):
+        if len(handle.tokens) >= n or handle.done:
+            return
+        eng.step()
+    raise AssertionError("request never reached the target progress")
+
+
+def _check_pools(*engines):
+    for e in engines:
+        if e.paged:
+            e.pool.check_invariants(free_page_ids=e.free_pages)
+
+
+class TestKVHandoffParity:
+    """Round-trip page serialization: export mid-decode on A, import
+    into B, finish there — tokens must match the single-engine run."""
+
+    @pytest.mark.parametrize("paged", [True, False])
+    def test_migrated_tokens_match_baseline(self, small_model, paged):
+        rng = np.random.default_rng(5)
+        prompt = _prompt(rng, 25)
+
+        base = make_engine(small_model, paged=paged)
+        hb = base.submit(Request(input_len=25, output_len=10,
+                                 adapter_id=1, prompt=list(prompt)))
+        base.drain()
+        want = hb.tokens
+        assert len(want) == 10
+
+        src = make_engine(small_model, paged=paged, max_horizon=1,
+                          pipeline_readback=False)
+        dst = make_engine(small_model, paged=paged)
+        req = Request(input_len=25, output_len=10, adapter_id=1,
+                      prompt=list(prompt))
+        h = src.submit(req)
+        _run_to_generated(src, h, 3)
+        ship = src.begin_migration(req)
+        assert ship is not None
+        assert req.state is RequestState.MIGRATING
+        assert not req.terminal          # MIGRATING is not terminal
+        _check_pools(src, dst)           # source pages pinned, not freed
+        assert dst.import_request_kv(ship)
+        src.complete_migration(req)
+        _check_pools(src, dst)
+        assert req.state is RequestState.RUNNING
+        # The handle keeps streaming from the destination.
+        h._system = dst
+        dst.drain()
+        assert h.done and req.state is RequestState.FINISHED
+        assert h.tokens == want
+        assert src.n_kv_exports == 1 and dst.n_kv_imports == 1
+        assert dst.kv_handoff_bytes == ship["nbytes"] > 0
+        res = h.result()
+        assert len(res.tbts) == 9        # every inter-token gap recorded
+
+    def test_cow_shared_pages_survive_migration(self, small_model):
+        """A request whose slot maps radix-tree shared pages (prefix
+        hit) migrates correctly: the exported payload contains the
+        shared pages' bits and both pools stay consistent."""
+        rng = np.random.default_rng(7)
+        pre = _prompt(rng, 32)           # two full pages of preamble
+
+        base = make_engine(small_model, prefix_cache=True)
+        warm = base.submit(Request(input_len=32, output_len=4,
+                                   adapter_id=2, prompt=list(pre)))
+        base.drain()
+        hb = base.submit(Request(input_len=32, output_len=8,
+                                 adapter_id=2, prompt=list(pre)))
+        base.drain()
+        want = hb.tokens
+
+        src = make_engine(small_model, prefix_cache=True,
+                          max_horizon=1, pipeline_readback=False)
+        dst = make_engine(small_model)
+        w = src.submit(Request(input_len=32, output_len=4,
+                               adapter_id=2, prompt=list(pre)))
+        src.drain()
+        assert w.done
+        req = Request(input_len=32, output_len=8, adapter_id=2,
+                      prompt=list(pre))
+        h = src.submit(req)
+        _run_to_generated(src, h, 2)
+        assert src.n_prefix_hits >= 1    # the slot really shares pages
+        ship = src.begin_migration(req)
+        assert ship is not None
+        _check_pools(src, dst)
+        assert dst.import_request_kv(ship)
+        src.complete_migration(req)
+        _check_pools(src, dst)
+        h._system = dst
+        dst.drain()
+        assert h.tokens == want
+
+
+class TestMigratingLifecycle:
+    def _export(self, small_model, ttl=None):
+        src = make_engine(small_model, max_horizon=1,
+                          pipeline_readback=False)
+        req = Request(input_len=20, output_len=12, adapter_id=0)
+        h = src.submit(req, ttl=ttl)
+        _run_to_generated(src, h, 3)
+        ship = src.begin_migration(req)
+        assert ship is not None
+        return src, req, h, ship
+
+    def test_cancel_mid_handoff(self, small_model):
+        src, req, h, ship = self._export(small_model)
+        assert src.abort_migration(req, RequestState.CANCELLED,
+                                   shipment=ship)
+        assert req.state is RequestState.CANCELLED
+        _check_pools(src)
+        assert not src._migrating and src.busy() is False
+        # Streamed records survived the export/abort round trip.
+        res = h.result()
+        assert res.state is RequestState.CANCELLED
+        assert len(res.tokens) == 3 and len(res.tbts) == 2
+
+    def test_expiry_mid_handoff(self, small_model):
+        src, req, h, ship = self._export(small_model, ttl=30.0)
+        assert src.abort_migration(req, RequestState.EXPIRED,
+                                   shipment=ship)
+        assert req.state is RequestState.EXPIRED
+        _check_pools(src)
+        # The slot is reusable afterwards.
+        h2 = src.submit(Request(input_len=8, output_len=3, adapter_id=1))
+        src.drain()
+        assert h2.done and len(h2.tokens) == 3
+
+    def test_abort_after_import_refusal_leaves_dst_clean(self,
+                                                         small_model):
+        """A destination with zero free slots refuses the import
+        without holding anything; the source can still abort."""
+        src, req, h, ship = self._export(small_model)
+        dst = make_engine(small_model, max_slots=2)
+        blockers = [dst.submit(Request(input_len=8, output_len=40,
+                                       adapter_id=i)) for i in range(2)]
+        while not dst.active.all():
+            dst.step()
+        assert dst.import_request_kv(ship) is False
+        _check_pools(dst)
+        assert src.abort_migration(req, RequestState.CANCELLED,
+                                   shipment=ship)
+        dst.drain()
+        assert all(b.done for b in blockers)
+
+    def test_cluster_cancel_while_on_link(self, small_model):
+        """handle.cancel() during the modeled link transfer: the
+        cluster aborts on the source and the handle resolves."""
+        dis = make_disagg(small_model, link_gbps=1e-6)   # ~never lands
+        req = Request(input_len=20, output_len=12, adapter_id=0)
+        h = dis.submit(req)
+        for _ in range(10_000):
+            if req.state is RequestState.MIGRATING:
+                break
+            dis.step()
+        assert req.state is RequestState.MIGRATING
+        assert h.cancel()
+        dis.step()
+        assert req.state is RequestState.CANCELLED
+        assert dis.handoff.n_dropped == 1
+        assert not dis.busy()
+        _check_pools(*dis.engines)
+
+    def test_cluster_expiry_while_on_link(self, small_model):
+        dis = make_disagg(small_model, link_gbps=1e-6)
+        dis.warmup()          # jit compiles must not eat the TTL
+        req = Request(input_len=20, output_len=12, adapter_id=0)
+        dis.submit(req, ttl=1.5)
+        for _ in range(10_000):
+            if req.state is RequestState.MIGRATING:
+                break
+            dis.step()
+        assert req.state is RequestState.MIGRATING
+        import time
+        deadline = time.monotonic() + 30.0
+        while req.state is RequestState.MIGRATING \
+                and time.monotonic() < deadline:
+            dis.step()
+        assert req.state is RequestState.EXPIRED
+        assert not dis.busy()
+        _check_pools(*dis.engines)
+
+
+class TestDisaggCluster:
+    def test_tokens_match_monolithic_cluster(self, small_model):
+        cfg, params = small_model
+        spec = [(25, 8, 0), (6, 5, 1), (40, 6, 2), (10, 4, 0),
+                (33, 7, 3), (12, 3, 1), (50, 5, 4)]
+
+        def mk():
+            rng = np.random.default_rng(3)
+            return [Request(input_len=L, output_len=O, adapter_id=a,
+                            prompt=_prompt(rng, L))
+                    for L, O, a in spec]
+
+        ecfg = EngineConfig(max_slots=4, max_len=128, n_lora_slots=4,
+                            n_adapters=8, seed=0)
+        mono = EngineCluster(cfg, params, ecfg,
+                             EngineClusterConfig(n_engines=3, seed=0))
+        mono.warmup()
+        want = [mono.submit(r) for r in mk()]
+        mono.drain()
+
+        dis = make_disagg(small_model)
+        dis.warmup()
+        got = [dis.submit(r) for r in mk()]
+        dis.drain()
+        assert all(h.done and h.state is RequestState.FINISHED
+                   for h in got)
+        for a, b in zip(want, got):
+            assert a.tokens == b.tokens
+        s = dis.stats()
+        assert s["handoff"]["handoffs"] + s["spilled_prefills"] \
+            == len(spec)
+        assert s["handoff"]["handoffs"] >= 1
+        _check_pools(*dis.engines)
+
+    def test_spillback_when_prefill_saturated(self, small_model):
+        """spill_factor below any realizable pressure ratio forces
+        every submit after the first onto the decode tier (an *idle*
+        prefill tier, pressure 0, never counts as saturated) — spilled
+        requests run monolithically there with no handoff."""
+        dis = make_disagg(small_model, spill_factor=1e-9)
+        hs = [dis.submit(Request(input_len=10, output_len=4,
+                                 adapter_id=i % 4)) for i in range(5)]
+        assert dis.n_spilled == 4        # only the idle-tier submit stayed
+        dis.drain()
+        assert all(h.done for h in hs)
+        assert dis.handoff.n_begun == 1
+        # Spilled requests landed on decode replicas.
+        assert sum(len(e.records) for e in dis.decode) >= 4
+
+    def test_rank_aware_decode_homes_spread(self, small_model):
+        """Fresh adapters home by cumulative resident-rank load, so
+        the first two distinct adapters land on different replicas."""
+        dis = make_disagg(small_model)
+        r1 = Request(input_len=8, output_len=2, adapter_id=0)
+        r2 = Request(input_len=8, output_len=2, adapter_id=1)
+        h1 = dis._decode_home(r1)
+        h2 = dis._decode_home(r2)
+        assert h1 is not h2
+        # Sticky: the same adapter keeps its home.
+        assert dis._decode_home(r1) is h1
+
+    def test_protocol_conformance_and_factory(self, small_model):
+        cfg, params = small_model
+        sys_ = build_system(
+            tier="disagg", model_cfg=cfg, params=params,
+            ecfg=EngineConfig(max_slots=4, max_len=128, n_lora_slots=4,
+                              n_adapters=8, seed=0),
+            n_nodes=3)
+        assert isinstance(sys_, DisaggCluster)
+        assert isinstance(sys_, ServingSystem)
+        assert len(sys_.prefill) == 1 and len(sys_.decode) == 2
+        h = sys_.submit(Request(input_len=12, output_len=4,
+                                adapter_id=0))
+        got = list(h.stream())
+        assert len(got) == 4 and h.done
+
+    def test_gauges_registered(self, small_model):
+        from repro.serving.metrics import GAUGES
+        dis = make_disagg(small_model)
+        hs = [dis.submit(Request(input_len=20, output_len=4,
+                                 adapter_id=i % 3)) for i in range(3)]
+        dis.drain()
+        assert all(h.done for h in hs)
+        merged, per = dis.metrics()
+        live = set(merged.cache_stats) | set(merged.sched_stats)
+        for m in per:
+            live |= set(m.cache_stats) | set(m.sched_stats)
+        missing = live - set(GAUGES)
+        assert not missing, f"unregistered gauges: {sorted(missing)}"
+
+
+class TestRoleAutoscaler:
+    def test_plan_follows_demand(self):
+        asc = RoleAutoscaler()
+        for _ in range(8):
+            asc.observe(prefill_tokens=4000.0, decode_tokens=100.0)
+        plan = asc.plan(1, 3)
+        assert plan["want_prefill"] > 1
+        assert plan["want_prefill"] + plan["want_decode"] == 4
+        assert plan["prefill_plan"].n_devices == plan["want_prefill"]
+        for _ in range(16):
+            asc.observe(prefill_tokens=10.0, decode_tokens=5000.0)
+        plan = asc.plan(2, 2)
+        assert plan["want_prefill"] == 1 and plan["want_decode"] == 3
+
+    def test_apply_moves_idle_replica(self, small_model):
+        dis = make_disagg(small_model, n_prefill=1, n_decode=2,
+                          autoscale_apply=True)
+        # Decode-heavy forever: the planner wants prefill at the
+        # 1-replica floor, so no move happens from (1, 2)...
+        dis.autoscaler.observe(10.0, 5000.0)
+        dis.last_role_plan = dis.autoscaler.plan(1, 2)
+        dis._maybe_rebalance()
+        assert len(dis.prefill) == 1 and dis.n_rebalances == 0
+        # ...while a prefill-heavy plan pulls an idle decode replica
+        # over and rebuilds the prefill router.
+        for _ in range(8):
+            dis.autoscaler.observe(5000.0, 10.0)
+        dis.last_role_plan = dis.autoscaler.plan(1, 2)
+        assert dis.last_role_plan["want_prefill"] == 2
+        dis._maybe_rebalance()
+        assert len(dis.prefill) == 2 and len(dis.decode) == 1
+        assert dis.router.n == 2
+        assert dis.n_rebalances == 1
+        # The shrunk decode tier still serves correctly.
+        h = dis.submit(Request(input_len=10, output_len=3, adapter_id=0))
+        dis.drain()
+        assert h.done and len(h.tokens) == 3
+
+
+class TestChunkedPrefill:
+    """Chunked prefill on a monolithic engine (the disagg benchmark's
+    other arm): token parity with chunk=0 and clean cancellation
+    mid-chunk."""
+
+    def test_token_parity_with_monolithic_prefill(self, small_model):
+        spec = [(25, 8, 0), (6, 5, 1), (40, 6, 2), (10, 4, 0),
+                (33, 7, 3)]
+
+        def run(chunk):
+            eng = make_engine(small_model, prefill_chunk_tokens=chunk)
+            rng = np.random.default_rng(11)
+            hs = [eng.submit(Request(input_len=L, output_len=O,
+                                     adapter_id=a,
+                                     prompt=_prompt(rng, L)))
+                  for L, O, a in spec]
+            eng.drain()
+            assert all(h.done for h in hs)
+            return [h.tokens for h in hs], eng
+
+        want, _ = run(0)
+        got, eng = run(8)
+        assert got == want
+        assert eng.n_chunked_prefills > 0
+        _check_pools(eng)
+
+    def test_cancel_mid_chunk(self, small_model):
+        eng = make_engine(small_model, prefill_chunk_tokens=4)
+        req = Request(input_len=60, output_len=8, adapter_id=0)
+        h = eng.submit(req)
+        for _ in range(200):
+            eng.step()
+            if eng._chunked:
+                break
+        assert eng._chunked
+        assert h.cancel()
+        eng.drain()
+        assert req.state is RequestState.CANCELLED
+        assert not eng._chunked
+        _check_pools(eng)
+        # The freed slot serves the next request.
+        h2 = eng.submit(Request(input_len=8, output_len=3, adapter_id=1))
+        eng.drain()
+        assert h2.done and len(h2.tokens) == 3
