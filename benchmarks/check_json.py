@@ -25,7 +25,14 @@ REQUIRED_VALIDATED = {
         "dispatch_ratio", "dispatch_ratio_ge_2x", "kv_donated",
         "host_sync_fraction_seed", "host_sync_fraction_fused",
     },
+    "spec_decode": {
+        "tokens_identical", "spec_accept_rate",
+        "speedup_tokens_per_sec", "speedup_ge_1_3x",
+        "dispatches_per_token_nonspec", "dispatches_per_token_spec",
+    },
     "fig10_latency_load_paged_ab": {"all_completed", "tokens_identical"},
+    "fig10_latency_load_spec_ab": {
+        "all_completed", "tokens_identical", "spec_accept_rate"},
     "fig10_latency_load_loading_ab": {
         "all_completed", "overlap_beats_sync_p99_ttft"},
     "fig10_latency_load_hotloop_ab": {"all_completed",

@@ -23,6 +23,16 @@ double-buffered KV; the seed loop keeps it alive).
 Emits the CI-checked BENCH JSON schema via ``--json`` (see
 ``benchmarks/check_json.py``); ``--quick`` shrinks the workload for
 the bench-smoke job.
+
+``--spec`` switches to the speculative-decoding A/B
+(``name="spec_decode"``): the one variable is
+``EngineConfig.spec_decode``, measured with a draft that is *exactly*
+the target's first layer (the target's remaining layers have their
+residual-writing projections zeroed, so draft and target logits are
+bit-identical — acceptance 1.0 at 1/n_layers draft cost, the regime
+speculation is built for). Reported per cell: tokens/sec, acceptance
+rate, draft/verify/total dispatches per token, spec_k_eff, and
+greedy token identity to the non-speculative loop.
 """
 from __future__ import annotations
 
@@ -31,11 +41,12 @@ import time
 import numpy as np
 
 NAME = "decode_hotloop"
+SPEC_NAME = "spec_decode"
 PAPER_REF = "Chameleon hot path; S-LoRA (arXiv 2311.03285) unified memory"
 
 
 def _engine(cfg, params, *, fused, paged, seed=0, max_slots=4,
-            max_len=384):
+            max_len=384, spec=False, draft=None, catalog=None):
     from repro.serving.engine import ChameleonEngine, EngineConfig
 
     # Async loading and the prefetchers are pinned off so both loops
@@ -45,7 +56,8 @@ def _engine(cfg, params, *, fused, paged, seed=0, max_slots=4,
         max_slots=max_slots, max_len=max_len, n_lora_slots=4,
         n_adapters=4, seed=seed, paged=paged, fused_hotloop=fused,
         async_load=False, queued_prefetch=False,
-        histogram_prefetch=False))
+        histogram_prefetch=False, spec_decode=spec),
+        draft=draft, catalog=catalog)
 
 
 def _drain(eng, max_steps=200_000):
@@ -175,6 +187,186 @@ def run_squash_cell(cfg, params, *, fused, output_len, seed=0):
     return row, [h.tokens]
 
 
+def _shared_layer_draft(cfg, params):
+    """Build the measurement pair for the spec A/B.
+
+    Zero the residual-writing projections (attention ``o``, MLP
+    ``down``) of every target layer but the first: those layers then
+    add exact zeros to the residual stream, so the target's logits are
+    computed entirely by layer 0 + embeddings + head. The draft is a
+    1-layer config sharing exactly those parameters — its logits are
+    bit-identical to the target's, acceptance is 1.0 by construction,
+    and a draft step costs 1/n_layers of a target step. This isolates
+    the *mechanism* speedup (fewer target dispatches per token) from
+    draft quality, which is model-dependent.
+    """
+    from dataclasses import replace
+
+    tparams = dict(params)
+    for k in ("layers/o", "layers/down"):
+        tparams[k] = tparams[k].at[1:].set(0.0)
+    dcfg = replace(cfg, n_layers=1)
+    dparams = {k: (v[:1] if k.startswith("layers/") else v)
+               for k, v in tparams.items()}
+    return tparams, dcfg, dparams
+
+
+def _zeroed_catalog(cfg, n_adapters=4, r_max=32):
+    """LoRA adapters with zero delta: the adapter-free draft then sees
+    the same logits path as the adapter-applied target."""
+    import jax.numpy as jnp
+
+    from repro.serving.engine import AdapterCatalog
+
+    cat = AdapterCatalog(cfg, n_adapters, r_max, seed=0)
+    for aid in cat.weights:
+        cat.weights[aid] = {
+            k: (jnp.zeros_like(a), jnp.zeros_like(b))
+            for k, (a, b) in cat.weights[aid].items()}
+    return cat
+
+
+def run_spec_cell(cfg, params, *, spec, paged, sampled, draft,
+                  output_len, seed=0):
+    """One measured drain with/without speculation (both engines run
+    the fused loop; ``spec_decode`` is the A/B's only variable)."""
+    from repro.core import Request, SamplingParams
+    from repro.kernels.ops import DISPATCH_METER
+
+    eng = _engine(cfg, params, fused=True, paged=paged, seed=seed,
+                  spec=spec, draft=draft if spec else None,
+                  catalog=_zeroed_catalog(cfg))
+    sp = (SamplingParams(temperature=0.8, top_k=16, top_p=0.95,
+                         seed=seed + 1) if sampled else None)
+    B = eng.ecfg.max_slots
+
+    warm = [eng.submit(Request(input_len=16, output_len=3 * 8,
+                               adapter_id=i), sampling=sp)
+            for i in range(B)]
+    _drain(eng)
+    assert all(len(h.tokens) == 3 * 8 for h in warm)
+
+    tokens = wall = n_disp = n_draft = n_verify = st = None
+    for _ in range(2):
+        eng.reset_stats()
+        handles = [eng.submit(Request(input_len=16,
+                                      output_len=output_len,
+                                      adapter_id=i), sampling=sp)
+                   for i in range(B)]
+        DISPATCH_METER.reset()
+        t0 = time.perf_counter()
+        _drain(eng)
+        w = time.perf_counter() - t0
+        toks = [h.tokens for h in handles]
+        assert tokens is None or toks == tokens, "non-deterministic run"
+        if wall is None or w < wall:
+            tokens, wall = toks, w
+            n_disp = DISPATCH_METER.dispatches
+            n_draft = DISPATCH_METER.draft_dispatches
+            n_verify = DISPATCH_METER.verify_dispatches
+            st = eng.spec_stats()
+    n_tok = sum(len(t) for t in tokens)
+    assert n_tok == B * output_len, "truncated run"
+
+    row = {
+        "mode": ("spec" if spec else "nonspec"),
+        "kv": ("paged" if paged else "dense"),
+        "sampling": ("sampled" if sampled else "greedy"),
+        "tokens": n_tok,
+        "wall_s": round(wall, 4),
+        "tokens_per_sec": round(n_tok / wall, 2),
+        "dispatches_per_token": round(n_disp / n_tok, 4),
+        "draft_dispatches_per_token": round(n_draft / n_tok, 4),
+        "verify_dispatches_per_token": round(n_verify / n_tok, 4),
+        "spec_accept_rate": st.get("spec_accept_rate", 0.0),
+        "spec_k_eff": st.get("spec_k_eff", 0),
+    }
+    return row, tokens
+
+
+def run_spec(quick: bool = False, seed: int = 0):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import api as model_api
+
+    # Compute-weighted sizing (vs the dispatch-bound config above):
+    # speculation trades per-token *target* forwards for cheap draft
+    # forwards plus one batched verify, so the target step must carry
+    # real compute for the trade to show.
+    cfg = get_config("chameleon-llama-7b").reduced(
+        n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+        d_ff=512, vocab_size=1024)
+    base = model_api.init_params(cfg, jax.random.PRNGKey(seed),
+                                 jnp.float32)
+    params, dcfg, dparams = _shared_layer_draft(cfg, base)
+    # Guard the construction: draft argmax must equal target argmax.
+    probe = jax.random.randint(jax.random.PRNGKey(seed + 2), (2, 12),
+                               0, cfg.vocab_size)
+    tl, _ = model_api.prefill(cfg, params, probe)
+    dl, _ = model_api.prefill(dcfg, dparams, probe)
+    assert (jnp.argmax(tl, -1) == jnp.argmax(dl, -1)).all(), (
+        "shared-layer draft is not logit-identical to the target")
+    output_len = 96 if quick else 192
+    draft = (dcfg, dparams)
+
+    rows = []
+    greedy_identical = True
+    for paged in (False, True):
+        for sampled in (False, True):
+            pair = {}
+            for spec in (False, True):
+                row, toks = run_spec_cell(
+                    cfg, params, spec=spec, paged=paged,
+                    sampled=sampled, draft=draft,
+                    output_len=output_len, seed=seed)
+                pair[spec] = (row, toks)
+            # Greedy speculation is bit-identical by construction;
+            # sampled speculation is distribution-preserving (rejection
+            # sampling), deterministic per seed but not token-identical
+            # to the non-speculative sampler — so identity is asserted
+            # on the greedy cells only.
+            same = (pair[True][1] == pair[False][1]) if not sampled \
+                else None
+            if not sampled:
+                greedy_identical &= same
+            for spec in (False, True):
+                pair[spec][0]["tokens_identical_to_nonspec"] = same
+                rows.append(pair[spec][0])
+    return rows, greedy_identical
+
+
+def validate_spec(rows, greedy_identical) -> dict:
+    def mean_over(mode, field):
+        xs = [r[field] for r in rows if r["mode"] == mode]
+        return float(np.mean(xs))
+
+    speedup = (mean_over("spec", "tokens_per_sec")
+               / mean_over("nonspec", "tokens_per_sec"))
+    spec_rows = [r for r in rows if r["mode"] == "spec"]
+    accept = float(np.mean([r["spec_accept_rate"] for r in spec_rows]))
+    return {
+        # Acceptance gates (ISSUE 10): greedy token identity, >=1.3x
+        # decode throughput at high acceptance, and the dispatch
+        # accounting that explains it.
+        "tokens_identical": bool(greedy_identical),
+        "spec_accept_rate": round(accept, 4),
+        "speedup_tokens_per_sec": round(speedup, 2),
+        "speedup_ge_1_3x": bool(speedup >= 1.3),
+        "dispatches_per_token_nonspec": round(
+            mean_over("nonspec", "dispatches_per_token"), 4),
+        "dispatches_per_token_spec": round(
+            mean_over("spec", "dispatches_per_token"), 4),
+        "draft_dispatches_per_token": round(
+            mean_over("spec", "draft_dispatches_per_token"), 4),
+        "verify_dispatches_per_token": round(
+            mean_over("spec", "verify_dispatches_per_token"), 4),
+        "spec_k_eff": float(np.mean([r["spec_k_eff"]
+                                     for r in spec_rows])),
+    }
+
+
 def run(quick: bool = False, seed: int = 0):
     import jax
     import jax.numpy as jnp
@@ -275,18 +467,28 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--spec", action="store_true",
+                    help="speculative-decoding A/B instead of the "
+                         "fused-vs-seed A/B")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write {name, paper_ref, rows, validated} "
                          "(CI schema)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
-    rows, identical = run(quick=args.quick, seed=args.seed)
-    validated = validate(rows, identical)
+    if args.spec:
+        rows, identical = run_spec(quick=args.quick, seed=args.seed)
+        validated = validate_spec(rows, identical)
+        name = SPEC_NAME
+    else:
+        rows, identical = run(quick=args.quick, seed=args.seed)
+        validated = validate(rows, identical)
+        name = NAME
     for r in rows:
         print(r)
     print(validated)
     if args.json:
-        print("wrote", emit_json(args.json, NAME, PAPER_REF, rows,
+        print("wrote", emit_json(args.json, name, PAPER_REF, rows,
                                  validated))
     assert validated["tokens_identical"], (
-        "fused hot loop changed decoded tokens")
+        "speculation changed greedy tokens" if args.spec
+        else "fused hot loop changed decoded tokens")

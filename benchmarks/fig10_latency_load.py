@@ -310,6 +310,120 @@ def validate_hotloop(rows) -> dict:
     }
 
 
+def run_spec_ab(n_requests: int = 32, seed: int = 0,
+                quick: bool = False) -> list[dict]:
+    """A/B the *real* engine: fused loop with vs without speculative
+    draft-verify decoding, at identical end-to-end load (queue
+    backlog, adapter churn, admission — not just the
+    ``decode_hotloop.py --spec`` hot-loop isolation). Same model, same
+    requests, same control plane — the only variable is
+    ``EngineConfig.spec_decode``. The draft is the target's own first
+    layer (remaining layers' residual projections zeroed, LoRA deltas
+    zeroed), so acceptance is 1.0 by construction and the A/B measures
+    the mechanism: under backlog speculation demotes itself to K=1
+    (TTFT untouched), opening drafted bursts as the queue drains.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import Request
+    from repro.models import api as model_api
+    from repro.serving.engine import ChameleonEngine, EngineConfig
+
+    from benchmarks.decode_hotloop import (_shared_layer_draft,
+                                           _zeroed_catalog)
+
+    cfg = get_config("chameleon-llama-7b").reduced()
+    base = model_api.init_params(cfg, jax.random.PRNGKey(seed),
+                                 jnp.float32)
+    params, dcfg, dparams = _shared_layer_draft(cfg, base)
+    if quick:
+        n_requests = min(n_requests, 16)
+    rng = np.random.default_rng(seed)
+    specs = [(int(rng.integers(16, 48)), int(rng.integers(32, 128)),
+              int(rng.integers(0, 16))) for _ in range(n_requests)]
+
+    rows = []
+    tokens_by_mode = {}
+    for spec in (False, True):
+        eng = ChameleonEngine(cfg, params, EngineConfig(
+            max_slots=4, max_len=256, n_lora_slots=16, n_adapters=16,
+            seed=seed, fused_hotloop=True, spec_decode=spec,
+            async_load=False, queued_prefetch=False,
+            histogram_prefetch=False),
+            catalog=_zeroed_catalog(cfg, n_adapters=16),
+            draft=(dcfg, dparams) if spec else None)
+        # Warmup: a full batch of medium decodes so the fused-horizon
+        # *and* speculative jit shapes (draft catch-up buckets, spec
+        # rounds) compile before the measured phase.
+        for i in range(4):
+            eng.submit(Request(input_len=16, output_len=3 * 8,
+                               adapter_id=12 + i))
+        eng.run_until_drained()
+        eng.reset_stats()
+        reqs = []
+        for i, o, a in specs:
+            r = Request(input_len=i, output_len=o, adapter_id=a)
+            r.arrival_time = eng.now()
+            reqs.append(r)
+        handles = [eng.submit(r) for r in reqs]
+        steps = 0
+        while eng.busy() and steps < 200_000:
+            eng.step()
+            eng.pool.check_invariants()
+            steps += 1
+        m = eng.metrics()
+        mode = "spec" if spec else "nonspec"
+        tokens_by_mode[mode] = [h.tokens for h in handles]
+        # Uniform row keys across arms (CI schema): the nonspec arm
+        # reports zeroed speculation gauges.
+        sstats = {"spec_accept_rate": 0.0, "spec_drafted_tokens": 0,
+                  "spec_accepted_tokens": 0, "spec_draft_dispatches": 0,
+                  "spec_verify_dispatches": 0, "spec_dispatches": 0,
+                  "spec_k_eff": 0}
+        sstats.update(eng.spec_stats())
+        rows.append({
+            "mode": mode,
+            "submitted": n_requests,
+            "completed": len(eng.completed),
+            "p50_ttft": m.p50_ttft(),
+            "p99_ttft": m.p99_ttft(),
+            "p99_tbt": m.p99_tbt(),
+            "steps": steps,
+            "tokens_identical_to_nonspec":
+                tokens_by_mode.get("nonspec") == tokens_by_mode[mode],
+            **sstats,
+        })
+    return rows
+
+
+def validate_spec(rows) -> dict:
+    non = next(r for r in rows if r["mode"] == "nonspec")
+    sp = next(r for r in rows if r["mode"] == "spec")
+    return {
+        "all_completed":
+            non["completed"] == non["submitted"]
+            and sp["completed"] == sp["submitted"],
+        # The tentpole bar, held end-to-end through the scheduler:
+        # greedy speculation changes dispatch counts, never tokens.
+        "tokens_identical": bool(sp["tokens_identical_to_nonspec"]),
+        "spec_accept_rate": sp["spec_accept_rate"],
+        "spec_drafted_tokens": sp["spec_drafted_tokens"],
+        "spec_verify_dispatches": sp["spec_verify_dispatches"],
+        "p99_ttft_nonspec": round(non["p99_ttft"], 4),
+        "p99_ttft_spec": round(sp["p99_ttft"], 4),
+        "p99_tbt_nonspec": round(non["p99_tbt"], 4),
+        "p99_tbt_spec": round(sp["p99_tbt"], 4),
+        "e2e_steps_nonspec": non["steps"],
+        "e2e_steps_spec": sp["steps"],
+        # Directional (wall-clock on a shared runner, like the hotloop
+        # A/B): K=1 demotion under backlog must keep TTFT tails flat.
+        "spec_not_worse_p99_ttft":
+            sp["p99_ttft"] <= non["p99_ttft"] * 1.05,
+    }
+
+
 def run_prefix_ab(n_requests: int = 32, seed: int = 0,
                   quick: bool = False) -> list[dict]:
     """A/B the *real* engine: prefix KV reuse off vs on, at identical
@@ -493,6 +607,10 @@ if __name__ == "__main__":
     ap.add_argument("--hotloop", action="store_true",
                     help="A/B the real engine seed vs fused decode "
                          "hot loop at identical load")
+    ap.add_argument("--spec", action="store_true",
+                    help="A/B the real engine fused loop with vs "
+                         "without speculative draft-verify decoding "
+                         "at identical load")
     ap.add_argument("--prefix", action="store_true",
                     help="A/B the real engine prefix KV reuse off vs "
                          "on (exact + cross-adapter aLoRA modes) on a "
@@ -514,6 +632,10 @@ if __name__ == "__main__":
         rows = run_hotloop_ab(quick=args.quick)
         validated = validate_hotloop(rows)
         variant = f"{NAME}_hotloop_ab"
+    elif args.spec:
+        rows = run_spec_ab(quick=args.quick)
+        validated = validate_spec(rows)
+        variant = f"{NAME}_spec_ab"
     elif args.prefix:
         rows = run_prefix_ab(quick=args.quick)
         validated = validate_prefix(rows)

@@ -67,3 +67,48 @@ class SamplingParams:
 
 
 GREEDY = SamplingParams()
+
+
+# ------------------------------------------- speculative decoding rule
+#
+# Draft–verify speculation must stay deterministic under the same
+# contract as ``sample_tokens``: every random draw is keyed on
+# *(seed, token position)* only, so a squash/requeue that re-executes a
+# request's prefix regenerates bit-identical tokens even though the
+# draft/verify *round boundaries* land differently on the second run.
+# Each position therefore derives one base key
+# ``fold_in(PRNGKey(seed), position)`` (the non-spec sampler's key) and
+# splits it into independent streams by folding in a stream tag:
+#
+#   SPEC_DRAFT_FOLD     Gumbel noise for the draft model's proposal
+#   SPEC_ACCEPT_FOLD    the uniform for the rejection-sampling accept
+#   SPEC_RESIDUAL_FOLD  Gumbel noise for the residual resample on reject
+#
+# The *bonus* token (all drafts accepted) is drawn from the base key
+# with no fold — i.e. by ``sample_tokens`` itself — so a fully-accepted
+# round ends with exactly the token the non-speculative loop would have
+# sampled at that position. Greedy rows (temperature <= 0) never touch
+# these streams: acceptance is an argmax comparison against the target
+# logits, which makes greedy speculation bit-identical by construction.
+SPEC_DRAFT_FOLD = 1
+SPEC_ACCEPT_FOLD = 2
+SPEC_RESIDUAL_FOLD = 3
+
+
+def spec_residual_reference(p, q):
+    """Reference residual distribution for rejection sampling.
+
+    Pure-Python/numpy-friendly oracle the spec-decode tests check the
+    device rule against: after a draft token from ``q`` is rejected
+    against target probs ``p`` (accept prob ``min(1, p[d]/q[d])``), the
+    replacement is drawn from ``normalize(max(p - q, 0))`` — the unique
+    choice that makes the emitted token exactly ``p``-distributed.
+    Degenerate case ``p == q`` (residual mass 0) falls back to ``p``;
+    the accept probability is 1 there, so the branch is never taken on
+    device.
+    """
+    r = [max(pi - qi, 0.0) for pi, qi in zip(p, q)]
+    s = sum(r)
+    if s <= 0.0:
+        return list(p)
+    return [ri / s for ri in r]

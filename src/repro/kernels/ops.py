@@ -49,18 +49,36 @@ class DispatchMeter:
     numbers the fused device-resident loop exists to shrink. A plain
     counter + accumulator: the per-step cost is one int add, so the
     meter stays on in production paths.
+
+    Speculative decoding splits device work into two phases the meter
+    counts separately on top of ``dispatches``: ``draft_dispatches``
+    (draft-model forward passes — the chained proposal steps plus the
+    draft prefill/catch-up calls) and ``verify_dispatches`` (multi-token
+    target verify passes). ``dispatches`` still counts *jit dispatches
+    launched*, so one fused speculative round ticks ``tick(1)`` plus
+    the per-phase counts of the forwards folded inside it.
     """
 
     def __init__(self) -> None:
         self.dispatches = 0
+        self.draft_dispatches = 0
+        self.verify_dispatches = 0
         self.sync_seconds = 0.0
 
     def reset(self) -> None:
         self.dispatches = 0
+        self.draft_dispatches = 0
+        self.verify_dispatches = 0
         self.sync_seconds = 0.0
 
     def tick(self, n: int = 1) -> None:
         self.dispatches += n
+
+    def tick_draft(self, n: int = 1) -> None:
+        self.draft_dispatches += n
+
+    def tick_verify(self, n: int = 1) -> None:
+        self.verify_dispatches += n
 
     @contextlib.contextmanager
     def sync(self):

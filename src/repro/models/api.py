@@ -88,6 +88,77 @@ def decode_fused_paged(cfg, params, tokens, kv_pages, page_table,
                                  temperature, top_k, top_p, seeds, **kw)
 
 
+# --------------------------------------------- speculative draft–verify
+def supports_spec_draft(cfg: ModelConfig) -> bool:
+    """Families usable as the *draft* model of speculative decoding.
+
+    The draft runs chained single-token ``lm.decode_step``s on a dense
+    KV slab inside the speculative scan, so only dense decoder LMs
+    qualify for now (MoE drafting is pointless — the draft should be
+    cheap; SSM/hybrid carry non-KV state the scan does not thread).
+    The *target* additionally needs ``supports_fused``.
+    """
+    return cfg.family == Family.DENSE
+
+
+def verify(cfg, params, tokens, kv_caches, cache_len, **kw):
+    """Multi-token target forward over dense KV returning all-position
+    logits (B, S, V) — the verify half of speculative decoding."""
+    if not supports_fused(cfg):
+        raise NotImplementedError(
+            f"verify forward unsupported for family {cfg.family}")
+    return lm.verify(cfg, params, tokens, kv_caches, cache_len, **kw)
+
+
+def verify_paged(cfg, params, tokens, kv_pages, page_table, cache_len,
+                 **kw):
+    """Multi-token target forward over paged KV (all-position logits)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged verify unsupported for family {cfg.family}")
+    return lm.verify_paged(cfg, params, tokens, kv_pages, page_table,
+                           cache_len, **kw)
+
+
+def decode_spec_fused(cfg, params, draft_cfg, draft_params, tokens,
+                      kv_caches, draft_kv, cache_len, active, positions,
+                      budget, stop_ids, temperature, top_k, top_p, seeds,
+                      **kw):
+    """Fused speculative decode over dense KV: draft–verify rounds with
+    on-device acceptance (``lm._spec_decode_scan``)."""
+    if not supports_fused(cfg):
+        raise NotImplementedError(
+            f"speculative decode unsupported for target family "
+            f"{cfg.family}")
+    if not supports_spec_draft(draft_cfg):
+        raise NotImplementedError(
+            f"speculative draft unsupported for family {draft_cfg.family}")
+    return lm.decode_spec_fused(cfg, params, draft_cfg, draft_params,
+                                tokens, kv_caches, draft_kv, cache_len,
+                                active, positions, budget, stop_ids,
+                                temperature, top_k, top_p, seeds, **kw)
+
+
+def decode_spec_fused_paged(cfg, params, draft_cfg, draft_params, tokens,
+                            kv_pages, page_table, draft_kv, cache_len,
+                            active, positions, budget, stop_ids,
+                            temperature, top_k, top_p, seeds, **kw):
+    """Fused speculative decode with the target on paged KV."""
+    if not (supports_fused(cfg) and supports_paged(cfg)):
+        raise NotImplementedError(
+            f"speculative paged decode unsupported for target family "
+            f"{cfg.family}")
+    if not supports_spec_draft(draft_cfg):
+        raise NotImplementedError(
+            f"speculative draft unsupported for family {draft_cfg.family}")
+    return lm.decode_spec_fused_paged(cfg, params, draft_cfg,
+                                      draft_params, tokens, kv_pages,
+                                      page_table, draft_kv, cache_len,
+                                      active, positions, budget, stop_ids,
+                                      temperature, top_k, top_p, seeds,
+                                      **kw)
+
+
 # ------------------------------------------------------- paged serving
 def supports_paged(cfg: ModelConfig) -> bool:
     """Families whose decode can run over a paged KV pool.

@@ -29,6 +29,8 @@ from .layers import (apply_rope, cross_entropy, decode_attention, embed,
                      gelu_mlp, rms_norm, rope_cos_sin, suffix_attention,
                      swiglu, unembed)
 from .lora_apply import lora_delta
+from repro.core.sampling import (SPEC_ACCEPT_FOLD, SPEC_DRAFT_FOLD,
+                                 SPEC_RESIDUAL_FOLD)
 from repro.distributed.act_sharding import (constrain_attn_merged,
                                             constrain_btd,
                                             constrain_boundary,
@@ -705,3 +707,364 @@ def prefill_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
     table = (params["embed/tok"].T if cfg.tie_embeddings
              else params["lm_head"])
     return constrain_logits(unembed(h_last, table)[:, 0]), (k_out, v_out)
+
+
+# ---------------------------------------- speculative decoding (draft–verify)
+def verify(cfg: ModelConfig, params: dict, tokens: jax.Array,
+           kv_caches, cache_len: jax.Array, seq_len: jax.Array | None = None,
+           lora=None, adapter_idx=None, lora_backend: str = "einsum"):
+    """Multi-token target forward over the dense KV slab.
+
+    The verify half of speculative decoding: score ``S`` already-chosen
+    tokens per row in one dispatch, returning logits for *every*
+    position (``prefill``/``prefill_paged`` keep only the last). Row
+    ``b``'s tokens sit at absolute positions ``cache_len[b] ..
+    cache_len[b]+S-1``; their K/V is scattered into the slab at those
+    positions (the same per-row-offset scatter ``_attn`` does for S==1)
+    and attention runs offset-causal via ``suffix_attention``, so
+    position j attends exactly the keys the single-step decode path
+    would see — numerics match ``decode_step`` per position.
+
+    tokens: (B, S); kv_caches: (k, v) each (L, B, Smax, Kh, Dh);
+    cache_len: (B,) valid lengths; seq_len: optional (B,) valid token
+    counts (< S positions are right-padding: their K/V writes are
+    dropped and their logits are garbage the caller ignores — used for
+    the draft-KV catch-up path). Returns (logits (B, S, V), kv').
+    """
+    B, S = tokens.shape
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
+    cos, sin = _positions(cfg, tokens.shape, cache_len, None)
+    pos = cache_len[:, None] + jnp.arange(S)[None, :]        # (B, S) abs
+    Smax = kv_caches[0].shape[2]
+    valid = pos < Smax
+    if seq_len is not None:
+        valid = valid & (jnp.arange(S)[None, :] < seq_len[:, None])
+    idx = jnp.where(valid, pos, Smax)                        # OOB → dropped
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    attn_stack = _slice_group(params, "layers/")
+
+    def body(carry, xs):
+        h0 = constrain_boundary(carry)
+        p = xs["p"]
+        lr = xs.get("lora")
+        _, q, k, v = _qkv_proj(cfg, h0, p, cos, sin, lr, adapter_idx,
+                               lora_backend=lora_backend)
+        kc = xs["k"].at[bidx, idx].set(k, mode="drop")
+        vc = xs["v"].at[bidx, idx].set(v, mode="drop")
+        out = suffix_attention(q, kc, vc, pos)
+        out = out.reshape(B, S, cfg.q_dim)
+        h0 = _o_proj(cfg, h0, out, p, lr, adapter_idx,
+                     lora_backend=lora_backend)
+        h0 = constrain_boundary(_mlp(cfg, h0, p))
+        return h0, (kc, vc)
+
+    xs = {"p": attn_stack, "k": kv_caches[0], "v": kv_caches[1]}
+    if lora is not None:
+        xs["lora"] = lora
+    h, (k_out, v_out) = jax.lax.scan(body, x, xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return constrain_logits(unembed(h, table)), (k_out, v_out)
+
+
+def verify_paged(cfg: ModelConfig, params: dict, tokens: jax.Array,
+                 kv_pages, page_table: jax.Array, cache_len: jax.Array,
+                 seq_len: jax.Array | None = None, lora=None,
+                 adapter_idx=None, lora_backend: str = "einsum"):
+    """Multi-token target forward over paged KV — ``verify`` with the
+    ``prefill_paged`` page-table scatter/gather: K/V lands in the
+    request's private pages at positions ``cache_len..cache_len+S-1``
+    (invalid/overflow positions redirect to trash page 0), the whole
+    page list is gathered back and ``suffix_attention`` applies the
+    per-row offset-causal mask. Returns all-position logits
+    (B, S, V) + kv_pages'."""
+    B, S = tokens.shape
+    x = constrain_btd(embed(tokens, params["embed/tok"]))
+    cos, sin = _positions(cfg, tokens.shape, cache_len, None)
+    k_pages, v_pages = kv_pages
+    page = k_pages.shape[2]
+    P = page_table.shape[1]
+    pos = cache_len[:, None] + jnp.arange(S)[None, :]        # (B, S) abs
+    valid = pos < P * page
+    if seq_len is not None:
+        valid = valid & (jnp.arange(S)[None, :] < seq_len[:, None])
+    page_idx = jnp.take_along_axis(page_table,
+                                   jnp.minimum(pos // page, P - 1), axis=1)
+    page_idx = jnp.where(valid, page_idx, 0)                 # pad → trash
+    page_off = pos % page
+    attn_stack = _slice_group(params, "layers/")
+
+    def body(carry, xs):
+        h0 = constrain_boundary(carry)
+        p = xs["p"]
+        lr = xs.get("lora")
+        _, q, k, v = _qkv_proj(cfg, h0, p, cos, sin, lr, adapter_idx,
+                               lora_backend=lora_backend)
+        kp = xs["kp"].at[page_idx, page_off].set(k)
+        vp = xs["vp"].at[page_idx, page_off].set(v)
+        kf = kp[page_table].reshape(B, P * page, cfg.n_kv_heads,
+                                    cfg.head_dim)
+        vf = vp[page_table].reshape(B, P * page, cfg.n_kv_heads,
+                                    cfg.head_dim)
+        out = suffix_attention(q, kf, vf, pos)
+        out = out.reshape(B, S, cfg.q_dim)
+        h0 = _o_proj(cfg, h0, out, p, lr, adapter_idx,
+                     lora_backend=lora_backend)
+        h0 = constrain_boundary(_mlp(cfg, h0, p))
+        return h0, (kp, vp)
+
+    xs = {"p": attn_stack, "kp": k_pages, "vp": v_pages}
+    if lora is not None:
+        xs["lora"] = lora
+    h, (k_out, v_out) = jax.lax.scan(body, x, xs)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    table = (params["embed/tok"].T if cfg.tie_embeddings
+             else params["lm_head"])
+    return constrain_logits(unembed(h, table)), (k_out, v_out)
+
+
+def _spec_keys(seeds, positions, fold: int):
+    """(seed, position, stream) keys — ``sample_tokens``' base key with
+    the spec stream tag folded in. positions (B,) or (B, S)."""
+    def one(s, p):
+        k = jax.random.fold_in(jax.random.PRNGKey(s), p)
+        return jax.random.fold_in(k, fold)
+    if positions.ndim == 1:
+        return jax.vmap(one)(seeds.astype(jnp.uint32),
+                             positions.astype(jnp.uint32))
+    return jax.vmap(jax.vmap(one, in_axes=(None, 0)))(
+        seeds.astype(jnp.uint32), positions.astype(jnp.uint32))
+
+
+def _spec_filtered(logits, temperature, top_k, top_p):
+    """temperature/top-k/top-p masking identical to ``sample_tokens``,
+    plus the renormalized probabilities of the kept set (what the
+    rejection rule needs). logits (..., V); params (...) leading-shaped.
+    Returns (masked scaled logits, filtered probs)."""
+    V = logits.shape[-1]
+    scaled = logits / jnp.maximum(temperature, 1e-6)[..., None]
+    order = jnp.argsort(scaled, axis=-1)[..., ::-1]
+    ranks = jnp.argsort(order, axis=-1)
+    keep_k = ranks < jnp.where(top_k > 0, top_k, V)[..., None]
+    probs = jax.nn.softmax(scaled, axis=-1)
+    sorted_p = jnp.take_along_axis(probs, order, axis=-1)
+    cum = jnp.cumsum(sorted_p, axis=-1)
+    keep_p_sorted = (cum - sorted_p) < top_p[..., None]
+    keep_p = jnp.take_along_axis(keep_p_sorted, ranks, axis=-1)
+    masked = jnp.where(keep_k & keep_p, scaled, -jnp.inf)
+    return masked, jax.nn.softmax(masked, axis=-1)
+
+
+def _draft_propose(logits, temperature, top_k, top_p, seeds, positions):
+    """Draft proposal for one chained draft step: greedy rows take the
+    draft argmax, stochastic rows Gumbel-sample the filtered draft
+    distribution from the SPEC_DRAFT stream. Returns (tokens (B,),
+    filtered draft probs (B, V) — the ``q`` of the rejection rule)."""
+    V = logits.shape[-1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    masked, qprobs = _spec_filtered(logits, temperature, top_k, top_p)
+    keys = _spec_keys(seeds, positions, SPEC_DRAFT_FOLD)
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (V,)))(keys)
+    sampled = jnp.argmax(masked + gumbel, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy), qprobs
+
+
+def _spec_decode_scan(draft_one, verify_multi, tokens, cache_len, active,
+                      positions, kv, draft_kv, budget, stop_ids,
+                      temperature, top_k, top_p, seeds, max_ctx: int,
+                      n_rounds: int, spec_k: int, all_greedy: bool):
+    """Fused draft–verify decode: ``n_rounds`` speculative rounds on
+    device, emitting up to ``spec_k + 1`` tokens per row per round.
+
+    Each round, per row: (1) the draft model runs ``spec_k + 1`` chained
+    single-token steps on its own KV (one past the last proposal so the
+    draft cache holds every accepted token's entry when all drafts
+    land), proposing ``d_1..d_spec_k``; (2) the target scores
+    ``[t0, d_1..d_spec_k]`` in ONE multi-token ``verify`` dispatch,
+    writing target KV for all spec_k+1 positions; (3) the accept mask,
+    correction/bonus token, and per-row cache_len rollback are computed
+    on device — logits never leave the device. Greedy rows accept
+    ``d_j`` iff it equals the target argmax given the accepted prefix,
+    and every emitted token *is* a target argmax, so greedy output is
+    bit-identical to ``_fused_decode_scan``; stochastic rows use
+    rejection sampling (accept w.p. ``min(1, p/q)``, resample the
+    residual ``max(p-q, 0)`` on reject) with every draw keyed on
+    (seed, position) spec streams, so replay/squash re-execution is
+    deterministic and each emitted token is exactly target-distributed.
+
+    Rollback: both caches advance by the per-row emitted count only —
+    entries written past it (rejected drafts) are garbage that the next
+    round's writes at the same positions overwrite before attention can
+    see them (the same argument the non-spec loop makes for done rows).
+    Per-token finish semantics (budget / stop id / context bound) are
+    replayed emission-by-emission inside the round, verbatim from
+    ``_fused_decode_scan``, so a row that finishes mid-round stops
+    emitting at the identical token.
+
+    draft_one: (tokens (B,1), draft_kv, clen) -> (logits (B,V), kv').
+    verify_multi: (tokens (B,S), kv, clen) -> (logits (B,S,V), kv').
+    Returns ((tokens', kv', draft_kv', cache_len', active', positions'),
+             toks (n_rounds*(spec_k+1), B), emits (same), n_acc
+             (n_rounds, B) accepted-draft counts for the meter).
+    """
+    K = spec_k
+    B = tokens.shape[0]
+
+    def round_body(carry, _):
+        tokens, kv, dkv, cache_len, active, positions = carry
+
+        def dstep(dc, j):
+            tok, dkv = dc
+            dlogits, dkv = draft_one(tok, dkv, cache_len + j)
+            if all_greedy:
+                nxt = jnp.argmax(dlogits, axis=-1).astype(jnp.int32)
+                out = (nxt,)
+            else:
+                nxt, qp = _draft_propose(dlogits, temperature, top_k,
+                                         top_p, seeds, positions + j)
+                out = (nxt, qp)
+            return (nxt[:, None], dkv), out
+
+        (_, dkv), douts = jax.lax.scan(dstep, (tokens, dkv),
+                                       jnp.arange(K + 1))
+        d_check = douts[0][:K].T                 # (B, K) = d_1..d_K
+        vt = jnp.concatenate([tokens, d_check], axis=1)      # (B, K+1)
+        vlogits, kv = verify_multi(vt, kv, cache_len)        # (B, K+1, V)
+
+        tgt = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)
+        acc = d_check == tgt[:, :K]              # greedy accept (B, K)
+        if not all_greedy:
+            qprobs = jnp.swapaxes(douts[1][:K], 0, 1)        # (B, K, V)
+            _, pprobs = _spec_filtered(
+                vlogits[:, :K],
+                jnp.broadcast_to(temperature[:, None], (B, K)),
+                jnp.broadcast_to(top_k[:, None], (B, K)),
+                jnp.broadcast_to(top_p[:, None], (B, K)))
+            p_d = jnp.take_along_axis(pprobs, d_check[..., None],
+                                      axis=-1)[..., 0]
+            q_d = jnp.take_along_axis(qprobs, d_check[..., None],
+                                      axis=-1)[..., 0]
+            pos_mat = positions[:, None] + jnp.arange(K)[None, :]
+            u = jax.vmap(jax.vmap(jax.random.uniform))(
+                _spec_keys(seeds, pos_mat, SPEC_ACCEPT_FOLD))
+            # u < min(1, p/q)  ⇔  u*q < p (q > 0 on the proposal support)
+            acc_s = u * jnp.maximum(q_d, 1e-30) < p_d
+            acc = jnp.where((temperature > 0.0)[:, None], acc_s, acc)
+        n_acc = jnp.cumprod(acc.astype(jnp.int32), axis=1).sum(axis=1)
+
+        # Correction (first reject) / bonus (all accepted) token.
+        corr = tgt[jnp.arange(B), n_acc]         # argmax(L_n)
+        if not all_greedy:
+            V = vlogits.shape[-1]
+            resid = jnp.maximum(pprobs - qprobs, 0.0)
+            rsum = resid.sum(axis=-1, keepdims=True)
+            resid = jnp.where(rsum > 0, resid / jnp.maximum(rsum, 1e-30),
+                              pprobs)
+            rg = jax.vmap(jax.vmap(lambda k: jax.random.gumbel(k, (V,))))(
+                _spec_keys(seeds, pos_mat, SPEC_RESIDUAL_FOLD))
+            resid_tok = jnp.argmax(
+                jnp.log(jnp.maximum(resid, 1e-38)) + rg,
+                axis=-1).astype(jnp.int32)       # (B, K)
+            bonus = sample_tokens(vlogits[:, K], temperature, top_k,
+                                  top_p, seeds, positions + K)
+            corr_s = jnp.where(
+                n_acc < K,
+                resid_tok[jnp.arange(B), jnp.minimum(n_acc, K - 1)], bonus)
+            corr = jnp.where(temperature > 0.0, corr_s, corr)
+
+        # Emission slot j holds d_{j+1} while accepted, else the
+        # correction/bonus at slot n_acc (slots past it are masked).
+        jj = jnp.arange(K + 1)[None, :]
+        e = jnp.where(jj < n_acc[:, None],
+                      jnp.pad(d_check, ((0, 0), (0, 1))), corr[:, None])
+
+        # Per-emission finish conditions, verbatim from
+        # _fused_decode_scan's done-mask (budget / stop / context).
+        m = active
+        toks_list, emits_list = [], []
+        for j in range(K + 1):
+            ej = e[:, j]
+            emit_j = m & (jj[0, j] <= n_acc)
+            new_pos = positions + j + 1
+            new_len = cache_len + j + 1
+            hit_stop = (ej[:, None] == stop_ids).any(axis=-1)
+            done_j = emit_j & ((new_pos >= budget) | hit_stop
+                               | (new_len + 1 >= max_ctx - 1))
+            m = m & ~done_j
+            toks_list.append(ej)
+            emits_list.append(emit_j)
+        toks_r = jnp.stack(toks_list)            # (K+1, B)
+        emits_r = jnp.stack(emits_list)          # (K+1, B)
+        cnt = emits_r.astype(jnp.int32).sum(axis=0)
+        new_tok = e[jnp.arange(B), jnp.maximum(cnt - 1, 0)]
+        tokens = jnp.where(cnt > 0, new_tok, tokens[:, 0])[:, None]
+        carry = (tokens, kv, dkv, cache_len + cnt, m, positions + cnt)
+        return carry, (toks_r, emits_r, jnp.where(active, n_acc, 0))
+
+    init = (tokens, kv, draft_kv, cache_len, active, positions)
+    carry, (toks, emits, accs) = jax.lax.scan(round_body, init, None,
+                                              length=n_rounds)
+    # Flatten rounds × emission slots to the step-major (n, B) block
+    # the engine drain walks, like the non-spec scan's output.
+    toks = toks.reshape(n_rounds * (K + 1), B)
+    emits = emits.reshape(n_rounds * (K + 1), B)
+    return carry, toks, emits, accs
+
+
+def decode_spec_fused(cfg: ModelConfig, params: dict,
+                      draft_cfg: ModelConfig, draft_params: dict,
+                      tokens: jax.Array, kv_caches, draft_kv,
+                      cache_len: jax.Array, active: jax.Array,
+                      positions: jax.Array, budget: jax.Array,
+                      stop_ids: jax.Array, temperature: jax.Array,
+                      top_k: jax.Array, top_p: jax.Array,
+                      seeds: jax.Array, *, spec_k: int, n_rounds: int,
+                      all_greedy: bool, max_ctx: int, lora=None,
+                      adapter_idx=None, lora_backend: str = "einsum"):
+    """Speculative fused decode over the dense KV slab: base-weights
+    draft (no LoRA — the adapters ride along at verify time only),
+    multi-token target ``verify``, on-device accept/rollback."""
+
+    def draft_one(tok, dkv, clen):
+        return decode_step(draft_cfg, draft_params, tok, dkv, clen)
+
+    def verify_multi(toks, kv, clen):
+        return verify(cfg, params, toks, kv, clen, lora=lora,
+                      adapter_idx=adapter_idx, lora_backend=lora_backend)
+
+    return _spec_decode_scan(draft_one, verify_multi, tokens, cache_len,
+                             active, positions, kv_caches, draft_kv,
+                             budget, stop_ids, temperature, top_k, top_p,
+                             seeds, max_ctx, n_rounds, spec_k, all_greedy)
+
+
+def decode_spec_fused_paged(cfg: ModelConfig, params: dict,
+                            draft_cfg: ModelConfig, draft_params: dict,
+                            tokens: jax.Array, kv_pages,
+                            page_table: jax.Array, draft_kv,
+                            cache_len: jax.Array, active: jax.Array,
+                            positions: jax.Array, budget: jax.Array,
+                            stop_ids: jax.Array, temperature: jax.Array,
+                            top_k: jax.Array, top_p: jax.Array,
+                            seeds: jax.Array, *, spec_k: int,
+                            n_rounds: int, all_greedy: bool, max_ctx: int,
+                            lora=None, adapter_idx=None,
+                            lora_backend: str = "einsum"):
+    """Speculative fused decode with the target on paged KV (the draft
+    keeps a dense slab — it is small and adapter-free). The engine
+    pre-allocates pages covering every write a round can make
+    (``cache_len + spec_k + 1``) and shrinks back after readback."""
+
+    def draft_one(tok, dkv, clen):
+        return decode_step(draft_cfg, draft_params, tok, dkv, clen)
+
+    def verify_multi(toks, kv, clen):
+        return verify_paged(cfg, params, toks, kv, page_table, clen,
+                            lora=lora, adapter_idx=adapter_idx,
+                            lora_backend=lora_backend)
+
+    return _spec_decode_scan(draft_one, verify_multi, tokens, cache_len,
+                             active, positions, kv_pages, draft_kv,
+                             budget, stop_ids, temperature, top_k, top_p,
+                             seeds, max_ctx, n_rounds, spec_k, all_greedy)

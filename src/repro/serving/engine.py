@@ -93,6 +93,7 @@ from __future__ import annotations
 
 import contextlib
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -210,6 +211,21 @@ class EngineConfig:
     # prefill bit-for-bit. 0 disables (the seed behavior, and the A/B
     # baseline of ``benchmarks/disagg_interference.py``).
     prefill_chunk_tokens: int = 0
+    # Speculative draft–verify decoding (ROADMAP 5) inside the fused
+    # hot loop: a small dense *draft* model (base weights only — the
+    # LoRA adapters ride along at verify time) proposes up to ``spec_k``
+    # tokens per row, the target scores all drafted positions in ONE
+    # multi-token verify dispatch, and the accept mask / bonus token /
+    # per-row cache_len rollback are computed on device — greedy tokens
+    # stay bit-identical to the non-speculative loop; seeded sampling
+    # uses (seed, position)-keyed rejection sampling. ``spec_k`` adapts
+    # down with the measured acceptance EWMA, and the existing backlog /
+    # deadline K=1 demotions turn speculation off for that step. Needs
+    # the fused loop and a dense draft family; anything else warns once
+    # at construction and falls back.
+    spec_decode: bool = False
+    spec_k: int = 4
+    spec_draft: str = "internlm2-1.8b"
 
 
 class AdapterCatalog:
@@ -259,7 +275,8 @@ class ChameleonEngine:
                  ecfg: EngineConfig | None = None,
                  scheduler_cls=ChameleonScheduler, cache_enabled=True,
                  catalog: AdapterCatalog | None = None,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 draft: Optional[tuple] = None):
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg or EngineConfig()
@@ -466,6 +483,12 @@ class ChameleonEngine:
         # (host numpy) is uploaded only when a page was allocated or
         # freed, not per step.
         self.fused = bool(e.fused_hotloop) and api.supports_fused(cfg)
+        if e.fused_hotloop and not self.fused:
+            warnings.warn(
+                f"fused_hotloop=True ignored: model family "
+                f"{cfg.family.name} has no fused decode path "
+                f"(api.supports_fused) — falling back to the per-step "
+                f"seed decode loop", RuntimeWarning, stacklevel=2)
         self.batch_epoch = 0
         self._dev: Optional[dict] = None
         self._dev_epoch = -1
@@ -476,6 +499,23 @@ class ChameleonEngine:
         # the next step boundary — after the *next* horizon was
         # dispatched, when the batch is stable (pipelined readback).
         self._inflight: Optional[tuple] = None
+
+        # --- speculative draft–verify decoding (ROADMAP 5) ---
+        # ``self.spec`` is the *effective* switch: spec_decode=True with
+        # a validated dense draft on a fused single-device engine.
+        # Invalid draft configs raise here (construction), never in jit.
+        self.spec = False
+        self.draft_cfg: Optional[ModelConfig] = None
+        self.draft_params: Optional[dict] = None
+        self.draft_kv = None
+        self.spec_drafted_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.n_spec_dispatches = 0
+        self.n_spec_draft_dispatches = 0
+        self.n_spec_verify_dispatches = 0
+        self._spec_ewma = 1.0     # acceptance EWMA → adaptive spec_k
+        if e.spec_decode:
+            self._init_spec(draft)
 
         self._decode_jit = jax.jit(self._decode_fn)
         self._decode_paged_jit = jax.jit(self._decode_paged_fn)
@@ -497,6 +537,27 @@ class ChameleonEngine:
                                           static_argnames=("S",),
                                           donate_argnums=(3,))
         self._sample_jit = jax.jit(api.sample_tokens)
+        if self.spec:
+            # Speculative round: tokens, target KV, draft KV, cache_len,
+            # active and positions are donated (same in-place invariant
+            # as the fused horizon); spec_k / n_rounds / all_greedy are
+            # static (spec_k is bucketed to powers of two, n_rounds
+            # derives from it, so jit variants stay bounded).
+            self._spec_jit = jax.jit(
+                self._spec_fn,
+                static_argnames=("spec_k", "n_rounds", "all_greedy"),
+                donate_argnums=(2, 3, 4, 5, 6, 7))
+            self._spec_paged_jit = jax.jit(
+                self._spec_paged_fn,
+                static_argnames=("spec_k", "n_rounds", "all_greedy"),
+                donate_argnums=(2, 3, 5, 6, 7, 8))
+            # Draft-KV catch-up: batched multi-token draft forward that
+            # replays tokens the draft cache is missing (placement,
+            # prefix-cache import, chunked prefill, squash re-execution
+            # all leave the draft behind the target; see _draft_sync).
+            self._draft_catchup_jit = jax.jit(
+                self._draft_catchup_fn, static_argnames=("S",),
+                donate_argnums=(2,))
         # Prefill shapes vary per (B, S) admission bucket, so their
         # sharded jits (fitted in/out shardings per bucket) are built
         # lazily; the fixed-shape decode/fused jits above are replaced
@@ -504,6 +565,75 @@ class ChameleonEngine:
         self._sharded_prefill_cache: dict = {}
         if self.plan is not None:
             self._install_sharded_jits()
+
+    # ------------------------------------- speculative decoding setup
+    def _init_spec(self, draft: Optional[tuple]) -> None:
+        """Validate and build the speculative-decoding state.
+
+        ``draft`` is an optional ``(draft_cfg, draft_params)`` pair
+        (tests and benchmarks pass reduced models); None resolves
+        ``EngineConfig.spec_draft`` through the config registry and
+        initialises base weights from the engine seed. Config errors —
+        non-dense draft family, vocab mismatch, bad spec_k — raise
+        here, at engine construction, never inside jit; unsupported
+        *engine* shapes (non-fused target, mesh>1) warn once and leave
+        speculation off."""
+        e = self.ecfg
+        if draft is not None:
+            draft_cfg, draft_params = draft
+        else:
+            from repro.configs import get_config
+            draft_cfg = get_config(e.spec_draft)
+            draft_params = None
+        if not api.supports_spec_draft(draft_cfg):
+            raise ValueError(
+                f"spec_decode=True needs a dense draft model: draft "
+                f"{draft_cfg.name!r} is family {draft_cfg.family.name}, "
+                f"which has no dense-KV decode_step for the speculative "
+                f"scan (api.supports_spec_draft). Pick a Family.DENSE "
+                f"config for EngineConfig.spec_draft (e.g. "
+                f"'internlm2-1.8b') or turn spec_decode off.")
+        if draft_cfg.vocab_size != self.cfg.vocab_size:
+            raise ValueError(
+                f"spec_decode draft {draft_cfg.name!r} has vocab_size="
+                f"{draft_cfg.vocab_size} but the target "
+                f"{self.cfg.name!r} has vocab_size="
+                f"{self.cfg.vocab_size}; draft and target must share a "
+                f"vocabulary for draft tokens to be target-scorable.")
+        if e.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {e.spec_k}")
+        if not self.fused:
+            warnings.warn(
+                f"spec_decode=True ignored: target family "
+                f"{self.cfg.family.name} (or fused_hotloop=False) has "
+                f"no fused decode path to speculate inside — running "
+                f"the non-speculative loop", RuntimeWarning,
+                stacklevel=2)
+            return
+        if self.mesh is not None:
+            warnings.warn(
+                "spec_decode=True ignored on a mesh-sharded engine: "
+                "the speculative jits are not in the sharding rule "
+                "table yet — running the non-speculative fused loop",
+                RuntimeWarning, stacklevel=2)
+            return
+        if draft_params is None:
+            draft_params = api.init_params(
+                draft_cfg, jax.random.PRNGKey(e.seed + 1))
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        # The draft KV is a dense slab outside the paged pool: the
+        # draft is small and adapter-free, so its cache is priced as
+        # part of the (constant) speculation overhead, not as
+        # per-request pool occupancy. "Freeing" a slot's draft KV is
+        # bookkeeping: _draft_len drops to 0 and the slab rows are
+        # rewritten by the next occupant's catch-up.
+        self.draft_kv = api.init_serve_state(
+            draft_cfg, e.max_slots, e.max_len, jnp.float32)
+        # Tokens of the *target* cache the draft cache mirrors, per
+        # slot (host truth — the lazy catch-up syncs the gap).
+        self._draft_len = np.zeros(e.max_slots, np.int64)
+        self.spec = True
 
     # --------------------------------------------- sharded data plane
     def _batch_sh(self, ndim: int):
@@ -801,6 +931,35 @@ class ChameleonEngine:
             lora=lora, adapter_idx=adapter_slot,
             lora_backend=self._lora_backend)
 
+    def _spec_fn(self, params, lora, tokens, kv, draft_kv, cache_len,
+                 active, positions, adapter_slot, budget, stop, temp,
+                 topk, topp, seeds, *, spec_k, n_rounds, all_greedy):
+        return api.decode_spec_fused(
+            self.cfg, params, self.draft_cfg, self.draft_params, tokens,
+            kv, draft_kv, cache_len, active, positions, budget, stop,
+            temp, topk, topp, seeds, spec_k=spec_k, n_rounds=n_rounds,
+            all_greedy=all_greedy, max_ctx=self.ecfg.max_len, lora=lora,
+            adapter_idx=adapter_slot, lora_backend=self._lora_backend)
+
+    def _spec_paged_fn(self, params, lora, tokens, kv_pages, page_table,
+                       draft_kv, cache_len, active, positions,
+                       adapter_slot, budget, stop, temp, topk, topp,
+                       seeds, *, spec_k, n_rounds, all_greedy):
+        return api.decode_spec_fused_paged(
+            self.cfg, params, self.draft_cfg, self.draft_params, tokens,
+            kv_pages, page_table, draft_kv, cache_len, active,
+            positions, budget, stop, temp, topk, topp, seeds,
+            spec_k=spec_k, n_rounds=n_rounds, all_greedy=all_greedy,
+            max_ctx=self.ecfg.max_len, lora=lora,
+            adapter_idx=adapter_slot, lora_backend=self._lora_backend)
+
+    def _draft_catchup_fn(self, draft_params, tokens, draft_kv, start,
+                          seq_len, S):
+        del S
+        _, dkv = api.verify(self.draft_cfg, draft_params, tokens,
+                            draft_kv, start, seq_len=seq_len)
+        return dkv
+
     def _prefill_fn(self, params, lora, tokens, adapter_slot, last_pos,
                     S):
         del S
@@ -909,6 +1068,8 @@ class ChameleonEngine:
         self.active[slot] = False
         self.slot_req[slot] = None
         self.batch_epoch += 1
+        if self.spec:
+            self._draft_len[slot] = 0    # draft KV freed with the slot
         self._stash_progress(req)
         self._free_slot_pages(slot, req.req_id)
         self.sched.on_squash(req, self.now())
@@ -1619,6 +1780,8 @@ class ChameleonEngine:
         self.active[slot] = False
         self.slot_req[slot] = None
         self.batch_epoch += 1
+        if self.spec:
+            self._draft_len[slot] = 0    # draft KV freed with the slot
         tbts = self._tbts.pop(req.req_id, [])
         req.preserved_tbts = tbts    # handle.result() reads these
         self._last_tok.pop(req.req_id, None)
@@ -1918,6 +2081,184 @@ class ChameleonEngine:
                         - (r.input_len + r.generated - 1))
         return cover
 
+    # ------------------------------- speculative draft–verify dispatch
+    def _spec_k_eff(self) -> int:
+        """Adaptive draft length: the acceptance EWMA scales ``spec_k``
+        down when drafts stop landing (each round costs ``kk + 1`` draft
+        steps + one verify regardless of acceptance, so a cold draft
+        should shrink toward kk=1). Bucketed to a power of two so the
+        static-spec_k jit variants stay bounded."""
+        e = self.ecfg
+        kk = int(round(self._spec_ewma * (e.spec_k + 1)))
+        kk = max(1, min(e.spec_k, kk))
+        return 1 << (kk.bit_length() - 1)
+
+    def _draft_sync(self) -> None:
+        """Lazy draft-KV catch-up: replay, through one batched
+        multi-token draft forward, every token the target cache holds
+        that the draft cache does not (per-slot ``_draft_len`` tracks
+        the synced length). Placement, prefix-cache hits, chunked
+        prefill, KV import and squash re-execution all advance the
+        target without touching the draft — this one entry point makes
+        them all spec-compatible without per-path hooks. Token material
+        comes from host truth (prompt + recorded outputs), so the draft
+        prefix is identical across re-executions."""
+        lens = self._host_lens()
+        rows = [int(s) for s in np.where(self.active)[0]
+                if self._draft_len[s] < lens[s]]
+        if not rows:
+            return
+        gap = max(int(lens[s] - self._draft_len[s]) for s in rows)
+        S = 1 << max(3, (gap - 1).bit_length())
+        B = self.ecfg.max_slots
+        toks = np.zeros((B, S), np.int32)
+        start = np.zeros(B, np.int32)
+        seq = np.zeros(B, np.int32)
+        for s in rows:
+            req = self.slot_req[s]
+            full = np.concatenate([
+                self._prompt_tokens(req),
+                np.asarray(self.outputs[req.req_id], np.int32)])
+            lo, hi = int(self._draft_len[s]), int(lens[s])
+            toks[s, :hi - lo] = full[lo:hi]
+            start[s] = lo
+            seq[s] = hi - lo
+        DISPATCH_METER.tick()
+        DISPATCH_METER.tick_draft()
+        self.n_spec_draft_dispatches += 1
+        self.draft_kv = self._draft_catchup_jit(
+            self.draft_params, jnp.asarray(toks), self.draft_kv,
+            jnp.asarray(start), jnp.asarray(seq), S=S)
+        for s in rows:
+            self._draft_len[s] = int(lens[s])
+
+    def _shrink_spec_pages(self) -> None:
+        """Roll back speculative page growth: after the round drained,
+        every surviving slot keeps exactly the pages the seed loop's
+        ``_ensure_decode_pages`` would hold (``len // ps + 1`` — the
+        next write covered), and the rest go back to the free list with
+        the pool hold shrunk to match. Rejected drafts therefore never
+        inflate pool occupancy past one round, so admission headroom
+        and preemption timing stay honest."""
+        ps = self.pool.page_size
+        lens = self._host_lens()
+        for slot in np.where(self.active)[0]:
+            req = self.slot_req[slot]
+            if req is None:
+                continue
+            keep = int(lens[slot]) // ps + 1
+            extra = len(self.slot_pages[slot]) - keep
+            if extra <= 0:
+                continue
+            for _ in range(extra):
+                pid = self.slot_pages[slot].pop()
+                self.page_table[slot, len(self.slot_pages[slot])] = 0
+                self.free_pages.append(pid)
+            self.pool.shrink_request(req.req_id, extra * ps)
+            self._page_table_dirty = True
+
+    def _dispatch_spec(self) -> bool:
+        """One speculative block: draft catch-up, then ``n_rounds``
+        draft–verify rounds in a single fused dispatch, drained
+        synchronously (emission counts are data-dependent, so the
+        pipelined-readback page math cannot cover a speculative block).
+        Returns False — caller falls back to the normal fused horizon —
+        when speculation is not viable this step: nothing to decode, a
+        bypasser's squash point inside the round, no context headroom,
+        or (paged) not even one round of page cover after best-effort
+        growth. Speculation only ever *shrinks* on pressure; it never
+        preempts a slot to grow."""
+        e = self.ecfg
+        reqs = [r for r in self.slot_req if r is not None]
+        if not reqs or max(r.max_output_tokens - r.generated
+                           for r in reqs) < 1:
+            return False
+        kk = self._spec_k_eff()
+        has_bypass = False
+        for r in reqs:
+            # A bypasser squashes on the token exceeding its predicted
+            # length (host-side check): the round must end at or before
+            # that point, exactly like ``_choose_horizon``.
+            if r.bypassed:
+                has_bypass = True
+                kk = min(kk, r.predicted_output - r.generated)
+        lens = self._host_lens()
+        for slot in np.where(self.active)[0]:
+            # Rows at the context edge finish within a step or two —
+            # don't burn drafts past their done-mask.
+            kk = min(kk, e.max_len - 2 - int(lens[slot]))
+        if kk < 1:
+            return False
+        kk = 1 << (kk.bit_length() - 1)
+        n_rounds = 1 if has_bypass else max(1, e.max_horizon // (kk + 1))
+        if self.paged:
+            now = self.now()
+            ps = self.pool.page_size
+            need = n_rounds * (kk + 1)
+            for slot in np.where(self.active)[0]:
+                needed = (int(lens[slot]) + need - 1) // ps + 1
+                short = needed - len(self.slot_pages[slot])
+                if short > 0:
+                    self._grow_slot(int(slot), short, now)  # best effort
+            cover = self._page_cover()
+            while n_rounds > 1 and n_rounds * (kk + 1) > cover:
+                n_rounds -= 1
+            if kk + 1 > cover:
+                kk = cover - 1
+                if kk < 1:
+                    self._shrink_spec_pages()
+                    return False
+                kk = 1 << (kk.bit_length() - 1)
+        self._refresh_device_state()
+        self._draft_sync()
+        d = self._dev
+        self._commit_batch_state()
+        DISPATCH_METER.tick()
+        DISPATCH_METER.tick_draft(n_rounds * (kk + 1))
+        DISPATCH_METER.tick_verify(n_rounds)
+        self.n_spec_dispatches += 1
+        self.n_spec_draft_dispatches += n_rounds * (kk + 1)
+        self.n_spec_verify_dispatches += n_rounds
+        with self._act_scope():
+            if self.paged:
+                if self._page_table_dirty or self._page_table_dev is None:
+                    self._page_table_dev = jnp.asarray(self.page_table)
+                    self._page_table_dirty = False
+                carry, toks, emits, accs = self._spec_paged_jit(
+                    self.params, self.lora, self.tokens, self.kv_pages,
+                    self._page_table_dev, self.draft_kv, self.cache_len,
+                    d["active"], d["positions"], self.adapter_slot,
+                    d["budget"], d["stop"], d["temp"], d["topk"],
+                    d["topp"], d["seeds"], spec_k=kk, n_rounds=n_rounds,
+                    all_greedy=d["all_greedy"])
+                (self.tokens, self.kv_pages, self.draft_kv,
+                 self.cache_len, d["active"], d["positions"]) = carry
+            else:
+                carry, toks, emits, accs = self._spec_jit(
+                    self.params, self.lora, self.tokens, self.kv,
+                    self.draft_kv, self.cache_len, d["active"],
+                    d["positions"], self.adapter_slot, d["budget"],
+                    d["stop"], d["temp"], d["topk"], d["topp"],
+                    d["seeds"], spec_k=kk, n_rounds=n_rounds,
+                    all_greedy=d["all_greedy"])
+                (self.tokens, self.kv, self.draft_kv, self.cache_len,
+                 d["active"], d["positions"]) = carry
+        self._inflight = (toks, emits, n_rounds * (kk + 1),
+                          (accs, kk, n_rounds))
+        self._drain_inflight()
+        # The draft cache advanced in lockstep with the target for
+        # every surviving slot (garbage entries past the accepted
+        # prefix are overwritten before the next read, same as the
+        # target's); finished/squashed slots were cleared by their
+        # terminal hooks.
+        lens = self._host_lens()
+        for slot in range(e.max_slots):
+            if self.active[slot] and self.slot_req[slot] is not None:
+                self._draft_len[slot] = int(lens[slot])
+        if self.paged:
+            self._shrink_spec_pages()
+        return True
+
     def _dispatch_horizon(self, K: int, refresh: bool = True) -> None:
         """Launch one fused K-step horizon and re-point the engine's
         device state at its (asynchronous) outputs. The inputs are
@@ -1976,16 +2317,35 @@ class ChameleonEngine:
         it)."""
         if self._inflight is None:
             return
-        toks, emits, _K = self._inflight
+        toks, emits, _K = self._inflight[:3]
+        spec_meta = self._inflight[3] if len(self._inflight) > 3 else None
         self._inflight = None
         with DISPATCH_METER.sync(), COLLECTIVE_METER.sync() \
                 if self._collective else contextlib.nullcontext():
             toks_h = np.asarray(toks)
             emits_h = np.asarray(emits)
+            accs_h = (np.asarray(spec_meta[0])
+                      if spec_meta is not None else None)
+        if spec_meta is not None:
+            # Speculative block: emissions are per-round prefix-masked
+            # (round r emits its first cnt[b] of kk+1 slots), so a
+            # rejected round leaves empty *interior* steps — count the
+            # round-start rows (step 0 of each round is emitted by
+            # every row active then) for drafted/accepted accounting.
+            _, kk, n_rounds = spec_meta
+            round_act = emits_h.reshape(n_rounds, kk + 1, -1)[:, 0, :]
+            drafted = int(round_act.sum()) * kk
+            self.spec_drafted_tokens += drafted
+            self.spec_accepted_tokens += int(accs_h.sum())
+            if drafted:
+                self._spec_ewma = (0.8 * self._spec_ewma
+                                   + 0.2 * int(accs_h.sum()) / drafted)
         now = self.now()
         for k in range(toks_h.shape[0]):
             em = emits_h[k]
             if not em.any():
+                if spec_meta is not None:
+                    continue    # interior rejection gap, later rounds
                 break               # every row finished earlier in the scan
             self.batch_occupancy.append(int(em.sum()))
             to_finish, to_squash = [], []
@@ -2090,6 +2450,12 @@ class ChameleonEngine:
             self._idle_wait()
             return
         K = self._choose_horizon()
+        if self.spec and K > 1 and self._dispatch_spec():
+            # Speculative block dispatched and drained (the K=1
+            # demotions — backlog, armed sweeps, loads — reach here as
+            # K == 1 and keep speculation off for the step, exactly
+            # like the horizon collapse).
+            return
         if self.paged and K > 1:
             # Clamp to allocated pages (cover >= 1: the _ensure pass
             # grew or preempted) — allocation timing stays seed-equal.
@@ -2137,6 +2503,14 @@ class ChameleonEngine:
         self.n_kv_exports = 0
         self.n_kv_imports = 0
         self.kv_handoff_bytes = 0
+        # Speculation accounting restarts; the acceptance EWMA stays
+        # warm (like cache residency) so the measured run speculates at
+        # the adapted spec_k, not the optimistic cold start.
+        self.spec_drafted_tokens = 0
+        self.spec_accepted_tokens = 0
+        self.n_spec_dispatches = 0
+        self.n_spec_draft_dispatches = 0
+        self.n_spec_verify_dispatches = 0
         # Prefix-cache hit accounting restarts; the cached pages stay
         # resident (warm prefixes, like warm adapters).
         self.prefix_hit_tokens = 0
@@ -2195,6 +2569,31 @@ class ChameleonEngine:
             "cow_forks": self.n_cow_forks,
         }
 
+    def spec_stats(self) -> dict:
+        """Speculative-decoding gauges (empty dict when spec is off).
+
+        Acceptance is drafted-token yield: ``spec_accepted_tokens``
+        counts draft proposals verified equal/accepted by the target,
+        over ``spec_drafted_tokens`` proposed (``spec_k_eff`` per row
+        per round). Emitted tokens run higher than accepted — every
+        round also emits its correction/bonus token. The per-phase
+        dispatch counters split DISPATCH_METER-style device work into
+        draft forwards (chained proposal steps + catch-up replays) and
+        multi-token target verifies."""
+        if not self.spec:
+            return {}
+        return {
+            "spec_accept_rate": round(
+                self.spec_accepted_tokens
+                / max(1, self.spec_drafted_tokens), 4),
+            "spec_drafted_tokens": self.spec_drafted_tokens,
+            "spec_accepted_tokens": self.spec_accepted_tokens,
+            "spec_draft_dispatches": self.n_spec_draft_dispatches,
+            "spec_verify_dispatches": self.n_spec_verify_dispatches,
+            "spec_dispatches": self.n_spec_dispatches,
+            "spec_k_eff": self._spec_k_eff(),
+        }
+
     def shard_stats(self) -> dict:
         """Per-device data-plane gauges (empty dict off-mesh): physical
         page occupancy per data shard, resident LoRA-arena bytes per
@@ -2249,6 +2648,7 @@ class ChameleonEngine:
             **self.kv_page_stats(),
             **self.handoff_stats(),
             **self.prefix_stats(),
+            **self.spec_stats(),
             **self.shard_stats(),
         }
 
@@ -2281,6 +2681,7 @@ class ChameleonEngine:
             **self.kv_page_stats(),
             **self.handoff_stats(),
             **self.prefix_stats(),
+            **self.spec_stats(),
             **self.shard_stats(),
         }
         return m

@@ -80,6 +80,14 @@ GAUGES: dict = {
     "handoff_wait_s": ("seconds", "mean export->import handoff latency"),
     "handoffs_inflight": ("requests", "shipments on the modeled link now"),
     "handoffs_dropped": ("count", "shipments cancelled/expired in flight"),
+    # Speculative draft–verify decoding (engine, spec_decode=True).
+    "spec_accept_rate": ("ratio", "draft tokens accepted by the target"),
+    "spec_drafted_tokens": ("tokens", "draft tokens proposed"),
+    "spec_accepted_tokens": ("tokens", "draft tokens verified accepted"),
+    "spec_draft_dispatches": ("count", "draft-model forward passes"),
+    "spec_verify_dispatches": ("count", "multi-token target verifies"),
+    "spec_dispatches": ("count", "fused speculative blocks launched"),
+    "spec_k_eff": ("tokens", "current EWMA-adapted draft length"),
     # Gateway (serving/gateway.py).
     "gw_submitted": ("count", "requests submitted through the gateway"),
     "gw_admitted": ("count", "requests admitted (incl. degraded)"),
@@ -215,7 +223,8 @@ def merge_metrics(per_node: list[RunMetrics],
     ratio_gauges = ("link_busy_frac", "pressure", "kv_page_util",
                     "batch_occupancy_mean", "prefix_hit_rate",
                     "collective_frac", "gw_reject_rate",
-                    "gw_degrade_rate", "gw_queue_wait_est_s")
+                    "gw_degrade_rate", "gw_queue_wait_est_s",
+                    "spec_accept_rate", "spec_k_eff")
     merged = RunMetrics(
         n_submitted=(n_submitted if n_submitted is not None
                      else sum(m.n_submitted for m in per_node)))

@@ -1,0 +1,392 @@
+"""Speculative draft-verify decoding: whole-engine parity + accounting.
+
+Speculation (DESIGN §2) changes *how many* dispatches produce the
+tokens — a small dense draft proposes ``spec_k`` tokens per row, one
+multi-token target verify scores them all, acceptance/bonus/rollback
+stay on device — but must never change *which* tokens greedy decoding
+produces. This suite A/Bs spec against non-spec across paged/dense,
+checks the rejection-sampling math against the pure-Python oracle,
+exercises mid-burst squash/cancel/deadline, page-accounting honesty
+through speculative grow/shrink cycles, draft-KV bookkeeping, the
+construction-time config errors, the fallback warnings, and the
+exported gauges.
+"""
+import warnings as _warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Request, RequestState, SamplingParams
+from repro.core.sampling import spec_residual_reference
+from repro.models import api
+from repro.serving.engine import (AdapterCatalog, ChameleonEngine,
+                                  EngineConfig)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("chameleon-llama-7b").reduced()
+    params = api.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def draft_model(small_model):
+    """An honest *separate* dense draft: different arch, different
+    weights, same vocabulary. Its proposals mostly disagree with the
+    target, so these runs exercise the rejection/rollback path."""
+    cfg, _ = small_model
+    dcfg = get_config("internlm2-1.8b").reduced(
+        n_layers=2, vocab_size=cfg.vocab_size)
+    dparams = api.init_params(dcfg, jax.random.PRNGKey(7), jnp.float32)
+    return dcfg, dparams
+
+
+def zeroed_catalog(cfg, n_adapters=8, r_max=32):
+    """LoRA adapters whose delta is exactly zero: the base-weights-only
+    draft then sees the same logits path as the target, which makes a
+    *self*-draft agree everywhere (acceptance 1.0)."""
+    cat = AdapterCatalog(cfg, n_adapters, r_max, seed=0)
+    for aid in cat.weights:
+        cat.weights[aid] = {
+            k: (jnp.zeros_like(a), jnp.zeros_like(b))
+            for k, (a, b) in cat.weights[aid].items()}
+    return cat
+
+
+BASE = dict(max_slots=4, max_len=128, n_lora_slots=4, n_adapters=8,
+            seed=0)
+
+
+def make_engine(small_model, *, spec, draft=None, catalog=None, **kw):
+    cfg, params = small_model
+    return ChameleonEngine(
+        cfg, params,
+        EngineConfig(**{**BASE, **kw, "spec_decode": spec}),
+        catalog=catalog, draft=draft)
+
+
+def run_to_completion(eng, specs, sampling=None, max_steps=20_000):
+    reqs = [Request(input_len=i, output_len=o, adapter_id=a)
+            for i, o, a in specs]
+    handles = [eng.submit(r, sampling=sampling) for r in reqs]
+    steps = 0
+    while eng.busy() and steps < max_steps:
+        eng.step()
+        eng.pool.check_invariants()
+        steps += 1
+    assert not eng.busy(), "engine failed to drain"
+    return reqs, handles
+
+
+def fixed_trace(n=10, seed=3, adapters=8):
+    rng = np.random.default_rng(seed)
+    return [(int(rng.integers(4, 30)), int(rng.integers(2, 40)),
+             int(rng.integers(0, adapters))) for _ in range(n)]
+
+
+class TestSpecGreedyParity:
+    @pytest.mark.parametrize("paged", (False, True))
+    def test_greedy_token_parity_disagreeing_draft(
+            self, small_model, draft_model, paged):
+        """Worst case: a draft that almost always disagrees with the
+        target. Every round rejects early, rollback runs constantly —
+        and the emitted tokens must still be bit-identical to the
+        non-speculative fused loop."""
+        specs = fixed_trace()
+        outs = {}
+        for spec in (False, True):
+            eng = make_engine(small_model, spec=spec, paged=paged,
+                              draft=draft_model if spec else None)
+            reqs, handles = run_to_completion(eng, specs)
+            assert eng.stats()["completed"] == len(specs)
+            outs[spec] = [h.tokens for h in handles]
+            if spec:
+                st = eng.spec_stats()
+                assert st["spec_drafted_tokens"] > 0
+                assert st["spec_verify_dispatches"] > 0
+        assert outs[True] == outs[False], (
+            "speculative decode changed greedy tokens")
+
+    @pytest.mark.parametrize("paged", (False, True))
+    def test_greedy_full_acceptance_self_draft(self, small_model, paged):
+        """Best case: target drafting for itself with zeroed LoRA
+        deltas — verify must accept every proposal (acceptance 1.0),
+        tokens still identical to non-spec."""
+        cfg, params = small_model
+        specs = fixed_trace(n=4, seed=9)
+        outs = {}
+        for spec in (False, True):
+            eng = make_engine(small_model, spec=spec, paged=paged,
+                              catalog=zeroed_catalog(cfg),
+                              draft=(cfg, params) if spec else None)
+            _, handles = run_to_completion(eng, specs)
+            outs[spec] = [h.tokens for h in handles]
+            if spec:
+                st = eng.spec_stats()
+                assert st["spec_accept_rate"] == 1.0, st
+                assert st["spec_accepted_tokens"] == \
+                    st["spec_drafted_tokens"] > 0
+        assert outs[True] == outs[False]
+
+
+class TestSpecSampling:
+    def test_sampled_deterministic_and_layout_invariant(
+            self, small_model, draft_model):
+        """Seeded sampling through the rejection sampler is keyed on
+        (seed, position): the same engine run twice emits the same
+        tokens, and dense vs paged KV layouts agree."""
+        sp = SamplingParams(temperature=0.8, top_k=12, top_p=0.9,
+                            seed=1234)
+        specs = fixed_trace(n=6, seed=5)
+        outs = {}
+        for tag, paged in (("paged_a", True), ("paged_b", True),
+                           ("dense", False)):
+            eng = make_engine(small_model, spec=True, paged=paged,
+                              draft=draft_model)
+            _, handles = run_to_completion(eng, specs, sampling=sp)
+            outs[tag] = [h.tokens for h in handles]
+        assert outs["paged_a"] == outs["paged_b"], (
+            "seeded speculative sampling is not deterministic")
+        assert outs["paged_a"] == outs["dense"], (
+            "KV layout changed speculative sampled tokens")
+
+    def test_mixed_greedy_and_sampled_batch(self, small_model,
+                                            draft_model):
+        """Greedy and seeded-sampled rows co-batched in one spec run:
+        the greedy rows must match the non-spec greedy run exactly
+        (their acceptance is pure argmax; the sampled rows' streams
+        must not perturb them)."""
+        sp = SamplingParams(temperature=0.9, top_k=20, seed=77)
+        plans = [(8, 12, 0, None), (6, 15, 1, sp),
+                 (10, 10, 2, None), (5, 20, 3, sp)]
+        outs = {}
+        for spec in (False, True):
+            eng = make_engine(small_model, spec=spec,
+                              draft=draft_model if spec else None,
+                              paged=True)
+            handles = [eng.submit(Request(input_len=i, output_len=o,
+                                          adapter_id=a), sampling=s)
+                       for i, o, a, s in plans]
+            eng.drain()
+            outs[spec] = [h.tokens for h in handles]
+        greedy_rows = [j for j, p in enumerate(plans) if p[3] is None]
+        for j in greedy_rows:
+            assert outs[True][j] == outs[False][j], (
+                f"greedy row {j} diverged in a mixed batch")
+
+    def test_rejection_rule_preserves_target_distribution(self):
+        """The distribution-preservation identity behind rejection
+        sampling: emitting draft ``d ~ q`` with prob ``min(1, p/q)``
+        and otherwise resampling from the residual yields exactly
+        ``p``. Checked numerically against the pure-Python oracle the
+        device rule mirrors."""
+        rng = np.random.default_rng(0)
+        for _ in range(50):
+            v = int(rng.integers(2, 12))
+            p = rng.dirichlet(np.ones(v))
+            q = rng.dirichlet(np.ones(v))
+            res = np.asarray(spec_residual_reference(list(p), list(q)))
+            accept = np.minimum(1.0, p / np.maximum(q, 1e-30))
+            reject_mass = float(np.sum(q * (1.0 - accept)))
+            emitted = q * accept + reject_mass * res
+            np.testing.assert_allclose(emitted, p, atol=1e-12)
+        # Degenerate p == q: zero residual mass falls back to p.
+        p = rng.dirichlet(np.ones(8))
+        np.testing.assert_allclose(
+            spec_residual_reference(list(p), list(p)), p, atol=1e-12)
+
+
+class TestSpecLifecycle:
+    def test_mid_stream_squash_parity(self, small_model, draft_model):
+        """Page preemption mid-spec-burst: grow-for-speculation pages
+        must be reclaimable, the squash must preserve the streamed
+        prefix, and the continuation must land on exactly the non-spec
+        tokens."""
+        spec = dict(input_len=8, output_len=40, adapter_id=0)
+        ref_eng = make_engine(small_model, spec=False)
+        ref = ref_eng.submit(Request(**spec)).result().tokens
+
+        eng = make_engine(small_model, spec=True, draft=draft_model)
+        h = eng.submit(Request(**spec))
+        it = h.stream()
+        for _ in range(4):
+            next(it)
+        prefix = list(h.tokens)
+        stolen, eng.free_pages = eng.free_pages, []
+        for _ in range(30):
+            eng.step()
+            if eng.n_preempted:
+                break
+        assert eng.n_preempted >= 1, "steal must force a preemption"
+        assert h.tokens[:len(prefix)] == prefix, "stream rewound"
+        eng.free_pages = stolen
+        eng.drain()
+        assert h.state is RequestState.FINISHED
+        assert h.tokens == ref, "squash continuation diverged"
+        assert h.req.squash_count >= 1
+
+    def test_cancel_during_spec_burst(self, small_model, draft_model):
+        eng = make_engine(small_model, spec=True, draft=draft_model)
+        h = eng.submit(Request(input_len=8, output_len=100,
+                               adapter_id=0))
+        next(h.stream())
+        n_at_cancel = len(h.tokens)
+        assert h.cancel()
+        eng.drain()
+        assert h.state is RequestState.CANCELLED
+        assert len(h.tokens) == n_at_cancel, (
+            "post-cancel tokens leaked to the handle")
+        eng.pool.check_invariants()
+        assert eng.pool.used_requests == 0
+
+    def test_deadline_expiry_during_spec(self, small_model,
+                                         draft_model):
+        """A ttl passing mid-decode under a virtual clock must expire
+        the request cleanly — slot, pages and draft bookkeeping all
+        released."""
+        cfg, params = small_model
+        vnow = [0.0]
+        eng = ChameleonEngine(
+            cfg, params,
+            EngineConfig(**BASE, spec_decode=True),
+            draft=draft_model, clock=lambda: vnow[0])
+        h = eng.submit(Request(input_len=8, output_len=5000,
+                               adapter_id=0), ttl=10.0)
+        for _ in range(6):      # place + a few speculative bursts
+            eng.step()
+        vnow[0] = 1e9
+        eng.drain()
+        assert h.state is RequestState.EXPIRED
+        eng.pool.check_invariants(free_page_ids=eng.free_pages)
+        assert eng.pool.used_requests == 0
+        assert int(np.sum(eng._draft_len)) == 0
+
+    def test_page_accounting_holds_every_spec_step(self, small_model,
+                                                   draft_model):
+        """Pool invariants and the private/shared page arithmetic hold
+        at every step boundary through speculative grow/shrink cycles:
+        pages grown for a burst are popped back after the drain, so no
+        step ends with phantom occupancy."""
+        eng = make_engine(small_model, spec=True, paged=True,
+                          draft=draft_model)
+        reqs = [Request(input_len=i, output_len=o, adapter_id=a)
+                for i, o, a in fixed_trace(8, seed=7)]
+        for r in reqs:
+            eng.submit(r)
+        ps = eng.pool.page_size
+        total = eng.n_pages - 1
+        steps = 0
+        while eng.busy() and steps < 10_000:
+            eng.step()
+            eng.pool.check_invariants(free_page_ids=eng.free_pages)
+            shared = set(eng.pool.shared_page_ids())
+            priv = sum(1 for plist in eng.slot_pages
+                       for p in plist if p not in shared)
+            assert eng.pool.used_requests == priv * ps
+            assert len(eng.free_pages) + priv + len(shared) == total
+            steps += 1
+        assert eng.stats()["completed"] == len(reqs)
+
+    def test_draft_kv_freed_on_finish(self, small_model, draft_model):
+        """The draft-cache mirror is per-slot bookkeeping: a finished
+        slot's ``_draft_len`` must drop to 0 so the next occupant
+        re-syncs from scratch instead of reading a stale mirror."""
+        eng = make_engine(small_model, spec=True, draft=draft_model)
+        run_to_completion(eng, fixed_trace(n=6, seed=11))
+        assert int(np.sum(eng._draft_len)) == 0, (
+            f"stale draft-KV mirror after drain: {eng._draft_len}")
+
+
+class TestSpecConfigErrors:
+    def test_non_dense_draft_raises_at_construction(self, small_model):
+        """Satellite: asking a hybrid (SSM+attention) model to draft
+        must fail loudly at engine construction, naming the family and
+        the capability gate — never inside jit."""
+        zcfg = get_config("zamba2-1.2b").reduced()
+        with pytest.raises(ValueError) as ei:
+            make_engine(small_model, spec=True, draft=(zcfg, {}))
+        msg = str(ei.value)
+        assert "zamba2" in msg and zcfg.family.name in msg
+        assert "supports_spec_draft" in msg
+        assert "internlm2-1.8b" in msg      # actionable suggestion
+
+    def test_non_dense_draft_by_name_raises(self, small_model):
+        with pytest.raises(ValueError, match="dense draft"):
+            make_engine(small_model, spec=True,
+                        spec_draft="zamba2-1.2b")
+
+    def test_vocab_mismatch_raises(self, small_model, draft_model):
+        dcfg, dparams = draft_model
+        bad = dcfg.reduced(n_layers=2, vocab_size=dcfg.vocab_size // 2)
+        with pytest.raises(ValueError, match="vocab_size"):
+            make_engine(small_model, spec=True, draft=(bad, {}))
+
+    def test_bad_spec_k_raises(self, small_model, draft_model):
+        with pytest.raises(ValueError, match="spec_k"):
+            make_engine(small_model, spec=True, draft=draft_model,
+                        spec_k=0)
+
+    def test_nonfused_engine_warns_and_runs_nonspec(self, small_model,
+                                                    draft_model):
+        """spec inside the *seed* two-dispatch loop is unsupported:
+        construction warns once and the engine decodes exactly like a
+        plain non-fused engine."""
+        with pytest.warns(RuntimeWarning, match="spec_decode"):
+            eng = make_engine(small_model, spec=True, draft=draft_model,
+                              fused_hotloop=False)
+        assert not eng.spec
+        _, handles = run_to_completion(eng, fixed_trace(n=3, seed=2))
+        ref = make_engine(small_model, spec=False, fused_hotloop=False)
+        _, ref_handles = run_to_completion(ref, fixed_trace(n=3, seed=2))
+        assert [h.tokens for h in handles] == \
+            [h.tokens for h in ref_handles]
+
+    def test_unsupported_family_fused_warning_names_path(self):
+        """Satellite: fused_hotloop=True on a family with no fused
+        decode path (hybrid SSM) warns once at construction, naming
+        the family and the capability gate, and leaves the engine on
+        the seed loop."""
+        cfg = get_config("zamba2-1.2b").reduced()
+        assert not api.supports_fused(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(0),
+                                 jnp.float32)
+        with _warnings.catch_warnings(record=True) as w:
+            _warnings.simplefilter("always")
+            eng = ChameleonEngine(cfg, params, EngineConfig(
+                max_slots=2, max_len=64, n_lora_slots=2, n_adapters=2,
+                seed=0, fused_hotloop=True))
+        fused_w = [x for x in w
+                   if "fused_hotloop=True ignored" in str(x.message)]
+        assert len(fused_w) == 1
+        msg = str(fused_w[0].message)
+        assert cfg.family.name in msg and "supports_fused" in msg
+        assert not eng.fused
+
+
+class TestSpecMetrics:
+    def test_gauges_emitted_and_reset(self, small_model, draft_model):
+        eng = make_engine(small_model, spec=True, draft=draft_model)
+        run_to_completion(eng, fixed_trace(n=3, seed=4))
+        st = eng.stats()
+        for g in ("spec_accept_rate", "spec_drafted_tokens",
+                  "spec_accepted_tokens", "spec_draft_dispatches",
+                  "spec_verify_dispatches", "spec_dispatches",
+                  "spec_k_eff"):
+            assert g in st, f"{g} missing from stats()"
+        assert st["spec_drafted_tokens"] > 0
+        assert 0.0 <= st["spec_accept_rate"] <= 1.0
+        m = eng.metrics().sched_stats
+        assert m["spec_drafted_tokens"] == st["spec_drafted_tokens"]
+        eng.reset_stats()
+        st2 = eng.spec_stats()
+        assert st2["spec_drafted_tokens"] == 0
+        assert st2["spec_draft_dispatches"] == 0
+
+    def test_spec_off_emits_no_gauges(self, small_model):
+        eng = make_engine(small_model, spec=False)
+        assert eng.spec_stats() == {}
+        assert "spec_accept_rate" not in eng.stats()
